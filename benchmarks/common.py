@@ -1,0 +1,101 @@
+"""Shared benchmark substrate: a small *trained* model + calibration data.
+
+The paper's tables quantize pretrained OPT/BLOOM/Falcon checkpoints; offline
+we train a small decoder on the synthetic Markov corpus (data/pipeline.py)
+until it is meaningfully better than chance, then PTQ it.  Orderings
+(QuantEase ≤ GPTQ ≤ AWQ/RTN; outlier-aware ≤ plain; 2-bit needs outliers)
+are the reproduction targets — absolute OPT perplexities need the real
+checkpoints (DESIGN.md §7).
+
+The trained checkpoint is cached under /tmp keyed by config, so the ~10
+benchmark entry points share one training run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import BlockDef, ModelConfig
+from repro.data.pipeline import DataConfig, make_batch_fn
+from repro.dist import checkpoint as ckpt
+from repro.models import init_params, make_plan, train_loss
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+BENCH_CFG = ModelConfig(
+    name="bench_opt_s",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=32,
+    d_ff=384,
+    vocab=256,
+    pattern=(BlockDef(kind="attn", mlp="dense"),),
+    n_periods=4,
+    max_seq=512,
+)
+
+_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "240"))
+_BATCH, _SEQ = 16, 96
+
+
+def _cache_dir(cfg: ModelConfig) -> str:
+    key = hashlib.md5(
+        f"{cfg.name}-{cfg.d_model}-{cfg.n_periods}-{cfg.vocab}-{_STEPS}".encode()
+    ).hexdigest()[:10]
+    return f"/tmp/repro_bench_{key}"
+
+
+def trained_model(cfg: ModelConfig = BENCH_CFG):
+    """Returns (plan, params, batch_fn, corpus)."""
+    plan = make_plan(cfg, 1)
+    tcfg = TrainerConfig(
+        steps=_STEPS, batch=_BATCH, seq=_SEQ, ckpt_every=_STEPS,
+        ckpt_dir=_cache_dir(cfg), log_every=max(_STEPS // 4, 1),
+    )
+    trainer = Trainer(cfg, AdamWConfig(lr=2e-3, total_steps=_STEPS), tcfg)
+    if ckpt.latest_step(tcfg.ckpt_dir) != _STEPS:
+        trainer.run()
+        trainer.save(_STEPS)
+    else:
+        trainer.restore()
+    return plan, trainer.params, trainer.batch_fn, trainer.corpus
+
+
+def perplexity(plan, params, batch_fn, n_batches: int = 4, offset: int = 10_000):
+    """eval ppl on held-out steps (different seed-stream region)."""
+    losses = []
+    for i in range(n_batches):
+        b = {k: jnp.asarray(v) for k, v in batch_fn(offset + i).items()}
+        losses.append(float(train_loss(plan, params, b)))
+    return float(np.exp(np.mean(losses)))
+
+
+def calib_batches(batch_fn, n: int = 4, offset: int = 20_000):
+    return [
+        {k: jnp.asarray(v) for k, v in batch_fn(offset + i).items()} for i in range(n)
+    ]
+
+
+class Csv:
+    """Collect `name,us_per_call,derived` rows (the benchmarks/run.py contract)."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us: float = 0.0, **derived):
+        d = ";".join(f"{k}={v}" for k, v in derived.items())
+        self.rows.append(f"{name},{us:.1f},{d}")
+
+    def print(self):
+        print("name,us_per_call,derived")
+        for r in self.rows:
+            print(r)

@@ -1,0 +1,31 @@
+"""Fig. 3 — effect of the number of QuantEase iterations on perplexity.
+
+Paper claim: more iterations lower perplexity, with diminishing returns;
+the 4-bit curve is flatter than the 3-bit curve; ~25 iterations is the
+accuracy/runtime sweet spot.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv, calib_batches, perplexity, trained_model
+from repro.core.solver import PTQConfig, ptq_quantize_model
+from repro.quant import GridSpec
+
+
+def run(csv: Csv):
+    plan, params, batch_fn, _ = trained_model()
+    calib = calib_batches(batch_fn)
+    for bits in (3, 4):
+        for iters in (1, 5, 10, 25):
+            qp, rep = ptq_quantize_model(
+                plan, params, calib,
+                PTQConfig(method="quantease", spec=GridSpec(bits=bits), iterations=iters),
+            )
+            ppl = perplexity(plan, qp, batch_fn)
+            csv.add(f"fig3_bits{bits}_iters{iters}", ppl=round(ppl, 4))
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.print()

@@ -1,0 +1,125 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dryrun_results JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir benchmarks/dryrun_results]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "stablelm_12b", "gemma2_27b", "qwen15_32b", "phi3_mini_3_8b",
+    "whisper_large_v3", "jamba_1_5_large", "olmoe_1b_7b", "mixtral_8x22b",
+    "mamba2_2_7b", "llava_next_34b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath):
+    out = {}
+    for f in glob.glob(os.path.join(dirpath, "*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}µs"
+
+
+def roofline_table(cells, mesh_name):
+    lines = [
+        f"### Roofline — {mesh_name} mesh",
+        "",
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "peakHBM/dev | MODEL_FLOPS ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                lines.append(f"| {arch} | {shape} | — | — | — | skip | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | FAIL | | | | | | |")
+                continue
+            rf = r["roofline"]
+            dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            # roofline fraction: ideal compute time (MODEL_FLOPS) over the
+            # dominant term — "how close does the step run to the pure
+            # model-math roofline".
+            ideal = rf["model_flops"] / (197e12 * r["devices"])
+            frac = ideal / dom if dom > 0 else 0.0
+            lines.append(
+                "| {a} | {s} | {c} | {m} | {x} | **{b}** | {h:.1f} GB | {r:.2f} | {f:.1%} |".format(
+                    a=arch, s=shape,
+                    c=fmt_s(rf["compute_s"]), m=fmt_s(rf["memory_s"]),
+                    x=fmt_s(rf["collective_s"]), b=rf["bottleneck"],
+                    h=rf["memory_stats"]["peak_hbm_est"] / 1e9,
+                    r=rf["model_flops_ratio"], f=frac,
+                )
+            )
+    return "\n".join(lines)
+
+
+def dryrun_table(cells, mesh_name):
+    lines = [
+        f"### Dry-run — {mesh_name} mesh",
+        "",
+        "| arch | shape | status | devices | compile | flops/dev | bytes/dev | "
+        "coll.link bytes/dev | AG/AR/RS/A2A/CP counts | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                note = r.get("reason", r.get("error", ""))[:60]
+                lines.append(
+                    f"| {arch} | {shape} | {r['status']} | | | | | | | {note} |"
+                )
+                continue
+            rf = r["roofline"]
+            cd = rf["coll_detail"]["counts"]
+            counts = "/".join(
+                str(cd[k]) for k in
+                ["all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                 "collective-permute"]
+            )
+            lines.append(
+                "| {a} | {s} | ok | {d} | {t:.0f}s | {f:.2e} | {b:.2e} | {c:.2e} | {n} | {note} |".format(
+                    a=arch, s=shape, d=r["devices"], t=r["compile_s"],
+                    f=rf["flops_per_device"], b=rf["bytes_per_device"],
+                    c=rf["collective_link_bytes"], n=counts, note=r.get("note", ""),
+                )
+            )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/dryrun_results")
+    args = ap.parse_args()
+    for mesh in ("single", "multi"):
+        cells = load(os.path.join(args.dir, mesh))
+        if not cells:
+            continue
+        print(dryrun_table(cells, mesh))
+        print()
+        print(roofline_table(cells, mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

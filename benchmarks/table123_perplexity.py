@@ -1,0 +1,33 @@
+"""Tables 1–3 — perplexity after 3/4-bit quantization, method comparison.
+
+Paper claim (OPT/BLOOM/Falcon → our synthetic-corpus model): QuantEase ≤
+GPTQ ≤ AWQ ≪ RTN at 3 bits; all methods ≈ full precision at 4 bits.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv, calib_batches, perplexity, trained_model
+from repro.core.solver import PTQConfig, ptq_quantize_model
+from repro.quant import GridSpec
+
+
+def run(csv: Csv):
+    plan, params, batch_fn, corpus = trained_model()
+    calib = calib_batches(batch_fn)
+    full = perplexity(plan, params, batch_fn)
+    csv.add("table1_full", ppl=round(full, 4), entropy_floor_ppl=round(
+        float(__import__("numpy").exp(corpus.entropy_floor())), 3))
+    for bits in (4, 3):
+        for method in ("rtn", "awq", "gptq", "quantease"):
+            qp, _ = ptq_quantize_model(
+                plan, params, calib,
+                PTQConfig(method=method, spec=GridSpec(bits=bits), iterations=20),
+            )
+            ppl = perplexity(plan, qp, batch_fn)
+            csv.add(f"table1_{bits}bit_{method}", ppl=round(ppl, 4))
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.print()

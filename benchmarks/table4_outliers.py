@@ -1,0 +1,34 @@
+"""Table 4 — outlier-aware 3-bit quantization.
+
+Paper claim: QuantEase 0.5% outliers < SpQR 1% < plain QuantEase (ppl);
+1% does even better; structured (column) outliers sit between plain and
+unstructured.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv, calib_batches, perplexity, trained_model
+from repro.core.solver import PTQConfig, ptq_quantize_model
+from repro.quant import GridSpec
+
+
+def run(csv: Csv):
+    plan, params, batch_fn, _ = trained_model()
+    calib = calib_batches(batch_fn)
+    spec = GridSpec(bits=3)
+    runs = [
+        ("plain", PTQConfig(method="quantease", spec=spec, iterations=20)),
+        ("spqr_1pct", PTQConfig(method="spqr", spec=spec, outlier_frac=0.01)),
+        ("qe_outlier_0.5pct", PTQConfig(method="qe_outlier", spec=spec, iterations=20, outlier_frac=0.005)),
+        ("qe_outlier_1pct", PTQConfig(method="qe_outlier", spec=spec, iterations=20, outlier_frac=0.01)),
+        ("qe_struct_1pct", PTQConfig(method="qe_outlier_struct", spec=spec, iterations=20, outlier_frac=0.01)),
+    ]
+    for name, pcfg in runs:
+        qp, _ = ptq_quantize_model(plan, params, calib, pcfg)
+        csv.add(f"table4_{name}", ppl=round(perplexity(plan, qp, batch_fn), 4))
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.print()

@@ -1,0 +1,30 @@
+"""Table 5 — extreme (2-bit) quantization with 2% outliers.
+
+Paper claim: at 2 bits, plain uniform quantization collapses; 2% outliers
+keep QuantEase usable and far ahead of SpQR 2%.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv, calib_batches, perplexity, trained_model
+from repro.core.solver import PTQConfig, ptq_quantize_model
+from repro.quant import GridSpec
+
+
+def run(csv: Csv):
+    plan, params, batch_fn, _ = trained_model()
+    calib = calib_batches(batch_fn)
+    spec = GridSpec(bits=2)
+    for name, pcfg in [
+        ("plain2bit", PTQConfig(method="quantease", spec=spec, iterations=20)),
+        ("spqr_2pct", PTQConfig(method="spqr", spec=spec, outlier_frac=0.02)),
+        ("qe_outlier_2pct", PTQConfig(method="qe_outlier", spec=spec, iterations=20, outlier_frac=0.02)),
+    ]:
+        qp, _ = ptq_quantize_model(plan, params, calib, pcfg)
+        csv.add(f"table5_{name}", ppl=round(perplexity(plan, qp, batch_fn), 4))
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.print()

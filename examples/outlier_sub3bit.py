@@ -1,0 +1,34 @@
+"""Sub-3-bit quantization with outliers (paper §5.4.1, Table 5).
+
+Shows plain 2-bit collapse vs outlier-aware QuantEase keeping the model
+usable, and the effective bits-per-weight accounting.
+
+    PYTHONPATH=src python examples/outlier_sub3bit.py
+"""
+
+import numpy as np
+
+from repro.core.solver import PTQConfig, ptq_quantize_model
+from repro.quant import GridSpec
+
+
+def main():
+    from benchmarks.common import calib_batches, perplexity, trained_model
+
+    plan, params, batch_fn, _ = trained_model()
+    calib = calib_batches(batch_fn, n=2)
+    base = perplexity(plan, params, batch_fn)
+    print(f"full precision ppl: {base:.4f}\n")
+
+    for name, pcfg, bpw in [
+        ("2-bit plain", PTQConfig(method="quantease", spec=GridSpec(bits=2), iterations=15), 2.0),
+        ("2-bit + 2% outliers", PTQConfig(method="qe_outlier", spec=GridSpec(bits=2), iterations=15, outlier_frac=0.02), 2.0 + 0.02 * 48),
+        ("3-bit + 1% outliers", PTQConfig(method="qe_outlier", spec=GridSpec(bits=3), iterations=15, outlier_frac=0.01), 3.0 + 0.01 * 48),
+    ]:
+        qp, _ = ptq_quantize_model(plan, params, calib, pcfg)
+        ppl = perplexity(plan, qp, batch_fn)
+        print(f"{name:22s} ~{bpw:.2f} bits/weight  ppl {ppl:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Serve a quantized model with batched requests (continuous batching).
+
+Trains a small LM, QuantEase-quantizes it to 4 bits, converts to the
+QuantizedTensor serving artifact, and runs a batch of prompts through the
+ServingEngine — verifying quantized greedy outputs stay close to dense ones.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+
+import numpy as np
+
+from repro.core.solver import PTQConfig, ptq_quantize_model
+from repro.quant import GridSpec
+from repro.serve.engine import Request, ServingEngine
+
+
+def main():
+    from benchmarks.common import calib_batches, trained_model
+
+    plan, params, batch_fn, _ = trained_model()
+    calib = calib_batches(batch_fn, n=2)
+
+    qparams, report = ptq_quantize_model(
+        plan, params, calib,
+        PTQConfig(method="quantease", spec=GridSpec(bits=4), iterations=10),
+    )
+    print(f"quantized {len(report)} linears; mean layer error "
+          f"{np.mean(list(report.values())):.5f}")
+
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 250, rng.integers(6, 24)).astype(np.int32)
+               for _ in range(6)]
+
+    def serve(p):
+        eng = ServingEngine(plan, p, max_batch=3, max_seq=256, prefill_pad=32)
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=pr, max_new_tokens=8))
+        fin = sorted(eng.run(), key=lambda r: r.rid)
+        return [r.output for r in fin], eng
+
+    dense_out, _ = serve(params)
+    quant_out, eng = serve(qparams)
+    agree = np.mean([
+        np.mean([a == b for a, b in zip(d, q)]) for d, q in zip(dense_out, quant_out)
+    ])
+    print(f"served {len(prompts)} requests on {eng.n_decode_steps} shared decode steps")
+    for i, (d, q) in enumerate(zip(dense_out, quant_out)):
+        print(f"  req{i}: dense={d}\n        4bit ={q}")
+    print(f"token agreement dense vs 4-bit: {agree:.2%}")
+
+
+if __name__ == "__main__":
+    main()

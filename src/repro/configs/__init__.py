@@ -1,0 +1,12 @@
+"""Architecture configs (assigned pool + paper-family models)."""
+
+from repro.configs.base import (
+    ARCH_IDS,
+    BlockDef,
+    ModelConfig,
+    get_config,
+    list_configs,
+    register,
+)
+
+__all__ = ["ARCH_IDS", "BlockDef", "ModelConfig", "get_config", "list_configs", "register"]

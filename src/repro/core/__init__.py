@@ -1,0 +1,34 @@
+"""QuantEase core: the paper's layer-wise PTQ algorithms + baselines."""
+
+from repro.core.calib import CalibStats, damp_sigma, gram
+from repro.core.quantease import (
+    QuantEaseConfig,
+    quantease_quantize,
+    quantease_reference,
+    layer_objective,
+    relative_error,
+)
+from repro.core.outlier import OutlierResult, outlier_quantease, top_s_mask
+from repro.core.rtn import rtn_quantize
+from repro.core.gptq import gptq_quantize, obs_sensitivity
+from repro.core.awq import awq_quantize
+from repro.core.spqr import spqr_quantize
+
+__all__ = [
+    "CalibStats",
+    "damp_sigma",
+    "gram",
+    "QuantEaseConfig",
+    "quantease_quantize",
+    "quantease_reference",
+    "layer_objective",
+    "relative_error",
+    "OutlierResult",
+    "outlier_quantease",
+    "top_s_mask",
+    "rtn_quantize",
+    "gptq_quantize",
+    "obs_sensitivity",
+    "awq_quantize",
+    "spqr_quantize",
+]

@@ -1,0 +1,110 @@
+"""AWQ baseline (Lin et al., 2023) as described in QuantEase §2.2.2.
+
+AWQ searches a per-input-channel scaling ``s ∈ R^p`` minimizing
+
+    ‖WX − q(s⊙W)(X⊙s⁻¹)‖²_F,
+
+with the parametric family ``s = s_X^α · s_W^{−β}``, α, β grid-searched over
+[0, 1]; ``s_X`` / ``s_W`` are per-channel mean magnitudes of activations and
+weights.  The effective dequantized weight is ``Ŵ = q(s⊙W) ⊙ s⁻¹`` (column j
+scaled by 1/s_j), so the reconstruction error is computable from Σ alone:
+``‖(W−Ŵ)X‖² = Tr(EΣEᵀ)`` — no raw activations needed.
+
+``s_X`` is derived from Σ's diagonal (E[x_j²]^{1/2}), which is the statistic
+our calibration pipeline already carries.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import GridSpec, compute_grid, quantize_dequantize
+
+__all__ = ["awq_quantize"]
+
+
+def _candidate_error(w, sigma, spec, s):
+    """Error of quantizing with column scaling s (p,)."""
+    ws = w * s[None, :]
+    grid = compute_grid(ws, spec)
+    wq = quantize_dequantize(ws, grid) / s[None, :]
+    e = w - wq
+    return jnp.einsum("ij,jk,ik->", e, sigma, e), wq
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "n_grid", "search_beta"))
+def awq_quantize(
+    w: jax.Array,
+    sigma: jax.Array,
+    spec: GridSpec,
+    *,
+    n_grid: int = 20,
+    search_beta: bool = False,
+) -> jax.Array:
+    """Grid-search α (and optionally β) and return the best dequantized Ŵ.
+
+    With ``search_beta=False`` (AWQ's published default) s = s_X^α only.
+    """
+    q, p = w.shape
+    w = w.astype(jnp.float32)
+    sigma = sigma.astype(jnp.float32)
+    sx = jnp.sqrt(jnp.clip(jnp.diag(sigma), 1e-12, None))  # per-channel act scale
+    sx = sx / jnp.exp(jnp.mean(jnp.log(sx)))  # geo-mean normalize (AWQ impl.)
+    sw = jnp.mean(jnp.abs(w), axis=0)
+    sw = sw / jnp.exp(jnp.mean(jnp.log(jnp.clip(sw, 1e-12, None))))
+
+    alphas = jnp.linspace(0.0, 1.0, n_grid)
+    betas = jnp.linspace(0.0, 1.0, n_grid) if search_beta else jnp.zeros((1,))
+
+    def eval_ab(ab):
+        a, b = ab
+        s = jnp.clip(sx**a * sw ** (-b), 1e-6, 1e6)
+        err, _ = _candidate_error(w, sigma, spec, s)
+        return err
+
+    grid_ab = jnp.stack(
+        [jnp.repeat(alphas, betas.shape[0]), jnp.tile(betas, alphas.shape[0])], axis=1
+    )
+    errs = jax.lax.map(eval_ab, grid_ab)
+    best = grid_ab[jnp.argmin(errs)]
+    s = jnp.clip(sx ** best[0] * sw ** (-best[1]), 1e-6, 1e6)
+    _, wq = _candidate_error(w, sigma, spec, s)
+    return wq
+
+
+def awq_then_quantease(
+    w, sigma, spec, *, n_grid: int = 20, iterations: int = 20, percdamp: float = 0.01
+):
+    """AWQ + QuantEase (paper §6: "we would expect AWQ+QuantEase would lead
+    to even further improvements"): grid-search the AWQ per-channel scaling,
+    then run QuantEase CD on the *scaled* problem.
+
+    With column scaling s, min ‖WX − (Ŵs⊙s⁻¹)X‖² over on-grid Ŵs is the
+    QuantEase problem with W' = s⊙W and Σ' = diag(1/s) Σ diag(1/s).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import quantease
+
+    w = w.astype(jnp.float32)
+    sigma = sigma.astype(jnp.float32)
+    sx = jnp.sqrt(jnp.clip(jnp.diag(sigma), 1e-12, None))
+    sx = sx / jnp.exp(jnp.mean(jnp.log(sx)))
+    alphas = jnp.linspace(0.0, 1.0, n_grid)
+
+    def eval_a(a):
+        s = jnp.clip(sx**a, 1e-6, 1e6)
+        err, _ = _candidate_error(w, sigma, spec, s)
+        return err
+
+    errs = jax.lax.map(eval_a, alphas)
+    s = jnp.clip(sx ** alphas[jnp.argmin(errs)], 1e-6, 1e6)
+    ws = w * s[None, :]
+    sigma_s = sigma / s[:, None] / s[None, :]
+    ws_hat, _ = quantease.quantease_quantize(
+        ws, sigma_s, spec, iterations=iterations, percdamp=percdamp
+    )
+    return ws_hat / s[None, :]

@@ -1,0 +1,66 @@
+"""Calibration statistics for layer-wise PTQ.
+
+Every algorithm in this package consumes only second-order statistics of the
+calibration activations — ``Σ = X Xᵀ`` (p×p) and optionally ``W Σ`` — never
+the raw ``X`` (n ≫ p, so this is the memory win the paper highlights:
+``p² + O(pq)`` footprint).  ``CalibStats`` supports *streaming* accumulation
+over calibration batches (fp32 accumulators), which is how the whole-model
+solver feeds it, and sharded accumulation under a mesh (each data shard
+accumulates its local Gram matrix; a psum at the end makes it global).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CalibStats", "gram", "damp_sigma"]
+
+
+def gram(x: jax.Array) -> jax.Array:
+    """Σ = X Xᵀ for X: (p, n) — fp32 accumulation regardless of input dtype."""
+    x = x.astype(jnp.float32)
+    return x @ x.T
+
+
+@dataclasses.dataclass
+class CalibStats:
+    """Streaming Σ accumulator for one linear layer.
+
+    ``sigma`` is the *unnormalized* Gram matrix; ``n`` counts samples.  The
+    algorithms are scale-invariant in Σ (β̃ in Lemma 1 uses only ratios
+    Σ_{j,k}/Σ_{j,j}), so no normalization by n is required.
+    """
+
+    sigma: jax.Array  # (p, p) fp32
+    n: int = 0
+
+    @classmethod
+    def zeros(cls, p: int) -> "CalibStats":
+        return cls(sigma=jnp.zeros((p, p), jnp.float32), n=0)
+
+    def update(self, x: jax.Array) -> "CalibStats":
+        """x: (p, n_batch) activations feeding the layer (paper layout)."""
+        return CalibStats(sigma=self.sigma + gram(x), n=self.n + x.shape[1])
+
+    def update_tokens(self, x_tokens: jax.Array) -> "CalibStats":
+        """x_tokens: (..., p) activation tensor in model layout."""
+        x2 = x_tokens.reshape(-1, x_tokens.shape[-1]).astype(jnp.float32)
+        return CalibStats(sigma=self.sigma + x2.T @ x2, n=self.n + x2.shape[0])
+
+
+def damp_sigma(sigma: jax.Array, percdamp: float = 0.01) -> jax.Array:
+    """λ-damping: Σ + λI with λ = percdamp · mean(diag Σ).
+
+    Identical to GPTQ's stabilization.  For QuantEase it additionally
+    guarantees Σ_{j,j} > 0 (Lemma 1 footnote: dead input features would
+    otherwise make the CD update ill-defined).  Columns with Σ_{j,j}=0 before
+    damping are untouched by the objective, so damping them towards
+    round-to-nearest is exactly the right behavior.
+    """
+    p = sigma.shape[0]
+    mean_diag = jnp.clip(jnp.mean(jnp.diag(sigma)), 1e-8, None)
+    return sigma + (percdamp * mean_diag) * jnp.eye(p, dtype=sigma.dtype)

@@ -1,0 +1,150 @@
+"""GPTQ baseline (Frantar et al., 2023) — OBS column sweep with lazy batching.
+
+Implements the reference algorithm faithfully (§2.2.1 of the QuantEase paper):
+one pass over columns j = 1..p; quantize column j, then propagate the OBS
+correction to the not-yet-quantized columns using the upper-Cholesky factor of
+``H⁻¹`` (H = damped Σ).  Corrections inside the active block of size
+``block_size`` are applied column-by-column; corrections to the remaining
+columns are batched into one matmul per block ("lazy batch", the trick that
+makes GPTQ fast — and the same trick our blocked QuantEase kernel reuses).
+
+This is the component QuantEase's experiments initialize-from / compare-to,
+and it is *required infrastructure* for the SpQR baseline (sensitivities are
+OBS saliencies computed from the same Cholesky factor).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calib import damp_sigma
+from repro.quant import GridSpec, compute_grid
+from repro.quant.grid import Grid
+
+__all__ = ["gptq_quantize", "obs_sensitivity"]
+
+
+def _quant_dequant_cols(w_cols: jax.Array, scale: jax.Array, zero: jax.Array, n_levels: int):
+    codes = jnp.clip(jnp.round(w_cols / scale) + zero, 0, n_levels - 1)
+    return (codes - zero) * scale
+
+
+def _cholesky_inv_upper(h: jax.Array) -> jax.Array:
+    """Upper-triangular U with H⁻¹ = Uᵀ U (GPTQ's factor)."""
+    hinv = jnp.linalg.inv(h)
+    # jnp.linalg.cholesky returns lower L with Hinv = L Lᵀ = (Lᵀ)ᵀ (Lᵀ).
+    return jnp.linalg.cholesky(hinv).T
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block_size", "act_order"))
+def gptq_quantize(
+    w: jax.Array,
+    sigma: jax.Array,
+    spec: GridSpec,
+    *,
+    percdamp: float = 0.01,
+    block_size: int = 128,
+    act_order: bool = False,
+    keep_mask: Optional[jax.Array] = None,
+    grid: Optional[Grid] = None,
+) -> jax.Array:
+    """Quantize W: (q, p) against Σ: (p, p).  Returns dequantized Ŵ (fp32).
+
+    ``keep_mask``: optional (q, p) bool — True entries are *kept at full
+    precision* (used by the SpQR baseline's outliers); they still absorb OBS
+    corrections but are never rounded.
+    ``grid``: optional explicit grid (e.g. SpQR's outlier-shrunk ranges).
+    """
+    q, p = w.shape
+    w = w.astype(jnp.float32)
+    sigma = damp_sigma(sigma.astype(jnp.float32), percdamp)
+
+    perm = None
+    if act_order:
+        perm = jnp.argsort(-jnp.diag(sigma))
+        w = w[:, perm]
+        sigma = sigma[perm][:, perm]
+        if keep_mask is not None:
+            keep_mask = keep_mask[:, perm]
+
+    if grid is None:
+        grid = compute_grid(w, spec)  # from (possibly permuted) w: aligned
+        scale_pc, zero_pc = grid.per_column(p)  # (q, p)
+    else:
+        scale_pc, zero_pc = grid.per_column(p)  # original column order
+        if act_order:
+            scale_pc, zero_pc = scale_pc[:, perm], zero_pc[:, perm]
+    n_levels = spec.n_levels
+    u = _cholesky_inv_upper(sigma)  # (p, p) upper
+    if keep_mask is None:
+        keep_mask = jnp.zeros((q, p), jnp.bool_)
+
+    n_blocks = -(-p // block_size)
+    pad = n_blocks * block_size - p
+    if pad:
+        # Pad with identity-ish tail: extra columns have zero weight, unit diag.
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        scale_pc = jnp.pad(scale_pc, ((0, 0), (0, pad)), constant_values=1.0)
+        zero_pc = jnp.pad(zero_pc, ((0, 0), (0, pad)))
+        keep_mask = jnp.pad(keep_mask, ((0, 0), (0, pad)))
+        u = jnp.pad(u, ((0, pad), (0, pad)))
+        u = u.at[jnp.arange(p, p + pad), jnp.arange(p, p + pad)].set(1.0)
+    p_pad = p + pad
+    bsz = block_size
+
+    def block_step(wb, b):
+        """Process columns [b*bsz, (b+1)*bsz)."""
+        col0 = b * bsz
+        w_blk = jax.lax.dynamic_slice(wb, (0, col0), (q, bsz))
+        s_blk = jax.lax.dynamic_slice(scale_pc, (0, col0), (q, bsz))
+        z_blk = jax.lax.dynamic_slice(zero_pc, (0, col0), (q, bsz))
+        k_blk = jax.lax.dynamic_slice(keep_mask, (0, col0), (q, bsz))
+        u_blk = jax.lax.dynamic_slice(u, (col0, col0), (bsz, bsz))
+
+        def col_step(carry, i):
+            w_blk, err_blk = carry
+            wc = jax.lax.dynamic_slice(w_blk, (0, i), (q, 1))[:, 0]
+            sc = jax.lax.dynamic_slice(s_blk, (0, i), (q, 1))[:, 0]
+            zc = jax.lax.dynamic_slice(z_blk, (0, i), (q, 1))[:, 0]
+            kc = jax.lax.dynamic_slice(k_blk, (0, i), (q, 1))[:, 0]
+            qc = jnp.where(kc, wc, _quant_dequant_cols(wc, sc, zc, n_levels))
+            d = u_blk[i, i]
+            err = (wc - qc) / d
+            # Propagate inside the block (columns > i; row i of U is zero
+            # left of the diagonal so a full-row update is safe, but we must
+            # not touch already-quantized cols — mask by position.
+            row = u_blk[i]  # (bsz,)
+            pos_mask = (jnp.arange(bsz) > i).astype(w_blk.dtype)
+            w_blk = w_blk - jnp.outer(err, row * pos_mask)
+            w_blk = jax.lax.dynamic_update_slice(w_blk, qc[:, None], (0, i))
+            err_blk = jax.lax.dynamic_update_slice(err_blk, err[:, None], (0, i))
+            return (w_blk, err_blk), None
+
+        (w_blk, err_blk), _ = jax.lax.scan(
+            col_step, (w_blk, jnp.zeros((q, bsz), jnp.float32)), jnp.arange(bsz)
+        )
+        wb = jax.lax.dynamic_update_slice(wb, w_blk, (0, col0))
+        # Lazy-batch correction of all trailing columns: one matmul.
+        u_rest = jax.lax.dynamic_slice(u, (col0, 0), (bsz, p_pad))
+        tail_mask = (jnp.arange(p_pad) >= col0 + bsz).astype(wb.dtype)
+        wb = wb - (err_blk @ u_rest) * tail_mask[None, :]
+        return wb, None
+
+    w_out, _ = jax.lax.scan(block_step, w, jnp.arange(n_blocks))
+    w_out = w_out[:, :p]
+    if act_order:
+        inv = jnp.argsort(perm)
+        w_out = w_out[:, inv]
+    return w_out
+
+
+@functools.partial(jax.jit, static_argnames=())
+def obs_sensitivity(w: jax.Array, sigma: jax.Array, w_rtn: jax.Array, *, percdamp: float = 0.01) -> jax.Array:
+    """OBS saliency ω_{ij} = (W_{ij} − q(W_{ij}))² / [H⁻¹]_{jj} (SpQR Eq. 15)."""
+    sigma = damp_sigma(sigma.astype(jnp.float32), percdamp)
+    hinv_diag = jnp.diag(jnp.linalg.inv(sigma))  # (p,)
+    return (w.astype(jnp.float32) - w_rtn) ** 2 / hinv_diag[None, :]

@@ -1,0 +1,150 @@
+"""Outlier-aware QuantEase (paper §4, Algorithm 3).
+
+Solves  min ‖WX − (Ŵ+Ĥ)X‖²  s.t.  Ŵ on-grid, ‖Ĥ‖₀ ≤ s
+by block coordinate descent:
+
+  * Ŵ-block: one cyclic-CD sweep of QuantEase on the surrogate target
+    ``W − Ĥ`` (identical math, WΣ ← (W−Ĥ)Σ),
+  * Ĥ-block: one iterative-hard-thresholding (IHT) step
+    ``Ĥ ← P_s(Ĥ − η ∇_H g)`` with ``η = 1/(2 λ_max(Σ))`` (Lemma 3 descent).
+
+Grid-range shrink: the per-channel grids are computed once, from W with the
+top-s magnitude entries excluded (§4.3) — outliers live in Ĥ, so the grid
+need not cover them.
+
+Structured variant (§4.3 "Structured Outliers"): ``P_s`` selects the
+⌊s/q⌋ columns of largest ℓ2 norm instead of the s largest entries.
+
+Initialization: Ĥ = P_s(W), Ŵ = W − Ĥ (infeasible until the first sweep,
+like basic QuantEase).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calib import damp_sigma
+from repro.core.quantease import quantease_quantize
+from repro.quant import GridSpec, compute_grid_excluding_outliers
+
+__all__ = ["OutlierResult", "outlier_quantease", "top_s_mask", "power_lambda_max"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OutlierResult:
+    w_hat: jax.Array  # (q, p) quantized part (on-grid, fp32)
+    h: jax.Array  # (q, p) dense sparse-correction (‖H‖₀ ≤ s)
+    objective: jax.Array  # per-outer-iteration damped objective
+
+    @property
+    def w_eff(self) -> jax.Array:
+        return self.w_hat + self.h
+
+
+def power_lambda_max(sigma: jax.Array, iters: int = 64) -> jax.Array:
+    """Largest eigenvalue of PSD Σ by power iteration (matrix-vector only —
+    the paper's point: no decompositions anywhere in the pipeline)."""
+    p = sigma.shape[0]
+    v = jnp.ones((p,), jnp.float32) / jnp.sqrt(p)
+
+    def body(_, v):
+        v = sigma @ v
+        return v / jnp.clip(jnp.linalg.norm(v), 1e-30, None)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return v @ (sigma @ v)
+
+
+def top_s_mask(a: jax.Array, s: int) -> jax.Array:
+    """Boolean mask of the s largest |entries| (exact, via top_k on flat)."""
+    flat = jnp.abs(a).reshape(-1)
+    _, idx = jax.lax.top_k(flat, s)
+    mask = jnp.zeros(flat.shape, jnp.bool_).at[idx].set(True)
+    return mask.reshape(a.shape)
+
+
+def _project_s(a: jax.Array, s: int) -> jax.Array:
+    """P_s: keep the s largest-|value| entries, zero the rest."""
+    return jnp.where(top_s_mask(a, s), a, 0.0)
+
+
+def _project_columns(a: jax.Array, n_cols: int) -> jax.Array:
+    """Structured P_s: keep the n_cols columns of largest ℓ2 norm."""
+    norms = jnp.linalg.norm(a, axis=0)
+    _, idx = jax.lax.top_k(norms, n_cols)
+    mask = jnp.zeros((a.shape[1],), jnp.bool_).at[idx].set(True)
+    return jnp.where(mask[None, :], a, 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "s", "iterations", "structured", "cd_block_size", "use_kernel"),
+)
+def outlier_quantease(
+    w: jax.Array,
+    sigma: jax.Array,
+    spec: GridSpec,
+    *,
+    s: int,
+    iterations: int = 25,
+    structured: bool = False,
+    percdamp: float = 0.01,
+    cd_block_size: int = 256,
+    use_kernel: str = "xla",
+) -> OutlierResult:
+    """Algorithm 3.  ``s`` = total outlier budget (entries; for the structured
+    variant ⌊s/q⌋ columns are kept)."""
+    q, p = w.shape
+    w32 = w.astype(jnp.float32)
+    sigma_d = damp_sigma(sigma.astype(jnp.float32), percdamp)
+    eta = 1.0 / (2.0 * power_lambda_max(sigma_d))
+
+    n_cols = max(s // q, 1)
+    project = (
+        functools.partial(_project_columns, n_cols=n_cols)
+        if structured
+        else functools.partial(_project_s, s=s)
+    )
+
+    # Range-shrunk grids (outliers excluded from the quantization pool).
+    # The exclusion mask must match the *structure* of H: entries for the
+    # unstructured variant, whole columns for the structured one.
+    if structured:
+        _, col_idx = jax.lax.top_k(jnp.linalg.norm(w32, axis=0), n_cols)
+        excl = jnp.zeros((p,), jnp.bool_).at[col_idx].set(True)
+        excl = jnp.broadcast_to(excl[None, :], (q, p))
+    else:
+        excl = top_s_mask(w32, s)
+    grid = compute_grid_excluding_outliers(w32, spec, excl)
+
+    # Init: Ĥ = P_s(W), Ŵ = W − Ĥ.
+    h = project(w32)
+    w_hat = w32 - h
+
+    objs = []
+    for _ in range(iterations):
+        # Ŵ-block: one QuantEase sweep on target (W − Ĥ).
+        w_hat, _ = quantease_quantize(
+            w32 - h,
+            sigma_d,
+            spec,
+            iterations=1,
+            block_size=cd_block_size,
+            percdamp=0.0,  # sigma_d is already damped
+            unquantized_heuristic=False,
+            w_init=w_hat,
+            grid=grid,
+            use_kernel=use_kernel,
+        )
+        # Ĥ-block: IHT step.  ∇_H g = 2 (Ŵ + Ĥ − W) Σ.
+        grad = 2.0 * ((w_hat + h - w32) @ sigma_d)
+        h = project(h - eta * grad)
+        e = w32 - w_hat - h
+        objs.append(jnp.einsum("ij,jk,ik->", e, sigma_d, e))
+    return OutlierResult(w_hat=w_hat, h=h, objective=jnp.stack(objs))

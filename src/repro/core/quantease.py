@@ -1,0 +1,286 @@
+"""QuantEase — cyclic coordinate descent layer-wise quantization (the paper).
+
+Math (Lemma 1):  with Σ = XXᵀ, the optimal quantized value of coordinate
+(i, j), all others fixed, is ``q_i(β̃)`` where::
+
+    β̃ = −[ Σ_{k≠j} Σ_{j,k} Ŵ_{i,k} − (WΣ)_{i,j} ] / Σ_{j,j}
+
+Updates are applied one *column* at a time (rows are independent given j).
+
+Two implementations:
+
+* :func:`quantease_reference` — Algorithm 1 verbatim (rank-1 maintenance of
+  ŴΣ).  O(p²q) per iteration with p sequential HBM-bound steps; used as the
+  numerical oracle in tests.
+* :func:`quantease_quantize` — the production path: Algorithm 2's
+  "accelerated partial updates" (Eq. 13) restructured into **column blocks**
+  (DESIGN.md §3).  Per block of B columns, the cross-block correction is one
+  MXU matmul (``ΔŴ @ Σ̃[:, blk]``); the strictly-sequential intra-block sweep
+  touches only a (q_tile × B) weight tile and a (B × B) Σ̃ tile — VMEM
+  resident on TPU, where :mod:`repro.kernels.quantease_cd` implements it as a
+  Pallas kernel.  The XLA fallback below is bit-equivalent (same update
+  order ⇒ same iterates, Algorithm 1 ≡ Algorithm 2 ≡ blocked).
+
+Both support the paper's "every third iteration unquantized" heuristic
+(§3.2 Initialization) and initialization from any Ŵ (e.g. GPTQ's output,
+§3.1 last paragraph).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calib import damp_sigma
+from repro.quant import GridSpec, compute_grid
+from repro.quant.grid import Grid
+
+__all__ = [
+    "QuantEaseConfig",
+    "quantease_quantize",
+    "quantease_reference",
+    "layer_objective",
+    "relative_error",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantEaseConfig:
+    """Hyper-parameters of the CD solver (paper defaults)."""
+
+    iterations: int = 25  # paper §5.1: 25 strikes the accuracy/runtime balance
+    block_size: int = 256  # column block B for the two-level sweep
+    percdamp: float = 0.01  # Σ damping (same role as in GPTQ)
+    unquantized_heuristic: bool = True  # every 3rd iteration keeps β̃ raw
+    use_kernel: str = "auto"  # "auto" | "pallas" | "xla"
+
+
+def layer_objective(w: jax.Array, w_hat: jax.Array, sigma: jax.Array) -> jax.Array:
+    """f(Ŵ) = ‖WX − ŴX‖²_F = Tr((W−Ŵ) Σ (W−Ŵ)ᵀ)."""
+    e = (w - w_hat).astype(jnp.float32)
+    return jnp.einsum("ij,jk,ik->", e, sigma.astype(jnp.float32), e)
+
+
+def relative_error(w: jax.Array, w_hat: jax.Array, sigma: jax.Array) -> jax.Array:
+    """Error(Ŵ) = ‖WX−ŴX‖²_F / ‖WX‖²_F (paper §3.4 / Fig. 2 metric)."""
+    w = w.astype(jnp.float32)
+    denom = jnp.einsum("ij,jk,ik->", w, sigma.astype(jnp.float32), w)
+    return layer_objective(w, w_hat, sigma) / jnp.clip(denom, 1e-30, None)
+
+
+def _prep(w, sigma, spec, percdamp, grid: Optional[Grid]):
+    q, p = w.shape
+    w = w.astype(jnp.float32)
+    sigma = damp_sigma(sigma.astype(jnp.float32), percdamp)
+    if grid is None:
+        grid = compute_grid(w, spec)
+    scale_pc, zero_pc = grid.per_column(p)  # (q, p)
+    diag = jnp.diag(sigma)
+    sig_norm = sigma / diag[None, :]  # column-normalized, diag = 1
+    sig_tilde = sig_norm - jnp.eye(p, dtype=jnp.float32)  # zero diag
+    pmat = w @ sig_norm  # P = WΣ^norm (full diag — see Alg. 2 ordering)
+    return w, sigma, scale_pc, zero_pc, sig_tilde, pmat, grid
+
+
+def _quant_cols(x, scale, zero, n_levels):
+    codes = jnp.clip(jnp.round(x / scale) + zero, 0, n_levels - 1)
+    return (codes - zero) * scale
+
+
+# ---------------------------------------------------------------------------
+# Reference: Algorithm 1 (rank-1 maintenance), the oracle.
+# ---------------------------------------------------------------------------
+
+
+def quantease_reference(
+    w: jax.Array,
+    sigma: jax.Array,
+    spec: GridSpec,
+    *,
+    iterations: int = 3,
+    percdamp: float = 0.01,
+    unquantized_heuristic: bool = False,
+    w_init: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Algorithm 1, column-at-a-time with rank-1 ŴΣ updates.  Slow; tests only."""
+    q, p = w.shape
+    w32, sigma, scale_pc, zero_pc, _, _, spec_grid = _prep(
+        w, sigma, spec, percdamp, None
+    )
+    n_levels = spec.n_levels
+    w_hat = w32 if w_init is None else w_init.astype(jnp.float32)
+    wsig = w32 @ sigma  # (WΣ), fixed
+    what_sig = w_hat @ sigma  # maintained by rank-1 updates
+    diag = jnp.diag(sigma)
+
+    def col_update(carry, j, quantize):
+        w_hat, what_sig = carry
+        wcol = jax.lax.dynamic_slice(w_hat, (0, j), (q, 1))[:, 0]
+        ws_col = jax.lax.dynamic_slice(what_sig, (0, j), (q, 1))[:, 0]
+        wsig_col = jax.lax.dynamic_slice(wsig, (0, j), (q, 1))[:, 0]
+        sjj = diag[j]
+        # β̃ = −[ (ŴΣ)_{:,j} − Σ_jj Ŵ_{:,j} − (WΣ)_{:,j} ] / Σ_jj
+        beta = -(ws_col - sjj * wcol - wsig_col) / sjj
+        sc = jax.lax.dynamic_slice(scale_pc, (0, j), (q, 1))[:, 0]
+        zc = jax.lax.dynamic_slice(zero_pc, (0, j), (q, 1))[:, 0]
+        new = _quant_cols(beta, sc, zc, n_levels) if quantize else beta
+        # Rank-1 update of ŴΣ (Eq. 12).
+        sig_row = sigma[j]  # (p,)
+        what_sig = what_sig + jnp.outer(new - wcol, sig_row)
+        w_hat = jax.lax.dynamic_update_slice(w_hat, new[:, None], (0, j))
+        return (w_hat, what_sig), None
+
+    for it in range(iterations):
+        quantize = not (
+            unquantized_heuristic and (it + 1) % 3 == 0 and it != iterations - 1
+        )
+        step = functools.partial(col_update, quantize=quantize)
+        (w_hat, what_sig), _ = jax.lax.scan(step, (w_hat, what_sig), jnp.arange(p))
+    return w_hat
+
+
+# ---------------------------------------------------------------------------
+# Production: blocked Algorithm 2.
+# ---------------------------------------------------------------------------
+
+
+def _xla_block_sweep(beta0, sig_blk, w_old_blk, scale_blk, zero_blk, n_levels, quantize):
+    """Sequential CD sweep inside one column block (XLA fallback).
+
+    beta0:  (q, B) = P_blk − P̂_blk + (cross-block ΔŴ correction)
+    sig_blk: (B, B) Σ̃ block (zero diag)
+    Returns (w_new_blk, delta_blk) with delta = old − new.
+    """
+    q, bsz = beta0.shape
+
+    def col(carry, i):
+        delta_blk = carry
+        # Intra-block correction: ΔŴ_blk (zero in cols ≥ i) @ Σ̃_blk[:, i].
+        corr = delta_blk @ jax.lax.dynamic_slice(sig_blk, (0, i), (bsz, 1))[:, 0]
+        beta = jax.lax.dynamic_slice(beta0, (0, i), (q, 1))[:, 0] + corr
+        if quantize:
+            sc = jax.lax.dynamic_slice(scale_blk, (0, i), (q, 1))[:, 0]
+            zc = jax.lax.dynamic_slice(zero_blk, (0, i), (q, 1))[:, 0]
+            new = _quant_cols(beta, sc, zc, n_levels)
+        else:
+            new = beta
+        old = jax.lax.dynamic_slice(w_old_blk, (0, i), (q, 1))[:, 0]
+        delta_blk = jax.lax.dynamic_update_slice(
+            delta_blk, (old - new)[:, None], (0, i)
+        )
+        return delta_blk, new
+
+    delta_blk, new_cols = jax.lax.scan(
+        col, jnp.zeros((q, bsz), jnp.float32), jnp.arange(bsz)
+    )
+    return new_cols.T, delta_blk  # scan stacks (B, q) → transpose
+
+
+def _block_sweep(beta0, sig_blk, w_old_blk, scale_blk, zero_blk, n_levels, quantize, use_kernel):
+    if use_kernel == "xla":
+        return _xla_block_sweep(
+            beta0, sig_blk, w_old_blk, scale_blk, zero_blk, n_levels, quantize
+        )
+    # Pallas path (TPU, or interpret-mode on CPU when forced).
+    from repro.kernels import ops as kops
+
+    return kops.quantease_block_sweep(
+        beta0,
+        sig_blk,
+        w_old_blk,
+        scale_blk,
+        zero_blk,
+        n_levels=n_levels,
+        quantize=quantize,
+        interpret=(use_kernel != "pallas_hw"),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "iterations", "block_size", "unquantized_heuristic", "use_kernel"),
+)
+def quantease_quantize(
+    w: jax.Array,
+    sigma: jax.Array,
+    spec: GridSpec,
+    *,
+    iterations: int = 25,
+    block_size: int = 256,
+    percdamp: float = 0.01,
+    unquantized_heuristic: bool = True,
+    w_init: Optional[jax.Array] = None,
+    grid: Optional[Grid] = None,
+    use_kernel: str = "xla",
+) -> tuple[jax.Array, jax.Array]:
+    """Blocked Algorithm 2.  Returns (Ŵ fp32, per-iteration damped objective).
+
+    The objective history (length ``iterations``) is evaluated *after* each
+    iteration against the damped Σ; from the first fully-quantized iterate
+    onward it is non-increasing on quantized iterations (Lemma 2) — this is
+    asserted by tests/test_property.py.
+    """
+    q, p = w.shape
+    w32, sigma_d, scale_pc, zero_pc, sig_tilde, pmat, _ = _prep(
+        w, sigma, spec, percdamp, grid
+    )
+    n_levels = spec.n_levels
+    w_hat = w32 if w_init is None else w_init.astype(jnp.float32)
+
+    bsz = min(block_size, p)
+    n_blocks = -(-p // bsz)
+    pad = n_blocks * bsz - p
+    if pad:
+        # Padded columns: zero Σ̃ coupling, unit scale ⇒ they quantize to an
+        # isolated 0 and never influence real columns.
+        w32 = jnp.pad(w32, ((0, 0), (0, pad)))
+        w_hat = jnp.pad(w_hat, ((0, 0), (0, pad)))
+        scale_pc = jnp.pad(scale_pc, ((0, 0), (0, pad)), constant_values=1.0)
+        zero_pc = jnp.pad(zero_pc, ((0, 0), (0, pad)))
+        sig_tilde = jnp.pad(sig_tilde, ((0, pad), (0, pad)))
+        pmat = jnp.pad(pmat, ((0, 0), (0, pad)))
+    p_pad = p + pad
+
+    def iteration(w_hat, quantize):
+        p_hat = w_hat @ sig_tilde  # P̂ (zero-diag Σ̃) — one qp² matmul
+        base = pmat - p_hat
+
+        def block(carry, b):
+            w_new, delta = carry  # delta: (q, p_pad), old−new, zero if unprocessed
+            col0 = b * bsz
+            # Cross-block correction: ΔŴ @ Σ̃[:, blk].  Unprocessed columns of
+            # ΔŴ are zero, so the full matmul is exact.
+            sig_cols = jax.lax.dynamic_slice(sig_tilde, (0, col0), (p_pad, bsz))
+            beta0 = (
+                jax.lax.dynamic_slice(base, (0, col0), (q, bsz)) + delta @ sig_cols
+            )
+            sig_blk = jax.lax.dynamic_slice(sig_tilde, (col0, col0), (bsz, bsz))
+            w_old_blk = jax.lax.dynamic_slice(w_hat, (0, col0), (q, bsz))
+            s_blk = jax.lax.dynamic_slice(scale_pc, (0, col0), (q, bsz))
+            z_blk = jax.lax.dynamic_slice(zero_pc, (0, col0), (q, bsz))
+            new_blk, delta_blk = _block_sweep(
+                beta0, sig_blk, w_old_blk, s_blk, z_blk, n_levels, quantize, use_kernel
+            )
+            w_new = jax.lax.dynamic_update_slice(w_new, new_blk, (0, col0))
+            delta = jax.lax.dynamic_update_slice(delta, delta_blk, (0, col0))
+            return (w_new, delta), None
+
+        (w_new, _), _ = jax.lax.scan(
+            block, (w_hat, jnp.zeros((q, p_pad), jnp.float32)), jnp.arange(n_blocks)
+        )
+        return w_new
+
+    sigma_pad = jnp.pad(sigma_d, ((0, pad), (0, pad))) if pad else sigma_d
+    objs = []
+    for it in range(iterations):
+        quantize = not (
+            unquantized_heuristic and (it + 1) % 3 == 0 and it != iterations - 1
+        )
+        w_hat = iteration(w_hat, quantize)
+        e = w32 - w_hat
+        objs.append(jnp.einsum("ij,jk,ik->", e, sigma_pad, e))
+    return w_hat[:, :p], jnp.stack(objs)

@@ -1,0 +1,21 @@
+"""RTN (round-to-nearest) baseline — Dettmers et al. 2022 / Yao et al. 2022.
+
+Quantizes each weight independently to its nearest grid point; no use of
+calibration data.  This is the weakest baseline in the paper's tables and the
+initializer sanity floor for everything else.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import GridSpec, compute_grid, quantize_dequantize
+
+__all__ = ["rtn_quantize"]
+
+
+def rtn_quantize(w: jax.Array, spec: GridSpec) -> jax.Array:
+    """W: (q, p) → nearest-grid Ŵ (fp32)."""
+    grid = compute_grid(w, spec)
+    return quantize_dequantize(w.astype(jnp.float32), grid)

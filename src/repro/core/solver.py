@@ -1,0 +1,312 @@
+"""Whole-model PTQ: the paper's pipeline, layer-by-layer over a real model.
+
+Mirrors the reference GPTQ/QuantEase flow (paper §5 setup):
+
+  * run calibration batches through the model **block by block**; the inputs
+    feeding each block are the outputs of the *already-quantized* prefix
+    (error propagation across blocks, as all layer-wise PTQ codebases do),
+  * per linear, accumulate Σ = XXᵀ streaming over batches (fp32, the only
+    statistic any method needs — ``p² + O(pq)`` memory, paper §3.2),
+  * quantize with the chosen method, write back (fake-quant bf16 leaves or
+    :class:`QuantizedTensor` leaves for real serving),
+  * record per-layer relative errors — the data behind the paper's Fig. 2.
+
+Quantized leaf set: every matmul the model zoo routes through
+``apply_linear`` except numerically-critical small tensors (mamba Δ
+projection ``wdt``; norms; biases; MoE router) — see DESIGN.md
+§Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import awq, gptq, outlier, quantease, rtn, spqr
+from repro.core.quantease import relative_error
+from repro.models import model as M
+from repro.models.common import capture_linear_inputs, capture_scope
+from repro.quant import GridSpec, QuantizedTensor, compute_grid, quantize_codes
+
+__all__ = ["PTQConfig", "ptq_quantize_model", "QUANTIZABLE"]
+
+QUANTIZABLE = {
+    "wq", "wk", "wv", "wo", "wq_c", "wk_c", "wv_c", "wo_c",
+    "wg", "wu", "wd",
+    "wz", "wx", "wbc", "out_proj",
+    "w_gate", "w_up", "w_down",
+}
+_MOE_NAMES = {"w_gate", "w_up", "w_down"}
+
+
+@dataclasses.dataclass
+class PTQConfig:
+    method: str = "quantease"  # rtn|gptq|awq|quantease|spqr|qe_outlier|qe_outlier_struct
+    spec: GridSpec = dataclasses.field(default_factory=lambda: GridSpec(bits=4))
+    iterations: int = 25
+    outlier_frac: float = 0.01  # for outlier-aware methods
+    percdamp: float = 0.01
+    block_size: int = 128
+    emit: str = "fake"  # "fake" (dequantized bf16) | "qt" (QuantizedTensor)
+    init_from_gptq: bool = False  # QuantEase warm start (paper §3.1)
+
+
+def _quantize_one(w2d: jax.Array, sigma: jax.Array, cfg: PTQConfig):
+    """Returns (w_hat fp32, h or None)."""
+    spec = cfg.spec
+    if cfg.method == "rtn":
+        return rtn.rtn_quantize(w2d, spec), None
+    if cfg.method == "gptq":
+        return (
+            gptq.gptq_quantize(
+                w2d, sigma, spec, percdamp=cfg.percdamp, block_size=cfg.block_size
+            ),
+            None,
+        )
+    if cfg.method == "awq":
+        return awq.awq_quantize(w2d, sigma, spec), None
+    if cfg.method == "quantease":
+        w_init = None
+        if cfg.init_from_gptq:
+            w_init = gptq.gptq_quantize(
+                w2d, sigma, spec, percdamp=cfg.percdamp, block_size=cfg.block_size
+            )
+        w_hat, _ = quantease.quantease_quantize(
+            w2d,
+            sigma,
+            spec,
+            iterations=cfg.iterations,
+            percdamp=cfg.percdamp,
+            w_init=w_init,
+        )
+        return w_hat, None
+    if cfg.method == "spqr":
+        s = max(int(cfg.outlier_frac * w2d.size), 1)
+        w_hat, _ = spqr.spqr_quantize(
+            w2d, sigma, spec, s=s, percdamp=cfg.percdamp, block_size=cfg.block_size
+        )
+        return w_hat, None
+    if cfg.method in ("qe_outlier", "qe_outlier_struct"):
+        s = max(int(cfg.outlier_frac * w2d.size), 1)
+        res = outlier.outlier_quantease(
+            w2d,
+            sigma,
+            spec,
+            s=s,
+            iterations=cfg.iterations,
+            structured=cfg.method.endswith("struct"),
+            percdamp=cfg.percdamp,
+        )
+        return res.w_hat, res.h
+    raise ValueError(cfg.method)
+
+
+def _to_2d(w: jax.Array, d_in: int) -> jax.Array:
+    return w.reshape(d_in, -1).T.astype(jnp.float32)  # (out, in)
+
+
+def _from_2d(w2d: jax.Array, like: jax.Array) -> jax.Array:
+    d_in = like.shape[0] if like.ndim == 2 else int(np.prod(like.shape) // w2d.shape[0])
+    return w2d.T.reshape(like.shape).astype(like.dtype)
+
+
+def _emit_leaf(w_hat, h, like, cfg: PTQConfig):
+    if cfg.emit == "fake":
+        w_eff = w_hat if h is None else w_hat + h
+        return _from_2d(w_eff, like)
+    grid = compute_grid(w_hat, cfg.spec)
+    codes = quantize_codes(w_hat, grid)
+    packed = cfg.spec.bits == 4 and codes.shape[-1] % 2 == 0
+    if packed:
+        from repro.quant import pack_codes
+
+        codes = pack_codes(codes, 4)
+    qt = QuantizedTensor(
+        codes=codes,
+        scale=grid.scale,
+        zero=grid.zero,
+        bits=cfg.spec.bits,
+        group_size=cfg.spec.group_size,
+        packed=packed,
+    )
+    if h is not None:
+        s = max(int(cfg.outlier_frac * w_hat.size), 1)
+        flat = jnp.abs(h).reshape(-1)
+        _, idx = jax.lax.top_k(flat, s)
+        rows, cols = idx // h.shape[1], idx % h.shape[1]
+        qt = dataclasses.replace(
+            qt,
+            outlier_values=h.reshape(-1)[idx],
+            outlier_rows=rows.astype(jnp.int32),
+            outlier_cols=cols.astype(jnp.int32),
+        )
+    return qt
+
+
+def _sigma_from_records(xs: list[jax.Array]) -> jax.Array:
+    p = xs[0].shape[-1]
+    sigma = jnp.zeros((p, p), jnp.float32)
+    for x in xs:
+        x32 = x.astype(jnp.float32)
+        sigma = sigma + x32.T @ x32
+    return sigma
+
+
+def _quantize_block(p_blk: dict, records: dict, scope: str, cfg: PTQConfig, report: dict):
+    """Quantize every captured linear of one block, in place (returns copy)."""
+    new = dict(p_blk)
+    for name, w in p_blk.items():
+        if name not in QUANTIZABLE or f"{scope}/{name}" not in records:
+            continue
+        xs = records[f"{scope}/{name}"]
+        if name in _MOE_NAMES:
+            # xs: list of (E, C, d_in); per-expert Σ and per-expert quantize.
+            E = w.shape[0]
+            outs, hs = [], []
+            for e in range(E):
+                sigma = _sigma_from_records([x[e] for x in xs])
+                w2d = w[e].reshape(w.shape[1], -1).T.astype(jnp.float32)
+                w_hat, h = _quantize_one(w2d, sigma, cfg)
+                report[f"{scope}/{name}.e{e}"] = float(
+                    relative_error(w2d, w_hat if h is None else w_hat + h, sigma)
+                )
+                outs.append(w_hat)
+                hs.append(h)
+            if cfg.emit == "fake":
+                new[name] = jnp.stack(
+                    [
+                        _from_2d(o if h is None else o + h, w[0])
+                        for o, h in zip(outs, hs)
+                    ]
+                ).astype(w.dtype)
+            else:
+                qts = [
+                    _emit_leaf(o, h, w[0], cfg) for o, h in zip(outs, hs)
+                ]
+                new[name] = jax.tree.map(lambda *ls: jnp.stack(ls), *qts)
+        else:
+            sigma = _sigma_from_records(xs)
+            d_in = xs[0].shape[-1]
+            w2d = _to_2d(w, d_in)
+            w_hat, h = _quantize_one(w2d, sigma, cfg)
+            report[f"{scope}/{name}"] = float(
+                relative_error(w2d, w_hat if h is None else w_hat + h, sigma)
+            )
+            new[name] = _emit_leaf(w_hat, h, w, cfg)
+    return new
+
+
+def _slice_period(stack, i):
+    return jax.tree.map(lambda a: a[i], stack)
+
+
+def _set_period(stack, i, new_period):
+    return jax.tree.map(
+        lambda a, n: a.at[i].set(n.astype(a.dtype))
+        if not hasattr(n, "codes")
+        else n,
+        stack,
+        new_period,
+    )
+
+
+def ptq_quantize_model(
+    plan: M.ModelPlan,
+    params,
+    calib_batches: list[dict],
+    cfg: PTQConfig,
+):
+    """Quantize a model's decoder (+ encoder) stacks.
+
+    Returns (new_params, report) where report maps layer path → relative
+    reconstruction error (paper Fig. 2 metric).
+
+    ``emit="fake"`` keeps the stacked-scan param layout (dequantized values)
+    — usable by train_loss/prefill/decode directly.  ``emit="qt"`` returns
+    per-period *lists* of blocks with QuantizedTensor leaves (the serving
+    engine consumes this unrolled layout).
+    """
+    mcfg = plan.cfg
+    report: dict[str, float] = {}
+
+    # --- embed calibration batches once ---
+    xs, enc_outs = [], []
+    for batch in calib_batches:
+        tokens = batch["tokens"]
+        x = M._embed_tokens(plan, params, tokens)
+        if mcfg.n_prefix:
+            pre = M.apply_norm(params["prefix_ln"], batch["patches"].astype(plan.dtype), mcfg.norm)
+            x = jnp.concatenate([pre, x], axis=1)
+        if mcfg.pos == "learned":
+            S = x.shape[1]
+            x = x + jax.lax.dynamic_slice(
+                params["pos_emb"], (0, 0), (S, mcfg.d_model)
+            )[None].astype(plan.dtype)
+        xs.append(x)
+        enc_outs.append(None)
+
+    new_params = dict(params)
+
+    # --- encoder first (whisper): quantize, then freeze its outputs ---
+    if mcfg.family == "encdec":
+        enc_inputs = [
+            batch["frames"].astype(plan.dtype)
+            + params["enc_pos_emb"][None].astype(plan.dtype)
+            for batch in calib_batches
+        ]
+        new_params["enc"], enc_inputs = _quantize_stack(
+            plan, params["enc"], mcfg.enc_pattern, mcfg.n_enc_periods,
+            enc_inputs, "enc", cfg, report, enc_outs=None,
+        )
+        enc_outs = [
+            M.apply_norm(params["enc_final_norm"], e, mcfg.norm) for e in enc_inputs
+        ]
+
+    new_params["dec"], _ = _quantize_stack(
+        plan, params["dec"], mcfg.pattern, mcfg.n_periods, xs, "dec", cfg, report,
+        enc_outs=enc_outs,
+    )
+    return new_params, report
+
+
+def _quantize_stack(plan, stack, pattern, n_periods, xs, stack_name, cfg, report, enc_outs):
+    mcfg = plan.cfg
+    quantized_periods = []  # for emit="qt": list of {bi: block params}
+    stack_out = stack
+    for period in range(n_periods):
+        p_period = _slice_period(stack, period)
+        new_period = {}
+        for i, b in enumerate(pattern):
+            scope = f"{stack_name}.p{period}.b{i}"
+            records: dict = {}
+            # capture pass: current block, current (quantized-prefix) inputs
+            with capture_linear_inputs(records), capture_scope(scope):
+                for bi, x in enumerate(xs):
+                    pos = jnp.arange(x.shape[1])
+                    M._block_apply(
+                        mcfg, plan.heads, b, p_period[f"b{i}"], x,
+                        mode="train", pos_ids=pos,
+                        enc_out=None if enc_outs is None else enc_outs[bi],
+                    )
+            new_blk = _quantize_block(p_period[f"b{i}"], records, scope, cfg, report)
+            new_period[f"b{i}"] = new_blk
+            # recompute this block's outputs with quantized weights
+            blk_for_fwd = new_blk if cfg.emit == "fake" else new_blk
+            xs = [
+                M._block_apply(
+                    mcfg, plan.heads, b, blk_for_fwd, x,
+                    mode="train", pos_ids=jnp.arange(x.shape[1]),
+                    enc_out=None if enc_outs is None else enc_outs[bi],
+                )[0]
+                for bi, x in enumerate(xs)
+            ]
+        quantized_periods.append(new_period)
+        if cfg.emit == "fake":
+            stack_out = _set_period(stack_out, period, new_period)
+    if cfg.emit == "qt":
+        return quantized_periods, xs
+    return stack_out, xs

@@ -1,0 +1,87 @@
+"""Deterministic synthetic data pipeline (corpus, calibration, modality stubs).
+
+Offline container ⇒ no C4/WikiText; we synthesize a *learnable* corpus from a
+seeded order-1 Markov chain over the vocab with Zipfian marginals.  The chain
+gives a non-trivial optimal perplexity, so trained-then-quantized models
+separate RTN/GPTQ/QuantEase cleanly (benchmarks mirror the paper's tables on
+this corpus — DESIGN.md §7).
+
+Determinism & fault tolerance: batch ``i`` is a pure function of
+``(seed, i)`` — the pipeline "state" is just the step counter stored in
+checkpoints, so resume (or elastic re-sharding onto a different data-parallel
+layout) replays exactly.  Per-host sharding slices the batch by
+``jax.process_index()`` in real multi-host runs (single process here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["SyntheticCorpus", "DataConfig", "make_batch_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int = 256
+    seed: int = 1234
+    zipf_a: float = 1.2
+    branching: int = 8  # plausible successors per token
+
+
+class SyntheticCorpus:
+    """Order-1 Markov chain with Zipf marginals and limited branching."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab
+        marg = (np.arange(1, v + 1, dtype=np.float64)) ** (-cfg.zipf_a)
+        marg /= marg.sum()
+        # each token transitions to `branching` successors with Zipf weights
+        succ = np.stack([rng.choice(v, cfg.branching, replace=False) for _ in range(v)])
+        w = (np.arange(1, cfg.branching + 1)) ** (-1.0)
+        w /= w.sum()
+        self.succ = succ.astype(np.int32)
+        self.w = w
+        self.marg = marg
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+        out = np.empty((batch, seq), np.int32)
+        out[:, 0] = rng.choice(self.cfg.vocab, batch, p=self.marg)
+        choices = rng.choice(self.cfg.branching, (batch, seq), p=self.w)
+        for t in range(1, seq):
+            out[:, t] = self.succ[out[:, t - 1], choices[:, t]]
+        return out
+
+    def entropy_floor(self) -> float:
+        """Per-token entropy of the chain (nats) — the minimum achievable CE."""
+        return float(-(self.w * np.log(self.w)).sum())
+
+
+def make_batch_fn(
+    data_cfg: DataConfig,
+    model_cfg,
+    batch: int,
+    seq: int,
+):
+    """Returns batch(step) → dict of numpy arrays matching the model family."""
+    corpus = SyntheticCorpus(data_cfg)
+
+    def get(step: int) -> dict:
+        rng = np.random.default_rng((data_cfg.seed, step))
+        out = {"tokens": corpus.sample(rng, batch, seq)}
+        if model_cfg.family == "encdec":
+            out["frames"] = rng.standard_normal(
+                (batch, model_cfg.n_frames, model_cfg.d_model)
+            ).astype(np.float32)
+        if model_cfg.n_prefix:
+            out["patches"] = rng.standard_normal(
+                (batch, model_cfg.n_prefix, model_cfg.d_model)
+            ).astype(np.float32)
+        return out
+
+    return get, corpus

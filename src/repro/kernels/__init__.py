@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for QuantEase's compute hot-spots.
+
+* quantease_cd.py — intra-block CD sweep (the PTQ-time hot loop).
+* dequant_matmul.py — fused dequant+GEMM (the serve-time hot loop).
+* ops.py — jit'd dispatchers (TPU Mosaic vs CPU interpret).
+* ref.py — pure-jnp oracles, the contract for tests.
+"""

@@ -1,0 +1,68 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Callers (repro.core.quantease, repro.serve) use these entry points; the
+``interpret`` flag routes to Pallas interpret-mode on CPU (this container)
+and compiled Mosaic on real TPUs.  ``ref.py`` holds the oracles; the
+dispatchers never change semantics, only execution engines.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.quantease_cd import quantease_block_sweep_pallas
+
+__all__ = ["quantease_block_sweep", "dequant_matmul", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantease_block_sweep(
+    beta0, sig_blk, w_old_blk, scale_blk, zero_blk, *, n_levels, quantize, interpret=None
+):
+    if interpret is None:
+        interpret = not on_tpu()
+    return quantease_block_sweep_pallas(
+        beta0,
+        sig_blk,
+        w_old_blk,
+        scale_blk,
+        zero_blk,
+        n_levels=n_levels,
+        quantize=quantize,
+        interpret=interpret,
+    )
+
+
+def dequant_matmul(
+    x, codes, scale, zero, *, packed4=False, out_dtype=jnp.bfloat16, interpret=None
+):
+    """Serving GEMM.
+
+    Dispatch: Mosaic kernel on TPU; pure-XLA reference elsewhere (dequant +
+    dot — XLA fuses the dequant into the GEMM epilogue/prologue).  Pallas
+    *interpret* mode is reserved for kernel tests (``interpret=True``) — it
+    must never end up in lowered production graphs: its grid loops
+    materialize per-step buffers and wreck both memory and cost analysis.
+    Grouped grids always take the reference path.
+    """
+    if scale.ndim > 1 and scale.shape[1] > 1:
+        return ref.dequant_matmul_ref(x, codes, scale, zero, out_dtype=out_dtype)
+    if interpret is None:
+        if not on_tpu():
+            if packed4:
+                from repro.quant import unpack_codes
+
+                codes = unpack_codes(codes, 4, codes.shape[-1] * 2)
+            return ref.dequant_matmul_ref(x, codes, scale, zero, out_dtype=out_dtype)
+        interpret = False
+    s = scale.reshape(-1)
+    z = zero.reshape(-1)
+    return dequant_matmul_pallas(
+        x, codes, s, z, packed4=packed4, out_dtype=out_dtype, interpret=interpret
+    )

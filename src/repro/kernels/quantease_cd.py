@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: QuantEase intra-block coordinate-descent sweep.
+
+The blocked Algorithm 2 (see repro/core/quantease.py) reduces each iteration
+to, per column-block of width B:
+
+  1. one MXU matmul for the cross-block correction (done by XLA outside), and
+  2. a strictly-sequential sweep over the B columns inside the block — this
+     kernel.
+
+Row independence makes the sweep embarrassingly parallel over the q
+(output-channel) dimension, so the grid tiles q; each program keeps its
+(B × TQ) working set plus the (B × B) Σ̃ tile entirely in VMEM and runs the
+B-step recurrence with `jax.lax.fori_loop`:
+
+    corr_i  = Σ̃_blkᵀ[i, :] @ Δ            (VPU/MXU (1,B)×(B,TQ))
+    β_i     = β0[i] + corr_i
+    new_i   = quantize(β_i)  (or β_i on "unquantized heuristic" iterations)
+    Δ[i]    = old_i − new_i
+
+All operands are carried *transposed* — (B, TQ) instead of (TQ, B) — so the
+sequential index i addresses the sublane dimension (dynamic lane-dim slicing
+is slow on TPU; sublane slicing is free).
+
+VMEM budget per program (TQ=256, B=256, fp32):
+6 × 256×256×4 B (β0, old, scale, zero, new, Δ) + 256²×4 B (Σ̃ᵀ) ≈ 1.8 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quantease_block_sweep_pallas"]
+
+
+def _sweep_kernel(
+    beta0_t_ref,  # (B, TQ) f32
+    sig_t_ref,  # (B, B) f32 — Σ̃_blkᵀ (row i = Σ̃[:, i])
+    w_old_t_ref,  # (B, TQ) f32
+    scale_t_ref,  # (B, TQ) f32
+    zero_t_ref,  # (B, TQ) f32
+    w_new_t_ref,  # (B, TQ) f32 out
+    delta_t_ref,  # (B, TQ) f32 out — old − new, doubles as the Δ accumulator
+    *,
+    n_levels: int,
+    quantize: bool,
+    bsz: int,
+):
+    delta_t_ref[...] = jnp.zeros_like(delta_t_ref)
+
+    def body(i, _):
+        # corr = Σ̃[:, i] · Δ  — rows ≥ i of Δ are still zero, so no mask.
+        sig_row = sig_t_ref[pl.ds(i, 1), :]  # (1, B)
+        corr = jnp.dot(
+            sig_row, delta_t_ref[...], preferred_element_type=jnp.float32
+        )  # (1, TQ)
+        beta = beta0_t_ref[pl.ds(i, 1), :] + corr
+        if quantize:
+            sc = scale_t_ref[pl.ds(i, 1), :]
+            zc = zero_t_ref[pl.ds(i, 1), :]
+            codes = jnp.clip(jnp.round(beta / sc) + zc, 0, n_levels - 1)
+            new = (codes - zc) * sc
+        else:
+            new = beta
+        w_new_t_ref[pl.ds(i, 1), :] = new
+        delta_t_ref[pl.ds(i, 1), :] = w_old_t_ref[pl.ds(i, 1), :] - new
+        return 0
+
+    jax.lax.fori_loop(0, bsz, body, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_levels", "quantize", "tq", "interpret")
+)
+def quantease_block_sweep_pallas(
+    beta0: jax.Array,  # (q, B) f32
+    sig_blk: jax.Array,  # (B, B) f32
+    w_old_blk: jax.Array,  # (q, B) f32
+    scale_blk: jax.Array,  # (q, B) f32
+    zero_blk: jax.Array,  # (q, B) f32
+    *,
+    n_levels: int,
+    quantize: bool,
+    tq: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    q, bsz = beta0.shape
+    tq = min(tq, q)
+    pad_q = (-q) % tq
+    qp = q + pad_q
+
+    def prep(a):  # (q, B) → (B, qp) transposed + padded
+        if pad_q:
+            a = jnp.pad(a, ((0, pad_q), (0, 0)))
+        return a.T
+
+    beta0_t = prep(beta0)
+    w_old_t = prep(w_old_blk)
+    scale_t = prep(jnp.maximum(scale_blk, 1e-12))
+    zero_t = prep(zero_blk)
+    sig_t = sig_blk.T
+
+    kernel = functools.partial(
+        _sweep_kernel, n_levels=n_levels, quantize=quantize, bsz=bsz
+    )
+    grid = (qp // tq,)
+    w_new_t, delta_t = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, tq), lambda i: (0, i)),
+            pl.BlockSpec((bsz, bsz), lambda i: (0, 0)),
+            pl.BlockSpec((bsz, tq), lambda i: (0, i)),
+            pl.BlockSpec((bsz, tq), lambda i: (0, i)),
+            pl.BlockSpec((bsz, tq), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bsz, tq), lambda i: (0, i)),
+            pl.BlockSpec((bsz, tq), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, qp), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, qp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(beta0_t, sig_t, w_old_t, scale_t, zero_t)
+    return w_new_t.T[:q], delta_t.T[:q]

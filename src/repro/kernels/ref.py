@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *semantics* — kernels must match them bit-for-bit (up to fp
+reassociation tolerances) across the shape/dtype sweeps in
+tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantease_block_sweep_ref", "dequant_matmul_ref", "gram_ref"]
+
+
+def _quant_cols(x, scale, zero, n_levels):
+    codes = jnp.clip(jnp.round(x / scale) + zero, 0, n_levels - 1)
+    return (codes - zero) * scale
+
+
+def quantease_block_sweep_ref(
+    beta0: jax.Array,  # (q, B) f32 — P_blk − P̂_blk + cross-block correction
+    sig_blk: jax.Array,  # (B, B) f32 — Σ̃ block (zero diag, column-normalized)
+    w_old_blk: jax.Array,  # (q, B) f32 — Ŵ block at iteration start
+    scale_blk: jax.Array,  # (q, B) f32 — per-column scales
+    zero_blk: jax.Array,  # (q, B) f32 — per-column zero points
+    *,
+    n_levels: int,
+    quantize: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential CD sweep over the B columns of one block (Eq. 13 intra-block
+    term).  Returns (Ŵ_new block, Δ block = old − new)."""
+    q, bsz = beta0.shape
+
+    def col(delta, i):
+        corr = delta @ jax.lax.dynamic_slice(sig_blk, (0, i), (bsz, 1))[:, 0]
+        beta = jax.lax.dynamic_slice(beta0, (0, i), (q, 1))[:, 0] + corr
+        if quantize:
+            sc = jax.lax.dynamic_slice(scale_blk, (0, i), (q, 1))[:, 0]
+            zc = jax.lax.dynamic_slice(zero_blk, (0, i), (q, 1))[:, 0]
+            new = _quant_cols(beta, sc, zc, n_levels)
+        else:
+            new = beta
+        old = jax.lax.dynamic_slice(w_old_blk, (0, i), (q, 1))[:, 0]
+        delta = jax.lax.dynamic_update_slice(delta, (old - new)[:, None], (0, i))
+        return delta, new
+
+    delta, new_cols = jax.lax.scan(
+        col, jnp.zeros((q, bsz), jnp.float32), jnp.arange(bsz)
+    )
+    return new_cols.T, delta
+
+
+def dequant_matmul_ref(
+    x: jax.Array,  # (m, p) activations
+    codes: jax.Array,  # (q, p) uint8
+    scale: jax.Array,  # (q,) or (q, n_groups) f32
+    zero: jax.Array,  # same shape as scale
+    *,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """y = x @ dequant(codes)ᵀ — the serving GEMM oracle."""
+    q, p = codes.shape
+    if scale.ndim == 1:
+        scale = scale[:, None]
+        zero = zero[:, None]
+    n_groups = scale.shape[1]
+    gsz = -(-p // n_groups)
+    idx = jnp.arange(p) // gsz
+    w = (codes.astype(jnp.float32) - zero[:, idx]) * scale[:, idx]
+    return (x.astype(jnp.float32) @ w.T).astype(out_dtype)
+
+
+def gram_ref(x: jax.Array) -> jax.Array:
+    """Σ = X Xᵀ, fp32 accumulate (X: (p, n), any float dtype)."""
+    x = x.astype(jnp.float32)
+    return x @ x.T

@@ -1,0 +1,26 @@
+"""Production meshes (fixed by contract — see the dry-run spec).
+
+Functions, not module constants: importing this module must never touch
+jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_devices"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_devices(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

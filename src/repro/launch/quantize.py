@@ -1,0 +1,86 @@
+"""PTQ launcher: quantize a trained checkpoint with any paper method.
+
+    PYTHONPATH=src python -m repro.launch.quantize --arch stablelm_12b \
+        --reduce --ckpt-dir /tmp/repro_train --method quantease --bits 3
+"""
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--out-dir", default="/tmp/repro_quant")
+    ap.add_argument("--method", default="quantease",
+                    choices=["rtn", "gptq", "awq", "quantease", "spqr",
+                             "qe_outlier", "qe_outlier_struct"])
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--iterations", type=int, default=25)
+    ap.add_argument("--outlier-frac", type=float, default=0.01)
+    ap.add_argument("--group-size", type=int, default=0)
+    ap.add_argument("--calib-batches", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.solver import PTQConfig, ptq_quantize_model
+    from repro.data.pipeline import DataConfig, make_batch_fn
+    from repro.dist import checkpoint as ckpt
+    from repro.launch.train import reduced
+    from repro.models import make_plan, param_shapes
+    from repro.quant import GridSpec
+    from repro.train.optimizer import AdamWConfig, adamw_init
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg)
+    plan = make_plan(cfg, 1)
+
+    import jax
+
+    like_params = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), param_shapes(plan)
+    )
+    like = {"params": like_params, "opt": adamw_init(like_params, AdamWConfig())}
+    state, manifest = ckpt.load_checkpoint(args.ckpt_dir, like)
+    params = state["params"]
+    print(f"loaded checkpoint step {manifest['step']}")
+
+    batch_fn, _ = make_batch_fn(
+        DataConfig(vocab=cfg.vocab), cfg, batch=4, seq=args.seq
+    )
+    calib = [
+        {k: jnp.asarray(v) for k, v in batch_fn(50_000 + i).items()}
+        for i in range(args.calib_batches)
+    ]
+    pcfg = PTQConfig(
+        method=args.method,
+        spec=GridSpec(bits=args.bits, group_size=args.group_size or None),
+        iterations=args.iterations,
+        outlier_frac=args.outlier_frac,
+    )
+    qparams, report = ptq_quantize_model(plan, params, calib, pcfg)
+    ckpt.save_checkpoint(
+        args.out_dir, manifest["step"],
+        {"params": qparams},
+        meta={"method": args.method, "bits": args.bits,
+              "report": {k: float(v) for k, v in report.items()}},
+    )
+    import numpy as np
+
+    errs = np.array(list(report.values()))
+    print(json.dumps({
+        "layers": len(report),
+        "mean_rel_error": float(errs.mean()),
+        "max_rel_error": float(errs.max()),
+        "out_dir": args.out_dir,
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,285 @@
+"""Per-cell lowering specs: (arch × input-shape) → abstract args + step fn.
+
+The 40-cell matrix: 10 archs × {train_4k, prefill_32k, decode_32k,
+long_500k}.  ``long_500k`` runs only for sub-quadratic archs (mamba2 SSD,
+jamba hybrid, mixtral SWA) — pure full-attention archs are recorded as
+explicit skips (DESIGN.md §5).
+
+Everything returned is abstract (ShapeDtypeStruct + NamedSharding): the
+dry-run lowers and compiles without allocating a byte of model state.
+Serving cells (prefill/decode) lower on **QuantizedTensor** weights — the
+paper's deployment artifact — so their memory_analysis shows the 4-bit
+footprint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.dist.sharding import Rules, axis_rules, make_rules
+from repro.models import (
+    cache_axes,
+    cache_shapes,
+    make_plan,
+    param_axes,
+    param_shapes,
+)
+from repro.models import model as M
+from repro.serve.qparams import qt_param_axes, qt_param_shapes, qt_rules_extra
+from repro.train.optimizer import AdamWConfig, adamw_init, moment_axes
+from repro.train.train_step import make_train_step
+
+__all__ = ["CELLS", "LONG_OK", "cell_is_skipped", "build_cell", "arch_train_knobs"]
+
+CELLS = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+LONG_OK = {"mamba2_2_7b", "jamba_1_5_large", "mixtral_8x22b"}
+
+
+def cell_is_skipped(arch: str, shape: str) -> Optional[str]:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return "full-attention arch: 500k dense decode out of contract (DESIGN.md §5)"
+    return None
+
+
+def arch_train_knobs(arch: str) -> dict:
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    fsdp = n > 8e9
+    mb = {
+        "jamba_1_5_large": 8,
+        "mixtral_8x22b": 16,
+        "qwen15_32b": 8,
+        "llava_next_34b": 8,
+        "gemma2_27b": 8,
+        "stablelm_12b": 4,
+        "phi3_mini_3_8b": 2,
+        "whisper_large_v3": 8,
+        "olmoe_1b_7b": 4,
+        "mamba2_2_7b": 8,
+    }[arch]
+    return dict(
+        fsdp=fsdp,
+        n_microbatches=mb,
+        moments="int8" if fsdp else "fp32",
+        qgather=False,  # int8 FSDP gather: XLA convert-pair elimination defeats
+        # the narrow-dtype AG on this backend (see EXPERIMENTS §Perf H3) — needs
+        # explicit shard_map collectives; code kept in dist/qgather.py
+    )
+
+
+def _rules_for(
+    plan, mesh, *, fsdp: bool, seq_shard_cache: bool = False, batch: int = 0
+) -> Rules:
+    cfg = plan.cfg
+    extra = dict(qt_rules_extra(plan, mesh.shape["model"]))
+    # Tiny global batches (long_500k B=1) can't shard the batch axis.
+    from repro.dist.sharding import mesh_axis_size
+
+    batch_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    if batch and batch % mesh_axis_size(mesh, batch_axes) != 0:
+        extra["batch"] = None
+    return make_rules(
+        mesh,
+        n_heads=plan.heads.h_pad,
+        n_kv_heads=plan.heads.n_kv,
+        head_dim=cfg.hd,
+        d_ff=cfg.d_ff,
+        n_experts=cfg.n_experts,
+        vocab=plan.vocab_pad,
+        d_model=cfg.d_model,
+        fsdp=fsdp,
+        seq_sharded_cache=seq_shard_cache,
+        extra=extra,
+    )
+
+
+def _shard_tree(shapes_tree, axes_tree, rules: Rules):
+    flat_s, tdef = jax.tree.flatten(shapes_tree)
+    flat_ax = jax.tree.flatten(axes_tree, is_leaf=lambda x: isinstance(x, tuple))[0]
+    assert len(flat_s) == len(flat_ax), (len(flat_s), len(flat_ax))
+    out = [
+        jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rules.sharding(ax))
+        for s, ax in zip(flat_s, flat_ax)
+    ]
+    return jax.tree.unflatten(tdef, out)
+
+
+def _batch_specs(plan, rules, batch: int, seq: int, kind: str):
+    cfg = plan.cfg
+    bs = lambda shape, dt, ax: jax.ShapeDtypeStruct(
+        shape, dt, sharding=rules.sharding(ax)
+    )
+    n_text = seq - (cfg.n_prefix or 0)
+    out = {"tokens": bs((batch, n_text), jnp.int32, ("batch", None))}
+    if cfg.family == "encdec":
+        out["frames"] = bs(
+            (batch, cfg.n_frames, cfg.d_model), jnp.bfloat16, ("batch", None, None)
+        )
+    if cfg.n_prefix:
+        out["patches"] = bs(
+            (batch, cfg.n_prefix, cfg.d_model), jnp.bfloat16, ("batch", None, None)
+        )
+    return out
+
+
+@dataclasses.dataclass
+class CellSpec:
+    fn: object  # callable to jit
+    args: tuple  # abstract args
+    donate: tuple  # donate_argnums
+    model_flops: float
+    rules: Rules
+    note: str = ""
+    ideal_bytes: float = 0.0  # one pass over all state, per device
+
+
+def _tree_bytes(tree) -> float:
+    tot = 0.0
+    for leaf in jax.tree.leaves(tree):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        tot += n * jnp.dtype(leaf.dtype).itemsize
+    return tot
+
+
+def build_cell(arch: str, shape: str, mesh, bits: int = 4) -> CellSpec:
+    cfg = get_config(arch)
+    cell = CELLS[shape]
+    seq, batch, kind = cell["seq"], cell["batch"], cell["kind"]
+    batch_shards = 1
+    for ax in ("pod", "data"):
+        batch_shards *= mesh.shape.get(ax, 1)
+    plan = make_plan(
+        cfg, mesh.shape["model"],
+        kv_cache_dtype="bf16" if kind == "train" else "int8",
+        dispatch_groups=batch_shards if batch % batch_shards == 0 else 1,
+    )
+    knobs = arch_train_knobs(arch)
+
+    if kind == "train":
+        rules = _rules_for(plan, mesh, fsdp=knobs["fsdp"], batch=batch)
+        if knobs["fsdp"] and knobs.get("qgather"):
+            from repro.dist.qgather import make_period_transform
+
+            rep_rules = _rules_for(plan, mesh, fsdp=False, batch=batch)
+            dec_axes = param_axes(plan)["dec"]
+            period_axes = jax.tree.map(
+                lambda ax: tuple(ax[1:]), dec_axes,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+            plan = dataclasses.replace(
+                plan,
+                param_transform=make_period_transform(period_axes, rules, rep_rules),
+            )
+        with axis_rules(rules):
+            p_shapes = param_shapes(plan)
+            p_sharded = _shard_tree(p_shapes, param_axes(plan), rules)
+            opt_cfg = AdamWConfig(moments=knobs["moments"])
+            opt_shapes = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), p_shapes)
+            opt_sharded = _shard_tree(
+                opt_shapes, moment_axes(p_shapes, param_axes(plan), opt_cfg), rules
+            )
+            batch_specs = _batch_specs(plan, rules, batch, seq, kind)
+            # Pin per-microbatch grads to the param layout for every arch:
+            # without it GSPMD drops the sharding of stacked fp32 grads in
+            # the scan transpose and replicates whole weight-stacks
+            # (measured: 3.35 GB fp32[64,80,64,2560] buffers on mamba2).
+            flat_ax = jax.tree.flatten(
+                param_axes(plan), is_leaf=lambda x: isinstance(x, tuple)
+            )[0]
+            flat_p, tdef = jax.tree.flatten(p_shapes)
+            grad_sh = jax.tree.unflatten(
+                tdef, [rules.sharding(ax) for ax in flat_ax]
+            )
+            step = make_train_step(
+                plan, opt_cfg, knobs["n_microbatches"], grad_shardings=grad_sh
+            )
+
+            def fn(params, opt_state, b):
+                with axis_rules(rules):
+                    return step(params, opt_state, b)
+
+        tokens = batch * seq
+        flops = 6.0 * cfg.active_param_count() * tokens
+        n_dev = 1
+        for v in mesh.shape.values():
+            n_dev *= v
+        return CellSpec(
+            fn=fn,
+            args=(p_sharded, opt_sharded, batch_specs),
+            donate=(0, 1),
+            model_flops=flops,
+            rules=rules,
+            note=f"fsdp={knobs['fsdp']} mb={knobs['n_microbatches']} moments={knobs['moments']}",
+            ideal_bytes=(_tree_bytes(p_sharded) * 2 + _tree_bytes(opt_sharded)) / n_dev,
+        )
+
+    # ---- serving cells: quantized weights ----
+    seq_shard = kind == "decode" and batch == 1
+    rules = _rules_for(plan, mesh, fsdp=knobs["fsdp"], seq_shard_cache=seq_shard, batch=batch)
+    with axis_rules(rules):
+        p_sharded = _shard_tree(qt_param_shapes(plan, bits), qt_param_axes(plan), rules)
+        cache_sh = _shard_tree(
+            cache_shapes(plan, batch, seq),
+            cache_axes(plan, seq_shard=seq_shard),
+            rules,
+        )
+
+    if kind == "prefill":
+        batch_specs = _batch_specs(plan, rules, batch, seq, kind)
+
+        def fn(params, b, cache):
+            with axis_rules(rules):
+                return M.prefill(plan, params, b, cache)
+
+        tokens = batch * seq
+        flops = 2.0 * cfg.active_param_count() * tokens
+        n_dev = 1
+        for v in mesh.shape.values():
+            n_dev *= v
+        return CellSpec(
+            fn=fn,
+            args=(p_sharded, batch_specs, cache_sh),
+            donate=(2,),
+            model_flops=flops,
+            rules=rules,
+            note=f"qt{bits} serve-prefill",
+            ideal_bytes=(_tree_bytes(p_sharded) + _tree_bytes(cache_sh)) / n_dev,
+        )
+
+    # decode
+    tok = jax.ShapeDtypeStruct(
+        (batch, 1), jnp.int32, sharding=rules.sharding(("batch", None))
+    )
+    pos = jnp.int32(seq - 1)
+
+    def fn(params, tokens, cache):
+        with axis_rules(rules):
+            return M.decode_step(plan, params, tokens, cache, pos)
+
+    flops = 2.0 * cfg.active_param_count() * batch
+    n_dev = 1
+    for v in mesh.shape.values():
+        n_dev *= v
+    return CellSpec(
+        fn=fn,
+        args=(p_sharded, tok, cache_sh),
+        donate=(2,),
+        model_flops=flops,
+        rules=rules,
+        ideal_bytes=(_tree_bytes(p_sharded) + _tree_bytes(cache_sh)) / n_dev,
+        note=f"qt{bits} decode seq_shard_cache={seq_shard}",
+    )

@@ -1,0 +1,29 @@
+"""Model zoo: one generic period-scanned stack covering all 10 assigned archs."""
+
+from repro.models.model import (
+    ModelPlan,
+    make_plan,
+    init_params,
+    init_cache,
+    cache_shapes,
+    cache_axes,
+    param_shapes,
+    param_axes,
+    train_loss,
+    prefill,
+    decode_step,
+)
+
+__all__ = [
+    "ModelPlan",
+    "make_plan",
+    "init_params",
+    "init_cache",
+    "cache_shapes",
+    "cache_axes",
+    "param_shapes",
+    "param_axes",
+    "train_loss",
+    "prefill",
+    "decode_step",
+]

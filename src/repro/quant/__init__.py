@@ -1,0 +1,34 @@
+"""Quantization substrate: uniform grids, code packing, quantized tensors.
+
+This package contains the *representation* layer shared by every PTQ
+algorithm in :mod:`repro.core` and by the quantized serving path in
+:mod:`repro.serve` / :mod:`repro.kernels`.
+"""
+
+from repro.quant.grid import (
+    GridSpec,
+    Grid,
+    compute_grid,
+    compute_grid_excluding_outliers,
+    quantize_codes,
+    dequantize_codes,
+    quantize_dequantize,
+)
+from repro.quant.pack import pack_codes, unpack_codes, packed_words_per_row
+from repro.quant.qtensor import QuantizedTensor, quantize_tensor, dequantize_tensor
+
+__all__ = [
+    "GridSpec",
+    "Grid",
+    "compute_grid",
+    "compute_grid_excluding_outliers",
+    "quantize_codes",
+    "dequantize_codes",
+    "quantize_dequantize",
+    "pack_codes",
+    "unpack_codes",
+    "packed_words_per_row",
+    "QuantizedTensor",
+    "quantize_tensor",
+    "dequantize_tensor",
+]

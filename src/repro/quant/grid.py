@@ -1,0 +1,170 @@
+"""Uniform per-channel / per-group quantization grids.
+
+The paper (QuantEase §2.1) quantizes each output channel ``i`` of a weight
+matrix ``W ∈ R^{q×p}`` onto a finite uniformly-spaced set ``Q_i``.  Following
+GPTQ's convention we parameterize ``Q_i`` by an (asymmetric) affine grid::
+
+    Q_i = { s_i * (c - z_i) : c ∈ {0, ..., 2^bits - 1} }
+
+so the nearest-grid-point operator is ``q_i(x) = s_i * (clip(round(x/s_i) +
+z_i, 0, 2^b-1) - z_i)``.  ``group_size`` generalizes to one (s, z) pair per
+contiguous group of input columns (the paper doesn't use grouping for its
+headline results but notes it is trivially compatible; we support it as a
+first-class option).
+
+All math is fp32; shapes use the paper's layout ``W: (q, p)`` = (out, in).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "GridSpec",
+    "Grid",
+    "compute_grid",
+    "compute_grid_excluding_outliers",
+    "quantize_codes",
+    "dequantize_codes",
+    "quantize_dequantize",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Static description of a quantization grid.
+
+    Attributes:
+      bits: code width (2, 3, 4 or 8).
+      symmetric: if True, zero-point is fixed at the grid midpoint
+        (``z = 2^{b-1}``) and scale is set from max(|W|); if False (default,
+        matching GPTQ/QuantEase experiments), asymmetric min/max affine grid.
+      group_size: columns per (scale, zero) group; ``None`` means one group
+        spanning the whole row (per-channel, as in the paper).
+    """
+
+    bits: int = 4
+    symmetric: bool = False
+    group_size: Optional[int] = None
+
+    def __post_init__(self):
+        if self.bits not in (2, 3, 4, 8):
+            raise ValueError(f"unsupported bit-width {self.bits}")
+        if self.group_size is not None and self.group_size <= 0:
+            raise ValueError("group_size must be positive")
+
+    @property
+    def n_levels(self) -> int:
+        return 1 << self.bits
+
+    def n_groups(self, p: int) -> int:
+        g = self.group_size or p
+        return -(-p // g)  # ceil
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Grid:
+    """Concrete grid: per-(row, group) scales and zero-points.
+
+    ``scale``/``zero``: fp32 arrays of shape ``(q, n_groups)``.
+    ``zero`` is kept in fp32 (it is integral by construction but fp32 avoids
+    dtype churn inside the CD inner loop).  Registered as a pytree with the
+    spec static, so a Grid can cross jit boundaries.
+    """
+
+    spec: GridSpec = dataclasses.field(metadata=dict(static=True))
+    scale: jax.Array = dataclasses.field(default=None)
+    zero: jax.Array = dataclasses.field(default=None)
+
+    def per_column(self, p: int) -> tuple[jax.Array, jax.Array]:
+        """Expand (q, n_groups) → (q, p) per-column scale/zero views."""
+        g = self.spec.group_size or p
+        idx = jnp.arange(p) // g
+        return self.scale[:, idx], self.zero[:, idx]
+
+
+def _group_reduce(w: jax.Array, group_size: Optional[int], fn) -> jax.Array:
+    """Reduce (q, p) → (q, n_groups) with `fn` over each column group."""
+    q, p = w.shape
+    g = group_size or p
+    n_groups = -(-p // g)
+    pad = n_groups * g - p
+    if pad:
+        # Pad with edge values so padding never widens the range.
+        w = jnp.concatenate([w, jnp.repeat(w[:, -1:], pad, axis=1)], axis=1)
+    return fn(w.reshape(q, n_groups, g), axis=2)
+
+
+def compute_grid(w: jax.Array, spec: GridSpec) -> Grid:
+    """Min/max (or symmetric max-abs) grid from the weights themselves."""
+    w = w.astype(jnp.float32)
+    n = spec.n_levels - 1
+    if spec.symmetric:
+        amax = _group_reduce(jnp.abs(w), spec.group_size, jnp.max)
+        scale = jnp.maximum(2.0 * amax / n, 1e-12)
+        zero = jnp.full_like(scale, float(1 << (spec.bits - 1)))
+    else:
+        wmin = jnp.minimum(_group_reduce(w, spec.group_size, jnp.min), 0.0)
+        wmax = jnp.maximum(_group_reduce(w, spec.group_size, jnp.max), 0.0)
+        scale = jnp.maximum((wmax - wmin) / n, 1e-12)
+        zero = jnp.round(-wmin / scale)
+    return Grid(spec=spec, scale=scale, zero=zero)
+
+
+def compute_grid_excluding_outliers(
+    w: jax.Array, spec: GridSpec, outlier_mask: jax.Array
+) -> Grid:
+    """Grid over non-outlier weights only (QuantEase §4.3 range shrink).
+
+    The outlier-aware formulation removes the top-s magnitude weights from the
+    quantization pool before computing per-channel ranges; ``outlier_mask`` is
+    a boolean (q, p) array, True where the weight is an outlier.
+    """
+    w = w.astype(jnp.float32)
+    n = spec.n_levels - 1
+    keep = ~outlier_mask
+    if spec.symmetric:
+        amax = _group_reduce(jnp.where(keep, jnp.abs(w), 0.0), spec.group_size, jnp.max)
+        scale = jnp.maximum(2.0 * amax / n, 1e-12)
+        zero = jnp.full_like(scale, float(1 << (spec.bits - 1)))
+    else:
+        big = jnp.float32(3.4e38)
+        wmin = jnp.minimum(
+            _group_reduce(jnp.where(keep, w, big), spec.group_size, jnp.min), 0.0
+        )
+        wmax = jnp.maximum(
+            _group_reduce(jnp.where(keep, w, -big), spec.group_size, jnp.max), 0.0
+        )
+        scale = jnp.maximum((wmax - wmin) / n, 1e-12)
+        zero = jnp.round(-wmin / scale)
+    return Grid(spec=spec, scale=scale, zero=zero)
+
+
+def quantize_codes(w: jax.Array, grid: Grid) -> jax.Array:
+    """Nearest-grid-point codes: (q, p) fp → (q, p) uint8."""
+    q, p = w.shape
+    scale, zero = grid.per_column(p)
+    n = grid.spec.n_levels - 1
+    codes = jnp.clip(jnp.round(w.astype(jnp.float32) / scale) + zero, 0, n)
+    return codes.astype(jnp.uint8)
+
+
+def dequantize_codes(codes: jax.Array, grid: Grid, dtype=jnp.float32) -> jax.Array:
+    q, p = codes.shape
+    scale, zero = grid.per_column(p)
+    return ((codes.astype(jnp.float32) - zero) * scale).astype(dtype)
+
+
+def quantize_dequantize(w: jax.Array, grid: Grid) -> jax.Array:
+    """The operator ``q_i(·)`` of the paper (Eq. 2), vectorized: fp32 → fp32
+    nearest grid value.  This is the exact map used inside every CD update."""
+    q, p = w.shape
+    scale, zero = grid.per_column(p)
+    n = grid.spec.n_levels - 1
+    codes = jnp.clip(jnp.round(w.astype(jnp.float32) / scale) + zero, 0, n)
+    return (codes - zero) * scale

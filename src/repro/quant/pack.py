@@ -1,0 +1,79 @@
+"""Bit-packing of quantization codes into dense uint8 storage.
+
+Storage layout: codes (…, p) uint8 with values < 2^bits are packed along the
+last axis into ``ceil(p * bits / 8)`` bytes, little-endian within each byte
+(code k occupies bits ``[ (k*bits) % 8, ... )`` of byte ``(k*bits)//8``).
+2-, 4- and 8-bit codes never straddle byte boundaries; 3-bit codes do, and
+are handled by the generic bit-blit path (packed 3-bit is a *storage /
+checkpoint* format — the serving kernels consume 2/4/8-bit packed planes or
+raw uint8 codes; see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pack_codes", "unpack_codes", "packed_words_per_row"]
+
+
+def packed_words_per_row(p: int, bits: int) -> int:
+    return -(-p * bits // 8)
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """(…, p) uint8 codes → (…, ceil(p*bits/8)) uint8 packed."""
+    if codes.dtype != jnp.uint8:
+        codes = codes.astype(jnp.uint8)
+    p = codes.shape[-1]
+    if bits == 8:
+        return codes
+    if bits in (2, 4):
+        per_byte = 8 // bits
+        pad = (-p) % per_byte
+        if pad:
+            codes = jnp.concatenate(
+                [codes, jnp.zeros(codes.shape[:-1] + (pad,), jnp.uint8)], axis=-1
+            )
+        grouped = codes.reshape(codes.shape[:-1] + (-1, per_byte)).astype(jnp.uint32)
+        shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits)
+        packed = (grouped << shifts).sum(axis=-1, dtype=jnp.uint32)
+        return packed.astype(jnp.uint8)
+    if bits == 3:
+        # Generic bit-blit via a (p, 3)-bit boolean plane.
+        bitplane = (
+            (codes[..., :, None].astype(jnp.uint32) >> jnp.arange(3, dtype=jnp.uint32))
+            & 1
+        ).reshape(codes.shape[:-1] + (p * 3,))
+        nbytes = packed_words_per_row(p, 3)
+        pad = nbytes * 8 - p * 3
+        if pad:
+            bitplane = jnp.concatenate(
+                [bitplane, jnp.zeros(bitplane.shape[:-1] + (pad,), bitplane.dtype)],
+                axis=-1,
+            )
+        by = bitplane.reshape(bitplane.shape[:-1] + (nbytes, 8))
+        packed = (by << jnp.arange(8, dtype=jnp.uint32)).sum(axis=-1, dtype=jnp.uint32)
+        return packed.astype(jnp.uint8)
+    raise ValueError(f"unsupported bits={bits}")
+
+
+def unpack_codes(packed: jax.Array, bits: int, p: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`; returns (…, p) uint8 codes."""
+    if bits == 8:
+        return packed[..., :p]
+    if bits in (2, 4):
+        per_byte = 8 // bits
+        mask = jnp.uint8((1 << bits) - 1)
+        shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits)
+        codes = (packed[..., :, None].astype(jnp.uint32) >> shifts) & mask
+        return codes.reshape(packed.shape[:-1] + (-1,))[..., :p].astype(jnp.uint8)
+    if bits == 3:
+        bitplane = (
+            (packed[..., :, None].astype(jnp.uint32) >> jnp.arange(8, dtype=jnp.uint32))
+            & 1
+        ).reshape(packed.shape[:-1] + (-1,))[..., : p * 3]
+        tri = bitplane.reshape(bitplane.shape[:-1] + (p, 3))
+        codes = (tri << jnp.arange(3, dtype=jnp.uint32)).sum(axis=-1, dtype=jnp.uint32)
+        return codes.astype(jnp.uint8)
+    raise ValueError(f"unsupported bits={bits}")

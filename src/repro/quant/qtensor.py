@@ -1,0 +1,113 @@
+"""QuantizedTensor — the pytree carried by quantized checkpoints & serving.
+
+Layout convention matches the paper: a linear layer computes ``y = x @ W^T``
+with ``W: (q, p)`` (out, in).  A ``QuantizedTensor`` stores:
+
+  * ``codes``  — (q, p) uint8 quantization codes (kept *unpacked* in memory;
+    :mod:`repro.quant.pack` provides the packed storage format used by
+    checkpoints, and the Pallas dequant-matmul consumes either),
+  * ``scale`` / ``zero`` — (q, n_groups) fp32 affine grid,
+  * ``outlier_values`` / ``outlier_rows`` / ``outlier_cols`` — optional COO
+    rank-s correction ``H`` (QuantEase §4: W ≈ Ŵ + H, ‖H‖₀ ≤ s), padded to a
+    static ``s`` so the pytree has static shapes (padding entries carry
+    value 0 and index 0 — a zero-valued update is a no-op),
+  * ``outlier_col_idx`` / ``outlier_col_vals`` — optional *structured* column
+    outliers (whole fp columns; QuantEase §4.3 "Structured Outliers").
+
+The effective weight is ``W_eff = dequant(codes) + H`` (element-wise H wins
+over the quantized value only through addition — QuantEase's formulation is
+additive, so no masking is required at serve time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.grid import Grid, GridSpec, compute_grid, quantize_codes
+
+__all__ = ["QuantizedTensor", "quantize_tensor", "dequantize_tensor"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedTensor:
+    codes: jax.Array  # (q, p) uint8 — or (q, p/2) when packed (int4)
+    scale: jax.Array  # (q, n_groups) fp32
+    zero: jax.Array  # (q, n_groups) fp32
+    bits: int = dataclasses.field(metadata=dict(static=True), default=4)
+    group_size: Optional[int] = dataclasses.field(
+        metadata=dict(static=True), default=None
+    )
+    packed: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    # Unstructured outliers (COO, statically padded).
+    outlier_values: Optional[jax.Array] = None  # (s,) fp32
+    outlier_rows: Optional[jax.Array] = None  # (s,) int32
+    outlier_cols: Optional[jax.Array] = None  # (s,) int32
+    # Structured (column) outliers.
+    outlier_col_idx: Optional[jax.Array] = None  # (c,) int32
+    outlier_col_vals: Optional[jax.Array] = None  # (q, c) fp32
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        if self.packed:
+            return (*self.codes.shape[:-1], self.codes.shape[-1] * (8 // self.bits))
+        return self.codes.shape
+
+    def unpacked_codes(self) -> jax.Array:
+        if not self.packed:
+            return self.codes
+        from repro.quant.pack import unpack_codes
+
+        p = self.codes.shape[-1] * (8 // self.bits)
+        return unpack_codes(self.codes, self.bits, p)
+
+    @property
+    def spec(self) -> GridSpec:
+        return GridSpec(bits=self.bits, group_size=self.group_size)
+
+    @property
+    def grid(self) -> Grid:
+        return Grid(spec=self.spec, scale=self.scale, zero=self.zero)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return dequantize_tensor(self, dtype=dtype)
+
+    def bits_per_weight(self) -> float:
+        """Average storage bits/weight incl. outlier overhead (paper §5.4
+        accounting: each unstructured outlier ≈ 32 bits value + ~index)."""
+        q, p = self.shape
+        total = float(q * p * self.bits)
+        n_groups = self.scale.shape[1]
+        total += q * n_groups * 32 * 2  # scales + zeros
+        if self.outlier_values is not None:
+            total += self.outlier_values.shape[0] * (16 + 32)  # val fp16 + idx
+        if self.outlier_col_idx is not None:
+            total += self.outlier_col_vals.size * 16
+        return total / (q * p)
+
+
+def quantize_tensor(w: jax.Array, spec: GridSpec) -> QuantizedTensor:
+    """RTN-style direct quantization into a QuantizedTensor (no outliers)."""
+    grid = compute_grid(w, spec)
+    return QuantizedTensor(
+        codes=quantize_codes(w, grid),
+        scale=grid.scale,
+        zero=grid.zero,
+        bits=spec.bits,
+        group_size=spec.group_size,
+    )
+
+
+def dequantize_tensor(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    q, p = qt.shape
+    scale, zero = qt.grid.per_column(p)
+    w = (qt.unpacked_codes().astype(jnp.float32) - zero) * scale
+    if qt.outlier_values is not None:
+        w = w.at[qt.outlier_rows, qt.outlier_cols].add(qt.outlier_values)
+    if qt.outlier_col_idx is not None:
+        w = w.at[:, qt.outlier_col_idx].set(qt.outlier_col_vals)
+    return w.astype(dtype)

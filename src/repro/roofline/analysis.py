@@ -1,0 +1,186 @@
+"""Roofline analysis from compiled artifacts (no hardware required).
+
+Three terms per (arch × shape × mesh), all in seconds **per step**:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = Σ link-bytes per device / ICI_bw
+
+`compiled.cost_analysis()` on the SPMD-partitioned module reports
+**per-device** flops / bytes (verified empirically — see DESIGN.md §3), so
+no ÷chips is applied.  Collective bytes are not in cost_analysis: we parse
+the post-partitioning HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, converting
+to per-device *link* bytes with ring-algorithm factors over the size of the
+participating group.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+__all__ = ["HW", "RooflineReport", "analyze_compiled", "collective_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9  # per link (one direction)
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{ ")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> dict:
+    """Per-device *link* bytes by collective kind (ring-algorithm factors).
+
+    For a group of size g over per-device output/input bytes b:
+      all-gather:        each device receives (g−1)/g · (total bytes) ≈ b_out·(g−1)/g
+      reduce-scatter:    same as all-gather on input bytes
+      all-reduce:        2·(g−1)/g · b (ring RS+AG)
+      all-to-all:        (g−1)/g · b
+      collective-permute: b
+    Output-shape bytes are HLO *result* shapes, which are already global for
+    AG (gathered) and per-device for RS — we account accordingly.
+    """
+    out = {
+        "all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0,
+    }
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # avoid double-count of async pairs (count the -start)
+        b = _shape_bytes(shape_str)
+        g = _group_size(line, n_devices)
+        if g <= 1 or b == 0:
+            continue
+        f = (g - 1) / g
+        if kind == "all-gather":
+            out[kind] += b * f  # result = gathered global shape
+        elif kind == "reduce-scatter":
+            out[kind] += b * (g - 1)  # result = per-device shard
+        elif kind == "all-reduce":
+            out[kind] += 2 * b * f  # ring RS + AG
+        elif kind == "all-to-all":
+            out[kind] += b * f
+        else:  # collective-permute
+            out[kind] += b
+        counts[kind] += 1
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_link_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    model_flops_ratio: float  # MODEL_FLOPS / (HLO_FLOPs × chips)
+    coll_detail: dict
+    memory_stats: dict
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(
+    compiled,
+    n_devices: int,
+    model_flops: float,
+    hw: HW = HW(),
+) -> RooflineReport:
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    hlo = compiled.as_text()
+    # Trip-count-aware re-derivation: XLA's cost_analysis() counts while
+    # bodies once (scan-over-layers would be undercounted ~100×) — see
+    # hlo_cost.py.  The raw cost_analysis numbers are kept for reference.
+    cs = analyze_hlo(hlo, n_devices)
+    flops = cs.flops
+    byts = cs.hbm_bytes
+    coll = dict(cs.collective_by_kind)
+    coll["counts"] = cs.collective_counts
+    coll["trip_counts"] = cs.while_trip_counts[:50]
+    link_bytes = cs.collective_link_bytes
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    collective_s = link_bytes / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    mem = compiled.memory_analysis()
+    memory_stats = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_hbm_est": mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes,
+    }
+    return RooflineReport(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_link_bytes=link_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=max(terms, key=terms.get),
+        model_flops=model_flops,
+        model_flops_ratio=model_flops / max(flops * n_devices, 1.0),
+        coll_detail=coll,
+        memory_stats=memory_stats,
+    )

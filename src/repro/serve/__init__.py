@@ -1,0 +1,1 @@
+"""Quantized serving: params, engine, batched requests."""

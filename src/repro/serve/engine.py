@@ -1,0 +1,139 @@
+"""Batched serving engine for quantized models (continuous batching).
+
+Request lifecycle (vLLM-style, sized to this framework's scope):
+
+  submit → waiting queue → (padded) prefill into a free slot → shared
+  batched decode steps with **per-slot positions** → finished
+
+Up to ``max_batch`` sequences share one jitted decode executable; finished
+slots are refilled from the queue between steps (continuous batching — the
+decode step takes a (B,) position vector, so slots at different depths
+coexist).  Prefills are right-padded to ``prefill_pad`` buckets so one
+prefill executable serves all prompt lengths; the prompt's *last real
+token* is replayed as the first decode so padding never pollutes the
+distribution (pad positions remain invalid: each slot's validity mask is
+its own position).
+
+Weights may be dense bf16 or QuantizedTensor (the PTQ artifact) — the
+engine is agnostic; the Pallas dequant-GEMM engages on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.model import ModelPlan
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (n,) int32
+    max_new_tokens: int = 16
+    output: Optional[list] = None
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        plan: ModelPlan,
+        params,
+        *,
+        max_batch: int = 4,
+        max_seq: int = 512,
+        prefill_pad: int = 32,
+    ):
+        self.plan = plan
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.prefill_pad = prefill_pad
+
+        self.cache = init_cache(plan, max_batch, max_seq)
+        self.slot_req: list[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int64)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._last_tok = np.zeros((max_batch, 1), np.int32)
+
+        self._decode = jax.jit(lambda p, t, c, pos: decode_step(plan, p, t, c, pos))
+        self._prefill = jax.jit(lambda p, b, c: prefill(plan, p, b, c))
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.output = []
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            n = len(req.prompt)
+            pad = min(-(-n // self.prefill_pad) * self.prefill_pad, self.max_seq)
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :n] = req.prompt
+            tmp_cache = init_cache(self.plan, 1, self.max_seq)
+            _, tmp_cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, tmp_cache
+            )
+            self.n_prefills += 1
+            self.cache = jax.tree.map(
+                lambda big, one: jax.lax.dynamic_update_slice(
+                    big, one.astype(big.dtype), (0, slot) + (0,) * (big.ndim - 2)
+                ),
+                self.cache,
+                tmp_cache,
+            )
+            self.slot_req[slot] = req
+            # Positions [n, pad) hold pad-token kv; decode from position n by
+            # replaying the last real token — the mask (pos<len) hides pads.
+            self.slot_pos[slot] = n - 1
+            self._last_tok[slot, 0] = int(req.prompt[-1])
+
+    def _retire(self):
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if len(req.output) >= req.max_new_tokens or self.slot_pos[i] >= self.max_seq - 1:
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[i] = None
+
+    def step(self) -> bool:
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self._last_tok), self.cache, pos
+        )
+        self.n_decode_steps += 1
+        logits = np.asarray(logits.astype(jnp.float32))
+        for i in active:
+            tok = int(np.argmax(logits[i]))
+            self._last_tok[i, 0] = tok
+            self.slot_req[i].output.append(tok)
+            self.slot_pos[i] += 1
+        self._retire()
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return self.finished

@@ -1,0 +1,165 @@
+"""Quantized serving parameters: abstract shapes + logical axes.
+
+The serve path (prefill/decode) runs on **QuantizedTensor** leaves for every
+PTQ-target linear (core/solver.py QUANTIZABLE); norms, biases, embeddings,
+router, mamba dynamics stay bf16.  This module builds:
+
+  * ``qt_param_shapes(plan, bits)`` — ShapeDtypeStruct tree used by the
+    dry-run (uint8 codes ⇒ the memory_analysis shows the real 4-bit serving
+    footprint; the paper's deployment story),
+  * ``qt_param_axes(plan)`` — logical axes per leaf, with fused-out-dim
+    names (the QT codes matrix is (out_fused, in)): column-parallel linears
+    shard codes dim0, row-parallel linears shard dim1 ⇒ identical
+    communication pattern to the bf16 Megatron layout.
+
+Axes names introduced here (resolved in dist/sharding.make_rules extras):
+``kv_fused`` (= n_kv·hd), ``ssm_fused`` (= nh·hd), ``heads_fused``
+(= kv_pad·g_pad·hd).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver import QUANTIZABLE, _MOE_NAMES
+from repro.models import model as M
+from repro.quant import QuantizedTensor
+
+__all__ = ["qt_param_shapes", "qt_param_axes", "quantize_params_for_serving", "qt_rules_extra"]
+
+
+def _linear_meta(plan: M.ModelPlan, name: str):
+    """(out_fused, d_in, axes_out, axes_in) for each quantizable leaf name."""
+    cfg, hp = plan.cfg, plan.heads
+    d, hd = cfg.d_model, cfg.hd
+    table = {
+        "wq": (hp.kv_pad * hp.g_pad * hd, d, "heads_fused", "embed"),
+        "wk": (hp.n_kv * hd, d, "kv_fused", "embed"),
+        "wv": (hp.n_kv * hd, d, "kv_fused", "embed"),
+        "wo": (d, hp.kv_pad * hp.g_pad * hd, None, "heads_fused"),
+        "wq_c": (hp.kv_pad * hp.g_pad * hd, d, "heads_fused", "embed"),
+        "wk_c": (hp.n_kv * hd, d, "kv_fused", "embed"),
+        "wv_c": (hp.n_kv * hd, d, "kv_fused", "embed"),
+        "wo_c": (d, hp.kv_pad * hp.g_pad * hd, None, "heads_fused"),
+        "wg": (cfg.d_ff, d, "ffn", "embed"),
+        "wu": (cfg.d_ff, d, "ffn", "embed"),
+        "wd": (d, cfg.d_ff, None, "ffn"),
+        "wz": (cfg.ssm_nheads * cfg.ssm_headdim, d, "ssm_fused", "embed"),
+        "wx": (cfg.ssm_nheads * cfg.ssm_headdim, d, "ssm_fused", "embed"),
+        "wbc": (2 * cfg.ssm_ngroups * cfg.ssm_state, d, None, "embed"),
+        "out_proj": (d, cfg.ssm_nheads * cfg.ssm_headdim, None, "ssm_fused"),
+        "w_gate": (cfg.moe_ff, d, "expert_ffn", "embed"),
+        "w_up": (cfg.moe_ff, d, "expert_ffn", "embed"),
+        "w_down": (d, cfg.moe_ff, None, "expert_ffn"),
+    }
+    return table[name]
+
+
+def qt_rules_extra(plan: M.ModelPlan, axis_n: int) -> dict:
+    cfg, hp = plan.cfg, plan.heads
+
+    def fits(n):
+        return n > 0 and n % axis_n == 0
+
+    return {
+        "heads_fused": "model" if fits(hp.kv_pad * hp.g_pad * cfg.hd) else None,
+        "kv_fused": "model" if fits(hp.n_kv * cfg.hd) else None,
+        "ssm_fused": "model" if fits(cfg.ssm_nheads * cfg.ssm_headdim) else None,
+    }
+
+
+def _qt_leaf_shapes(plan, name, lead: tuple, bits: int):
+    out_f, d_in, ax_o, ax_i = _linear_meta(plan, name)
+    mk = lambda shape, dt: jax.ShapeDtypeStruct(lead + shape, dt)
+    # int4 codes are stored packed two-per-byte (§Perf H1): weight HBM
+    # traffic halves; the Pallas kernel unpacks in VMEM, the XLA ref path
+    # unpacks inline (still reads only packed bytes from HBM).
+    packed = bits == 4 and d_in % 2 == 0
+    return QuantizedTensor(
+        codes=mk((out_f, d_in // 2 if packed else d_in), jnp.uint8),
+        scale=mk((out_f, 1), jnp.float32),
+        zero=mk((out_f, 1), jnp.float32),
+        bits=bits,
+        group_size=None,
+        packed=packed,
+    )
+
+
+def _qt_leaf_axes(plan, name, lead_axes: tuple):
+    # Plain dict with the same *flatten order* as QuantizedTensor (codes,
+    # scale, zero — Nones drop out), so shape/axes trees zip leaf-for-leaf.
+    out_f, d_in, ax_o, ax_i = _linear_meta(plan, name)
+    return {
+        "codes": lead_axes + (ax_o, ax_i),
+        "scale": lead_axes + (ax_o, None),
+        "zero": lead_axes + (ax_o, None),
+    }
+
+
+def _map_stack(plan, stack_tree, pattern, fn_quant, fn_keep):
+    """Rebuild a stacked block tree, replacing QUANTIZABLE leaves."""
+    out = {}
+    for key, blk in stack_tree.items():
+        i = int(key[1:])
+        b = pattern[i]
+        new_blk = {}
+        for name, leaf in blk.items():
+            if name in QUANTIZABLE:
+                new_blk[name] = fn_quant(name, leaf, b)
+            else:
+                new_blk[name] = fn_keep(name, leaf)
+        out[key] = new_blk
+    return out
+
+
+def qt_param_shapes(plan: M.ModelPlan, bits: int = 4):
+    dense = M.param_shapes(plan)
+    cfg = plan.cfg
+
+    def quant(name, leaf, b):
+        lead = (cfg.n_periods,) if name not in _MOE_NAMES else (
+            cfg.n_periods, cfg.n_experts,
+        )
+        return _qt_leaf_shapes(plan, name, lead, bits)
+
+    out = dict(dense)
+    out["dec"] = _map_stack(plan, dense["dec"], cfg.pattern, quant, lambda n, l: l)
+    if "enc" in dense:
+        def quant_enc(name, leaf, b):
+            lead = (cfg.n_enc_periods,) if name not in _MOE_NAMES else (
+                cfg.n_enc_periods, cfg.n_experts,
+            )
+            return _qt_leaf_shapes(plan, name, lead, bits)
+
+        out["enc"] = _map_stack(plan, dense["enc"], cfg.enc_pattern, quant_enc, lambda n, l: l)
+    return out
+
+
+def qt_param_axes(plan: M.ModelPlan):
+    dense = M.param_axes(plan)
+    cfg = plan.cfg
+
+    def quant(name, leaf, b):
+        lead = ("layers",) if name not in _MOE_NAMES else ("layers", "experts")
+        return _qt_leaf_axes(plan, name, lead)
+
+    out = dict(dense)
+    out["dec"] = _map_stack(plan, dense["dec"], cfg.pattern, quant, lambda n, l: l)
+    if "enc" in dense:
+        out["enc"] = _map_stack(plan, dense["enc"], cfg.enc_pattern, quant, lambda n, l: l)
+    return out
+
+
+def quantize_params_for_serving(plan: M.ModelPlan, params, solver_qt_dec: list):
+    """Restack solver emit='qt' per-period block lists into the scan layout."""
+    stacked = {}
+    for key in solver_qt_dec[0]:
+        leaves = [p[key] for p in solver_qt_dec]
+        stacked[key] = jax.tree.map(lambda *ls: jnp.stack(ls), *leaves)
+    out = dict(params)
+    out["dec"] = stacked
+    return out

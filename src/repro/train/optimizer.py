@@ -1,0 +1,167 @@
+"""AdamW in pure JAX, with optional quantized 8-bit moments.
+
+No optax in this environment — and the paper gives us the machinery anyway:
+the 8-bit moment states reuse the same uniform affine grids as the PTQ core.
+For the ≥100B assigned configs this is what makes optimizer state fit
+16 GB/chip (DESIGN.md §4): bytes/param for (m, v) drop from 8 (fp32) to 2.
+
+Quantization granularity is **per last-axis vector** (one affine grid per
+row), not bitsandbytes' flat 256-blocks: flat blocks would force a reshape
+across sharded dims and GSPMD would re-gather every gradient each step.
+Row-wise grids keep the uint8 moment arrays *exactly* param-shaped, so they
+inherit the param's sharding verbatim — the whole point at 512 chips.
+Leaves with ndim < 2 (norm scales, biases — negligible memory) stay fp32.
+
+State per leaf: {"m": m, "v": v}; each moment is either an fp32 array or
+{"q": uint8 (param shape), "scale": fp32 (..., 1), "zero": fp32 (..., 1)}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "moment_axes",
+    "lr_schedule",
+    "global_norm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments: str = "fp32"  # "fp32" | "int8"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+_V_FLOOR = 1e-16
+
+
+def _q8_encode(x: jax.Array, signed: bool) -> dict:
+    """Row-wise (last-axis) int8 encoding; x fp32.
+
+    m (signed): linear symmetric around 0.
+    v (unsigned): **log-domain** affine — a linear grid would round small
+    entries of a heavy-tailed row to exactly 0 and the Adam update
+    m/(√v+ε) would explode; log-domain keeps ~1%-relative precision across
+    the row's whole dynamic range and can never produce zero.
+    """
+    if signed:
+        scale = jnp.maximum(jnp.max(jnp.abs(x), -1, keepdims=True) / 127.0, 1e-20)
+        q = jnp.clip(jnp.round(x / scale) + 128, 0, 255).astype(jnp.uint8)
+        zero = jnp.full_like(scale, 128.0)
+        return {"q": q, "scale": scale, "zero": zero}
+    lx = jnp.log(x + _V_FLOOR)
+    lo = jnp.min(lx, -1, keepdims=True)
+    hi = jnp.max(lx, -1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-12)
+    q = jnp.clip(jnp.round((lx - lo) / scale), 0, 255).astype(jnp.uint8)
+    return {"q": q, "scale": scale, "zero": -lo / scale}  # log-affine
+
+
+def _decode(m, signed: bool = True) -> jax.Array:
+    if isinstance(m, dict):
+        vals = (m["q"].astype(jnp.float32) - m["zero"]) * m["scale"]
+        return vals if signed else jnp.exp(vals) - _V_FLOOR
+    return m
+
+
+def _use_int8(p) -> bool:
+    return p.ndim >= 2
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def leaf_state(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.moments == "int8" and _use_int8(p):
+            return {"m": _q8_encode(z, True), "v": _q8_encode(z, False)}
+        return {"m": z, "v": z}
+
+    mu = jax.tree.map(leaf_state, params)
+    # JAX dedups identical constants into shared buffers; donation requires
+    # every state leaf to own its buffer → force unique copies once at init.
+    mu = jax.tree.map(jnp.copy, mu)
+    return {"mu": mu, "count": jnp.zeros((), jnp.int32)}
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def leaf(p, g, s):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _decode(s["m"], True) + (1 - cfg.b1) * g
+        v = jnp.maximum(
+            cfg.b2 * _decode(s["v"], False) + (1 - cfg.b2) * g * g, 0.0
+        )
+        c = count.astype(jnp.float32)
+        mhat = m / (1 - cfg.b1**c)
+        vhat = v / (1 - cfg.b2**c)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (upd + decay * p.astype(jnp.float32))
+        if cfg.moments == "int8" and _use_int8(p):
+            new_s = {"m": _q8_encode(m, True), "v": _q8_encode(v, False)}
+        else:
+            new_s = {"m": m, "v": v}
+        return new_p.astype(p.dtype), new_s
+
+    is_state_leaf = lambda x: isinstance(x, dict) and set(x) == {"m", "v"}
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = jax.tree.flatten(state["mu"], is_leaf=is_state_leaf)[0]
+    out = [leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_params, {"mu": new_mu, "count": count}, {"grad_norm": gnorm, "lr": lr}
+
+
+def moment_axes(params_shapes, param_axes_tree, cfg: AdamWConfig):
+    """Logical-axes tree mirroring adamw_init's state structure."""
+
+    def leaf(sds, ax):
+        ax = tuple(ax)
+        if cfg.moments == "int8" and len(sds.shape) >= 2:
+            enc = {"q": ax, "scale": (*ax[:-1], None), "zero": (*ax[:-1], None)}
+            return {"m": enc, "v": enc}
+        return {"m": ax, "v": ax}
+
+    flat_s, tdef = jax.tree.flatten(params_shapes)
+    flat_ax = jax.tree.flatten(
+        param_axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )[0]
+    mu = jax.tree.unflatten(tdef, [leaf(s, a) for s, a in zip(flat_s, flat_ax)])
+    return {"mu": mu, "count": ()}

@@ -1,0 +1,77 @@
+"""Train step: value_and_grad + microbatch accumulation + AdamW.
+
+Microbatching reshapes the global batch (B, ...) into ``n_mb`` sequential
+slices scanned with fp32 gradient accumulation — the activation-memory lever
+for the ≥100B configs (DESIGN.md §4).  The optimizer update runs once per
+step on the mean gradient.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import train_loss
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["make_train_step"]
+
+
+def _split_mb(batch: dict, n_mb: int):
+    def r(x):
+        b = x.shape[0]
+        return x.reshape(n_mb, b // n_mb, *x.shape[1:])
+
+    return {k: r(v) for k, v in batch.items()}
+
+
+def make_train_step(
+    plan, opt_cfg: AdamWConfig, n_microbatches: int = 1, grad_shardings=None
+):
+    """Returns train_step(params, opt_state, batch) → (params', state', metrics).
+
+    ``grad_shardings``: optional pytree of NamedShardings (the FSDP param
+    layout); constraining each microbatch's grads before accumulation lets
+    GSPMD reduce-scatter straight into the sharded accumulator instead of
+    all-reducing full fp32 weight grads per microbatch (§Perf H3)."""
+
+    def loss_fn(params, mb):
+        return train_loss(plan, params, mb)
+
+    def _pin(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, grad_shardings
+        )
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _pin(grads)
+        else:
+            mbs = _split_mb(batch, n_microbatches)
+            g0 = _pin(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+
+            def acc(carry, mb):
+                tot, g_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), _pin(g_acc), _pin(grads)
+                )
+                return (tot + loss, g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), g0), mbs)
+            loss = loss / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+
+        new_params, new_state, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,171 @@
+"""Trainer: mesh-aware jitted loop with checkpoint/restart and elasticity.
+
+Wires together: sharding rules (dist/sharding.py) → jitted train_step with
+explicit in/out shardings and donated (params, opt_state) → synthetic data
+pipeline → atomic checkpoints → RetryingRunner for failure recovery.
+
+On CPU (examples) pass ``mesh=None`` — everything runs unsharded, same code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, make_batch_fn
+from repro.dist import checkpoint as ckpt
+from repro.dist.elastic import RetryingRunner, elastic_mesh
+from repro.dist.sharding import Rules, axis_rules, make_rules
+from repro.models import init_params, make_plan, param_axes, param_shapes
+from repro.train.optimizer import AdamWConfig, adamw_init, moment_axes
+from repro.train.train_step import make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 200
+    batch: int = 8
+    seq: int = 128
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    n_microbatches: int = 1
+    seed: int = 0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        opt_cfg: AdamWConfig,
+        tcfg: TrainerConfig,
+        mesh=None,
+        fsdp: bool = False,
+    ):
+        self.model_cfg = model_cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        axis_n = mesh.shape.get("model", 1) if mesh is not None else 1
+        self.plan = make_plan(model_cfg, axis_n)
+        self.rules = (
+            make_rules(
+                mesh,
+                n_heads=self.plan.heads.h_pad,
+                n_kv_heads=self.plan.heads.n_kv,
+                d_ff=model_cfg.d_ff,
+                n_experts=model_cfg.n_experts,
+                vocab=self.plan.vocab_pad,
+                d_model=model_cfg.d_model,
+                fsdp=fsdp,
+            )
+            if mesh is not None
+            else None
+        )
+        self.batch_fn, self.corpus = make_batch_fn(
+            DataConfig(vocab=model_cfg.vocab, seed=tcfg.seed),
+            model_cfg,
+            tcfg.batch,
+            tcfg.seq,
+        )
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _shard(self, tree, axes_tree):
+        if self.rules is None:
+            return tree
+        flat_t, tdef = jax.tree.flatten(tree)
+        flat_ax = jax.tree.flatten(axes_tree, is_leaf=lambda x: isinstance(x, tuple))[0]
+        out = [
+            jax.device_put(t, self.rules.sharding(ax))
+            for t, ax in zip(flat_t, flat_ax)
+        ]
+        return jax.tree.unflatten(tdef, out)
+
+    def _build(self):
+        plan = self.plan
+        with axis_rules(self.rules):
+            params = init_params(plan, jax.random.PRNGKey(self.tcfg.seed))
+            if self.rules is not None:
+                params = self._shard(params, param_axes(plan))
+            opt_state = adamw_init(params, self.opt_cfg)
+        self.params, self.opt_state = params, opt_state
+        step_fn = make_train_step(plan, self.opt_cfg, self.tcfg.n_microbatches)
+
+        def wrapped(params, opt_state, batch):
+            with axis_rules(self.rules):
+                return step_fn(params, opt_state, batch)
+
+        self.train_step = jax.jit(wrapped, donate_argnums=(0, 1))
+        self.data_step = 0
+        self.metrics_log: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def _put_batch(self, batch_np: dict):
+        if self.rules is None:
+            return {k: jnp.asarray(v) for k, v in batch_np.items()}
+        out = {}
+        for k, v in batch_np.items():
+            ax = ("batch",) + (None,) * (v.ndim - 1)
+            out[k] = jax.device_put(v, self.rules.sharding(ax))
+        return out
+
+    def save(self, step: int):
+        state = {"params": self.params, "opt": self.opt_state}
+        ckpt.save_checkpoint(
+            self.tcfg.ckpt_dir, step, state, meta={"data_step": self.data_step}
+        )
+
+    def restore(self) -> int:
+        state_like = {"params": self.params, "opt": self.opt_state}
+        state, manifest = ckpt.load_checkpoint(self.tcfg.ckpt_dir, state_like)
+        self.params, self.opt_state = state["params"], state["opt"]
+        if self.rules is not None:
+            self.params = self._shard(self.params, param_axes(self.plan))
+        self.data_step = manifest["meta"]["data_step"]
+        return manifest["step"]
+
+    def run(self, fault_hook=None) -> dict:
+        tcfg = self.tcfg
+        ckpt.cleanup_tmp(tcfg.ckpt_dir)
+        start = 0
+        if ckpt.latest_step(tcfg.ckpt_dir) is not None:
+            start = self.restore()
+
+        def do_step(state, step):
+            params, opt_state = state
+            batch = self._put_batch(self.batch_fn(step))
+            params, opt_state, metrics = self.train_step(params, opt_state, batch)
+            self.params, self.opt_state = params, opt_state
+            self.data_step = step + 1
+            if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                self.metrics_log.append(m)
+            if (step + 1) % tcfg.ckpt_every == 0:
+                self.save(step + 1)
+            return (params, opt_state)
+
+        def restore_state():
+            step = self.restore() if ckpt.latest_step(tcfg.ckpt_dir) is not None else 0
+            return (self.params, self.opt_state), step
+
+        runner = RetryingRunner(
+            step_fn=do_step, restore_fn=restore_state, fault_hook=fault_hook
+        )
+        state, _ = runner.run((self.params, self.opt_state), start, tcfg.steps - start)
+        self.params, self.opt_state = state
+        return {
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "recoveries": runner.recoveries,
+            "log": self.metrics_log,
+        }

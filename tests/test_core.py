@@ -1,0 +1,176 @@
+"""Core PTQ algorithm tests: the paper's claims at layer level."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    awq_quantize,
+    gptq_quantize,
+    layer_objective,
+    outlier_quantease,
+    quantease_quantize,
+    quantease_reference,
+    relative_error,
+    rtn_quantize,
+    spqr_quantize,
+)
+from repro.quant import GridSpec, compute_grid, quantize_dequantize
+
+SPEC3 = GridSpec(bits=3)
+
+
+def _err(w, w_hat, sigma):
+    return float(relative_error(w, w_hat, sigma))
+
+
+def test_method_ordering(layer_problem):
+    """QuantEase ≤ GPTQ ≤ RTN (paper §3.4) and AWQ ≤ RTN."""
+    w, sigma = layer_problem
+    e_rtn = _err(w, rtn_quantize(w, SPEC3), sigma)
+    e_awq = _err(w, awq_quantize(w, sigma, SPEC3), sigma)
+    e_gptq = _err(w, gptq_quantize(w, sigma, SPEC3), sigma)
+    e_qe = _err(w, quantease_quantize(w, sigma, SPEC3, iterations=20)[0], sigma)
+    assert e_qe < e_gptq < e_rtn
+    assert e_awq <= e_rtn + 1e-6
+
+
+def test_alg1_equals_alg2(layer_problem):
+    """Blocked Algorithm 2 reproduces Algorithm 1 exactly (same iterates)."""
+    w, sigma = layer_problem
+    w_ref = quantease_reference(w, sigma, SPEC3, iterations=3)
+    for bsz in (32, 128):
+        w_blk, _ = quantease_quantize(
+            w, sigma, SPEC3, iterations=3, block_size=bsz, unquantized_heuristic=False
+        )
+        np.testing.assert_allclose(
+            np.asarray(w_ref), np.asarray(w_blk), rtol=0, atol=2e-4
+        )
+
+
+def test_feasibility(layer_problem):
+    """Output lies exactly on the per-channel grid (Lemma 2 prerequisite)."""
+    w, sigma = layer_problem
+    w_hat, _ = quantease_quantize(w, sigma, SPEC3, iterations=4)
+    grid = compute_grid(w, SPEC3)
+    snapped = quantize_dequantize(w_hat, grid)
+    np.testing.assert_allclose(np.asarray(w_hat), np.asarray(snapped), atol=1e-5)
+
+
+def test_objective_monotone(layer_problem):
+    """Non-increasing damped objective from the first feasible iterate."""
+    w, sigma = layer_problem
+    _, objs = quantease_quantize(
+        w, sigma, SPEC3, iterations=10, unquantized_heuristic=False
+    )
+    objs = np.asarray(objs)
+    assert np.all(np.diff(objs) <= objs[:-1] * 1e-5 + 1e-3)
+
+
+def test_gptq_init_improves(layer_problem):
+    """QuantEase initialized from GPTQ only improves on it (paper §3.1)."""
+    w, sigma = layer_problem
+    w_g = gptq_quantize(w, sigma, SPEC3)
+    w_qg, _ = quantease_quantize(
+        w, sigma, SPEC3, iterations=10, w_init=w_g, unquantized_heuristic=False
+    )
+    assert _err(w, w_qg, sigma) <= _err(w, w_g, sigma) + 1e-7
+
+
+def test_unquantized_heuristic_helps_or_ties(layer_problem):
+    w, sigma = layer_problem
+    e_with = _err(w, quantease_quantize(w, sigma, SPEC3, iterations=24)[0], sigma)
+    e_without = _err(
+        w,
+        quantease_quantize(
+            w, sigma, SPEC3, iterations=24, unquantized_heuristic=False
+        )[0],
+        sigma,
+    )
+    assert e_with <= e_without * 1.05  # heuristic never catastrophically worse
+
+
+def test_outlier_budget_and_gain(layer_problem):
+    w, sigma = layer_problem
+    s = int(0.01 * w.size)
+    res = outlier_quantease(w, sigma, SPEC3, s=s, iterations=10)
+    assert int((np.asarray(res.h) != 0).sum()) <= s
+    e_plain = _err(w, quantease_quantize(w, sigma, SPEC3, iterations=10)[0], sigma)
+    assert _err(w, res.w_eff, sigma) < e_plain
+
+
+def test_outlier_structured_columns(layer_problem):
+    w, sigma = layer_problem
+    s = int(0.02 * w.size)
+    res = outlier_quantease(w, sigma, SPEC3, s=s, iterations=8, structured=True)
+    h = np.asarray(res.h)
+    nz_cols = np.nonzero(np.abs(h).sum(0))[0]
+    assert len(nz_cols) <= max(s // w.shape[0], 1)
+
+
+def test_qe_outliers_beat_spqr(layer_problem):
+    """Paper §5.4: QuantEase-outlier beats SpQR at equal budget."""
+    w, sigma = layer_problem
+    s = int(0.01 * w.size)
+    e_spqr = _err(w, spqr_quantize(w, sigma, SPEC3, s=s)[0], sigma)
+    e_qe = _err(
+        w, outlier_quantease(w, sigma, SPEC3, s=s, iterations=12).w_eff, sigma
+    )
+    assert e_qe < e_spqr
+
+
+def test_2bit_needs_outliers(layer_problem):
+    """Paper §5.4.1: plain 2-bit collapses; 2% outliers rescue it."""
+    w, sigma = layer_problem
+    spec2 = GridSpec(bits=2)
+    e_plain = _err(w, quantease_quantize(w, sigma, spec2, iterations=12)[0], sigma)
+    e_out = _err(
+        w,
+        outlier_quantease(w, sigma, spec2, s=int(0.02 * w.size), iterations=12).w_eff,
+        sigma,
+    )
+    assert e_out < 0.6 * e_plain
+
+
+def test_gptq_keep_mask(layer_problem):
+    """Kept (outlier) entries stay full precision — they absorb OBS
+    corrections (SpQR semantics) but are never rounded — and pinning them
+    lowers the total error."""
+    w, sigma = layer_problem
+    mask = np.zeros(w.shape, bool)
+    mask[::7, ::11] = True
+    w_hat = gptq_quantize(w, sigma, SPEC3, keep_mask=jnp.asarray(mask))
+    grid = compute_grid(w, SPEC3)
+    snapped = np.asarray(quantize_dequantize(w_hat, grid))
+    off_grid = np.abs(np.asarray(w_hat)[mask] - snapped[mask]) > 1e-6
+    assert off_grid.mean() > 0.5  # kept entries are genuinely unquantized
+    e_masked = _err(w, w_hat, sigma)
+    e_plain = _err(w, gptq_quantize(w, sigma, SPEC3), sigma)
+    assert e_masked < e_plain
+
+
+def test_awq_plus_quantease_improves(layer_problem):
+    """Paper §6 conjecture: AWQ scaling + QuantEase ≤ QuantEase alone on
+    layers with per-channel activation-scale structure."""
+    import numpy as np
+
+    from repro.core.awq import awq_then_quantease
+
+    rng = np.random.default_rng(1)
+    q, p = 64, 96
+    x = rng.standard_normal((p, 384)).astype(np.float32) * (
+        rng.random(p)[:, None] * 3 + 0.2
+    )
+    w = jnp.asarray(rng.standard_normal((q, p)).astype(np.float32))
+    sigma = jnp.asarray(x @ x.T)
+    e_qe = _err(w, quantease_quantize(w, sigma, SPEC3, iterations=12)[0], sigma)
+    e_combo = _err(w, awq_then_quantease(w, sigma, SPEC3, iterations=12), sigma)
+    assert e_combo <= e_qe * 1.02
+
+
+def test_opt_family_configs():
+    from repro.configs import get_config
+
+    for name, tgt in [("opt_125m", 0.125), ("opt_1_3b", 1.315), ("opt_66b", 65.7)]:
+        n = get_config(name).param_count() / 1e9
+        assert abs(n - tgt) / tgt < 0.05

@@ -1,0 +1,59 @@
+"""Reduced-mesh dry-run smoke: lower+compile on forged host devices.
+
+Runs in a SUBPROCESS because xla_force_host_platform_device_count must be
+set before jax initializes (the main pytest process keeps 1 device).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import dataclasses, json, sys
+sys.path.insert(0, "src"); sys.path.insert(0, "tests")
+import jax, jax.numpy as jnp
+from conftest import reduce_cfg
+from repro.configs import get_config
+import repro.configs.base as base
+from repro.launch.specs import build_cell, CELLS
+import repro.launch.specs as specs
+
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+CELLS["tiny_train"] = dict(seq=64, batch=16, kind="train")
+CELLS["tiny_decode"] = dict(seq=64, batch=16, kind="decode")
+out = {}
+for arch in json.loads(sys.argv[1]):
+    cfg = reduce_cfg(get_config(arch), n_kv_heads=min(get_config(arch).n_kv_heads, 2), vocab=256)
+    base._REGISTRY[cfg.name] = cfg  # reduced config under the same name
+    for shape in ("tiny_train", "tiny_decode"):
+        if arch == "whisper_large_v3" and shape == "tiny_decode":
+            pass
+        spec = build_cell(arch, shape, mesh)
+        lowered = jax.jit(spec.fn, donate_argnums=spec.donate).lower(*spec.args)
+        compiled = lowered.compile()
+        m = compiled.memory_analysis()
+        out[f"{arch}/{shape}"] = m.temp_size_in_bytes
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.parametrize(
+    "archs",
+    [["stablelm_12b", "mamba2_2_7b"], ["olmoe_1b_7b", "whisper_large_v3"]],
+)
+def test_reduced_mesh_dryrun(archs):
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, json.dumps(archs)],
+        capture_output=True, text=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+        env=env, timeout=560,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert len(out) == 2 * len(archs)

@@ -1,0 +1,107 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantease_quantize, rtn_quantize
+from repro.core.calib import damp_sigma
+from repro.core.quantease import layer_objective
+from repro.quant import GridSpec, compute_grid, quantize_dequantize
+
+
+def _problem(seed, q, p, n):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((p, n)).astype(np.float32)
+    w = r.standard_normal((q, p)).astype(np.float32)
+    if seed % 3 == 0:
+        w[r.random((q, p)) < 0.01] *= 8.0
+    return jnp.asarray(w), jnp.asarray(x @ x.T)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    q=st.integers(4, 24),
+    p=st.integers(4, 48),
+    bits=st.sampled_from([2, 3, 4]),
+)
+def test_quantease_never_worse_than_rtn(seed, q, p, bits):
+    """CD starting feasible can only descend ⇒ ≤ RTN error always (the RTN
+    point is one feasible point; QuantEase's first sweep min-s over each
+    coordinate, which includes the RTN choice)."""
+    w, sigma = _problem(seed, q, p, max(2 * p, 16))
+    spec = GridSpec(bits=bits)
+    sigma_d = damp_sigma(sigma)
+    w_rtn = rtn_quantize(w, spec)
+    w_qe, _ = quantease_quantize(
+        w, sigma, spec, iterations=6, unquantized_heuristic=False, w_init=w_rtn
+    )
+    f_rtn = float(layer_objective(w, w_rtn, sigma_d))
+    f_qe = float(layer_objective(w, w_qe, sigma_d))
+    assert f_qe <= f_rtn * (1 + 1e-5) + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    q=st.integers(4, 16),
+    p=st.integers(4, 32),
+)
+def test_objective_monotone_property(seed, q, p):
+    w, sigma = _problem(seed, q, p, max(2 * p, 16))
+    _, objs = quantease_quantize(
+        w, sigma, GridSpec(bits=3), iterations=8, unquantized_heuristic=False
+    )
+    objs = np.asarray(objs)
+    assert np.all(np.diff(objs) <= np.abs(objs[:-1]) * 1e-4 + 1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    symmetric=st.booleans(),
+)
+def test_grid_projection_is_nearest(seed, bits, symmetric):
+    """q_i(x) is the closest grid point: |x − q(x)| ≤ |x − any grid value|
+    (checked against a dense enumeration of the grid)."""
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.standard_normal((3, 17)).astype(np.float32) * 3)
+    spec = GridSpec(bits=bits, symmetric=symmetric)
+    grid = compute_grid(w, spec)
+    wq = np.asarray(quantize_dequantize(w, grid))
+    scale, zero = grid.per_column(w.shape[1])
+    levels = np.arange(2**bits)[None, None, :]
+    vals = (levels - np.asarray(zero)[..., None]) * np.asarray(scale)[..., None]
+    dmin = np.abs(vals - np.asarray(w)[..., None]).min(-1)
+    # distance-based check: exact .5-step ties may legally go either way
+    np.testing.assert_allclose(
+        np.abs(wq - np.asarray(w)), dmin, rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_cw_minimum(seed):
+    """After convergence, no single-coordinate move improves the objective
+    (Definition 1, CW-minimum — checked on a coordinate sample)."""
+    w, sigma = _problem(seed, 6, 10, 64)
+    spec = GridSpec(bits=3)
+    sigma_d = damp_sigma(sigma)
+    w_hat, _ = quantease_quantize(
+        w, sigma, spec, iterations=30, unquantized_heuristic=False
+    )
+    f0 = float(layer_objective(w, w_hat, sigma_d))
+    grid = compute_grid(w, spec)
+    scale, zero = grid.per_column(w.shape[1])
+    r = np.random.default_rng(seed)
+    wh = np.asarray(w_hat).copy()
+    for _ in range(12):
+        i = r.integers(0, w.shape[0])
+        j = r.integers(0, w.shape[1])
+        for lvl in range(2**3):
+            cand = wh.copy()
+            cand[i, j] = (lvl - float(zero[i, j])) * float(scale[i, j])
+            f = float(layer_objective(w, jnp.asarray(cand), sigma_d))
+            assert f >= f0 - abs(f0) * 1e-4 - 1e-3

@@ -1,0 +1,33 @@
+"""Roofline HLO collective parser unit tests."""
+
+from repro.roofline.analysis import collective_bytes, _shape_bytes
+
+
+HLO = """
+ENTRY main {
+  %ag = bf16[16,4096]{1,0} all-gather(bf16[1,4096]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar.1 = f32[128]{0} all-reduce(f32[128]{0} %y), replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = (f32[8,16]{1,0}) reduce-scatter(f32[128,16]{1,0} %z), replica_groups=[16,16]<=[256], dimensions={0}
+  %cp-start = bf16[64]{0} collective-permute-start(bf16[64]{0} %w), source_target_pairs={{0,1}}
+  %done = bf16[64]{0} collective-permute-done(bf16[64]{0} %cp-start)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,4096]") == 16 * 4096 * 2
+    assert _shape_bytes("(f32[8,16])") == 8 * 16 * 4
+    assert _shape_bytes("u8[3]") == 3
+
+
+def test_collective_bytes_kinds():
+    out = collective_bytes(HLO, 256)
+    g = 16
+    # all-gather: global result bytes × (g−1)/g
+    assert abs(out["all-gather"] - 16 * 4096 * 2 * (g - 1) / g) < 1
+    # all-reduce: 2 × bytes × (g−1)/g
+    assert abs(out["all-reduce"] - 2 * 128 * 4 * (g - 1) / g) < 1
+    # reduce-scatter: shard bytes × (g−1)
+    assert abs(out["reduce-scatter"] - 8 * 16 * 4 * (g - 1)) < 1
+    # collective-permute counted once (start only)
+    assert out["collective-permute"] == 64 * 2
+    assert out["counts"]["all-gather"] == 1

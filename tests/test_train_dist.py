@@ -1,0 +1,133 @@
+"""Train substrate + distribution: optimizer, checkpoints, elasticity, rules."""
+
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.dist import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.trainer import Trainer, TrainerConfig
+from tests.conftest import reduce_cfg
+
+
+def test_adamw_int8_tracks_fp32(rng):
+    params = {
+        "w": jnp.asarray(rng.standard_normal((32, 64)).astype(np.float32)),
+        "b": jnp.asarray(rng.standard_normal(64).astype(np.float32)),
+    }
+    grads = jax.tree.map(lambda p: jnp.asarray(
+        np.random.default_rng(1).standard_normal(p.shape).astype(np.float32)), params)
+    outs = {}
+    for moments in ("fp32", "int8"):
+        cfg = AdamWConfig(lr=1e-2, moments=moments, warmup_steps=0)
+        state = adamw_init(params, cfg)
+        p = params
+        for _ in range(5):
+            p, state, _ = adamw_update(p, grads, state, cfg)
+        outs[moments] = p
+    diff = float(jnp.max(jnp.abs(outs["fp32"]["w"] - outs["int8"]["w"])))
+    step = float(jnp.max(jnp.abs(outs["fp32"]["w"] - params["w"])))
+    upd_fp = np.asarray(outs["fp32"]["w"] - params["w"]).ravel()
+    upd_q8 = np.asarray(outs["int8"]["w"] - params["w"]).ravel()
+    corr = float(np.corrcoef(upd_fp, upd_q8)[0, 1])
+    assert corr > 0.99  # quantized moments track fp32 update directions
+    assert diff < 0.6 * step  # and never explode (log-domain v)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+        "n": {"b": jnp.asarray(np.random.default_rng(0).standard_normal((5,)))},
+        "c": jnp.asarray([3], jnp.int32),
+    }
+    ckpt.save_checkpoint(str(tmp_path), 7, tree, meta={"data_step": 9})
+    out, manifest = ckpt.load_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 7 and manifest["meta"]["data_step"] == 9
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    tree = {"a": jnp.ones((2, 2))}
+    ckpt.save_checkpoint(str(tmp_path), 1, tree)
+    # a crashed half-write leaves only .tmp → ignored and cleaned
+    os.makedirs(tmp_path / "step_2.tmp")
+    ckpt.cleanup_tmp(str(tmp_path))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    assert not (tmp_path / "step_2.tmp").exists()
+
+
+def test_trainer_recovers_from_failure(tmp_path):
+    cfg = reduce_cfg(get_config("stablelm_12b"), vocab=128)
+    t = Trainer(
+        cfg,
+        AdamWConfig(lr=1e-3, total_steps=30),
+        TrainerConfig(steps=30, batch=4, seq=32, ckpt_every=10,
+                      ckpt_dir=str(tmp_path), log_every=10),
+    )
+    died = []
+
+    def fault(step):
+        if step == 15 and not died:
+            died.append(1)
+            raise RuntimeError("boom")
+
+    out = t.run(fault_hook=fault)
+    assert out["recoveries"] == 1
+    assert out["log"][-1]["loss"] < out["log"][0]["loss"]
+
+
+def test_trainer_deterministic_resume(tmp_path):
+    """Stop at 20 of 40, resume in a fresh Trainer → same final params as an
+    uninterrupted run (exact-step data replay)."""
+    cfg = reduce_cfg(get_config("stablelm_12b"), vocab=64, n_periods=1)
+    opt = AdamWConfig(lr=1e-3, total_steps=40)
+
+    def mk(steps, d):
+        return Trainer(cfg, opt, TrainerConfig(
+            steps=steps, batch=4, seq=16, ckpt_every=20, ckpt_dir=d, log_every=40))
+
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    t_full = mk(40, d1)
+    t_full.run()
+    t_half = mk(20, d2)
+    t_half.run()
+    t_resume = mk(40, d2)  # picks up at step 20 from d2
+    t_resume.run()
+    for a, b in zip(jax.tree.leaves(t_full.params), jax.tree.leaves(t_resume.params)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-5
+        )
+
+
+def test_rules_divisibility_fallbacks():
+    import jax as j
+
+    from repro.dist.sharding import make_rules
+
+    if len(j.devices()) != 1:
+        pytest.skip("single-device test")
+    mesh = j.make_mesh((1, 1), ("data", "model"),
+                       axis_types=(j.sharding.AxisType.Auto,) * 2)
+    r = make_rules(mesh, n_heads=40, n_kv_heads=8, d_ff=1024, n_experts=8,
+                   vocab=50280, d_model=512)
+    # axis size 1 ⇒ everything "fits"; fallback logic exercised via spec dedup
+    spec = r.spec(("embed", "ffn", "ffn"))  # duplicate mesh axis → later None
+    assert spec[2] is None
+
+
+def test_data_pipeline_deterministic():
+    from repro.data.pipeline import DataConfig, make_batch_fn
+
+    cfg = get_config("stablelm_12b")
+    f1, _ = make_batch_fn(DataConfig(vocab=256, seed=7), cfg, 4, 32)
+    f2, _ = make_batch_fn(DataConfig(vocab=256, seed=7), cfg, 4, 32)
+    np.testing.assert_array_equal(f1(123)["tokens"], f2(123)["tokens"])
+    assert not np.array_equal(f1(123)["tokens"], f1(124)["tokens"])
