@@ -1,0 +1,41 @@
+"""Compatibility shims for the range of jax versions this repo runs on.
+
+The codebase targets the modern ``jax.make_mesh(..., axis_types=...)`` API
+(jax ≥ 0.5); the container image pins jax 0.4.37, which has ``jax.make_mesh``
+but neither the ``axis_types`` kwarg nor ``jax.sharding.AxisType``.  On 0.4.x
+every mesh axis already behaves as GSPMD-auto, so the shim is semantically a
+no-op: it adds the enum and swallows the kwarg.  Imported for its side
+effects from ``repro/__init__.py`` so any ``import repro.*`` activates it.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+            del axis_types  # 0.4.x: every axis is implicitly Auto
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+
+_install()

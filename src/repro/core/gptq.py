@@ -58,7 +58,41 @@ def gptq_quantize(
     precision* (used by the SpQR baseline's outliers); they still absorb OBS
     corrections but are never rounded.
     ``grid``: optional explicit grid (e.g. SpQR's outlier-shrunk ranges).
+
+    **Batched:** ``w: (G, q, p)`` / ``sigma: (G, p, p)`` solves G layers in
+    one vmapped call (grouped-block solver; ``keep_mask``/``grid`` must be
+    None on this path).
     """
+    if w.ndim == 3:
+        if keep_mask is not None or grid is not None:
+            raise ValueError("keep_mask/grid unsupported on the batched path")
+        solve = functools.partial(
+            _gptq_2d,
+            spec=spec,
+            percdamp=percdamp,
+            block_size=block_size,
+            act_order=act_order,
+            keep_mask=None,
+            grid=None,
+        )
+        return jax.vmap(lambda wi, si: solve(wi, si))(w, sigma)
+    return _gptq_2d(
+        w, sigma, spec=spec, percdamp=percdamp, block_size=block_size,
+        act_order=act_order, keep_mask=keep_mask, grid=grid,
+    )
+
+
+def _gptq_2d(
+    w: jax.Array,
+    sigma: jax.Array,
+    *,
+    spec: GridSpec,
+    percdamp: float,
+    block_size: int,
+    act_order: bool,
+    keep_mask: Optional[jax.Array],
+    grid: Optional[Grid],
+) -> jax.Array:
     q, p = w.shape
     w = w.astype(jnp.float32)
     sigma = damp_sigma(sigma.astype(jnp.float32), percdamp)

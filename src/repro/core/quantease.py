@@ -60,15 +60,22 @@ class QuantEaseConfig:
 
 
 def layer_objective(w: jax.Array, w_hat: jax.Array, sigma: jax.Array) -> jax.Array:
-    """f(Ŵ) = ‖WX − ŴX‖²_F = Tr((W−Ŵ) Σ (W−Ŵ)ᵀ)."""
+    """f(Ŵ) = ‖WX − ŴX‖²_F = Tr((W−Ŵ) Σ (W−Ŵ)ᵀ).
+
+    Accepts leading batch dims (w: (..., q, p), sigma: (..., p, p)) and
+    reduces per-matrix — the grouped solver scores a whole vmap batch at
+    once.
+    """
     e = (w - w_hat).astype(jnp.float32)
-    return jnp.einsum("ij,jk,ik->", e, sigma.astype(jnp.float32), e)
+    return jnp.einsum("...ij,...jk,...ik->...", e, sigma.astype(jnp.float32), e)
 
 
 def relative_error(w: jax.Array, w_hat: jax.Array, sigma: jax.Array) -> jax.Array:
-    """Error(Ŵ) = ‖WX−ŴX‖²_F / ‖WX‖²_F (paper §3.4 / Fig. 2 metric)."""
+    """Error(Ŵ) = ‖WX−ŴX‖²_F / ‖WX‖²_F (paper §3.4 / Fig. 2 metric).
+
+    Batched like :func:`layer_objective`."""
     w = w.astype(jnp.float32)
-    denom = jnp.einsum("ij,jk,ik->", w, sigma.astype(jnp.float32), w)
+    denom = jnp.einsum("...ij,...jk,...ik->...", w, sigma.astype(jnp.float32), w)
     return layer_objective(w, w_hat, sigma) / jnp.clip(denom, 1e-30, None)
 
 
@@ -223,7 +230,57 @@ def quantease_quantize(
     iteration against the damped Σ; from the first fully-quantized iterate
     onward it is non-increasing on quantized iterations (Lemma 2) — this is
     asserted by tests/test_property.py.
+
+    **Batched:** ``w: (G, q, p)`` with ``sigma: (G, p, p)`` solves G
+    independent layers in one vmapped call — the whole-model solver groups
+    same-shape linears of a block (and all E experts of an MoE matrix) this
+    way; ``_prep``/``iteration`` and the Pallas sweep all carry the leading
+    dim.  Returns (Ŵ (G, q, p), objectives (G, iterations)).  ``grid`` must
+    be None on the batched path (per-layer grids are computed inside).
     """
+    if w.ndim == 3:
+        if grid is not None:
+            raise ValueError("explicit grid unsupported on the batched path")
+        solve = functools.partial(
+            _quantease_2d,
+            spec=spec,
+            iterations=iterations,
+            block_size=block_size,
+            percdamp=percdamp,
+            unquantized_heuristic=unquantized_heuristic,
+            grid=None,
+            use_kernel=use_kernel,
+        )
+        if w_init is None:
+            return jax.vmap(lambda wi, si: solve(wi, si, w_init=None))(w, sigma)
+        return jax.vmap(lambda wi, si, ii: solve(wi, si, w_init=ii))(w, sigma, w_init)
+    return _quantease_2d(
+        w,
+        sigma,
+        spec=spec,
+        iterations=iterations,
+        block_size=block_size,
+        percdamp=percdamp,
+        unquantized_heuristic=unquantized_heuristic,
+        w_init=w_init,
+        grid=grid,
+        use_kernel=use_kernel,
+    )
+
+
+def _quantease_2d(
+    w: jax.Array,
+    sigma: jax.Array,
+    *,
+    spec: GridSpec,
+    iterations: int,
+    block_size: int,
+    percdamp: float,
+    unquantized_heuristic: bool,
+    w_init: Optional[jax.Array],
+    grid: Optional[Grid],
+    use_kernel: str,
+) -> tuple[jax.Array, jax.Array]:
     q, p = w.shape
     w32, sigma_d, scale_pc, zero_pc, sig_tilde, pmat, _ = _prep(
         w, sigma, spec, percdamp, grid

@@ -1,15 +1,26 @@
-"""Whole-model PTQ: the paper's pipeline, layer-by-layer over a real model.
+"""Whole-model PTQ: streaming, sharded, batched — the paper's pipeline at scale.
 
-Mirrors the reference GPTQ/QuantEase flow (paper §5 setup):
+Mirrors the reference GPTQ/QuantEase flow (paper §5 setup), engineered per
+DESIGN.md §Streaming-solver:
 
   * run calibration batches through the model **block by block**; the inputs
     feeding each block are the outputs of the *already-quantized* prefix
     (error propagation across blocks, as all layer-wise PTQ codebases do),
-  * per linear, accumulate Σ = XXᵀ streaming over batches (fp32, the only
-    statistic any method needs — ``p² + O(pq)`` memory, paper §3.2),
-  * quantize with the chosen method, write back (fake-quant bf16 leaves or
-    :class:`QuantizedTensor` leaves for real serving),
-  * record per-layer relative errors — the data behind the paper's Fig. 2.
+  * **streaming Σ capture**: per linear, a :class:`~repro.core.calib.CalibStats`
+    accumulator folds each batch into Σ = XXᵀ the moment it is computed
+    (fp32, the only statistic any method needs — ``p² + O(pq)`` memory,
+    paper §3.2).  Raw per-layer activation lists are never materialized;
+    peak capture memory per layer is O(p²), not O(n_calib·seq·p),
+  * **batched solves**: same-shape captured linears of a block — and all E
+    experts of an MoE matrix — are stacked and solved by a single vmapped
+    ``quantease_quantize``/``gptq_quantize`` call instead of sequential
+    Python loops (layer independence, as CDQuant exploits for parallel CD),
+  * **mesh sharding** (``ptq_quantize_model(..., mesh=...)``): calibration
+    Gram accumulation is data-sharded with a psum (calib.sharded_gram), and
+    the CD solve shard_maps over the independent q (output-row) dimension;
+    with one device or no mesh everything degrades to the local path,
+  * record per-layer relative errors — the data behind the paper's Fig. 2 —
+    and report per-block progress through an optional callback.
 
 Quantized leaf set: every matmul the model zoo routes through
 ``apply_linear`` except numerically-critical small tensors (mamba Δ
@@ -20,16 +31,19 @@ projection ``wdt``; norms; biases; MoE router) — see DESIGN.md
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
 from repro.core import awq, gptq, outlier, quantease, rtn, spqr
+from repro.core.calib import CalibStats
 from repro.core.quantease import relative_error
 from repro.models import model as M
-from repro.models.common import capture_linear_inputs, capture_scope
+from repro.models.common import capture_gram_stats, capture_scope
 from repro.quant import GridSpec, QuantizedTensor, compute_grid, quantize_codes
 
 __all__ = ["PTQConfig", "ptq_quantize_model", "QUANTIZABLE"]
@@ -42,6 +56,11 @@ QUANTIZABLE = {
 }
 _MOE_NAMES = {"w_gate", "w_up", "w_down"}
 
+# Methods whose solves are batchable with a single vmapped call; the rest
+# (outlier-aware variants carrying per-layer top-k structures) fall back to
+# a per-layer loop inside the same grouped interface.
+_BATCHED_METHODS = {"rtn", "gptq", "quantease"}
+
 
 @dataclasses.dataclass
 class PTQConfig:
@@ -53,10 +72,24 @@ class PTQConfig:
     block_size: int = 128
     emit: str = "fake"  # "fake" (dequantized bf16) | "qt" (QuantizedTensor)
     init_from_gptq: bool = False  # QuantEase warm start (paper §3.1)
+    # Streaming capture: feed calibration batches through the capture pass in
+    # chunks of this many sequences (0 = whole batch at once) so transient
+    # activation memory is bounded independently of the calibration set size.
+    # Dense Σ is chunk-invariant; MoE dispatch capacity is per-forward, so
+    # chunking can shift overflow drops and perturb per-expert Σ slightly.
+    stream_chunk: int = 0
+    # Shard the CD solve over output rows (and Gram accumulation over data)
+    # when a mesh is passed to ptq_quantize_model.
+    shard: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Single-layer and grouped solves
+# ---------------------------------------------------------------------------
 
 
 def _quantize_one(w2d: jax.Array, sigma: jax.Array, cfg: PTQConfig):
-    """Returns (w_hat fp32, h or None)."""
+    """Single (q, p) solve.  Returns (w_hat fp32, h or None)."""
     spec = cfg.spec
     if cfg.method == "rtn":
         return rtn.rtn_quantize(w2d, spec), None
@@ -105,6 +138,85 @@ def _quantize_one(w2d: jax.Array, sigma: jax.Array, cfg: PTQConfig):
     raise ValueError(cfg.method)
 
 
+def _solve_batched(w3: jax.Array, sig3: jax.Array, cfg: PTQConfig):
+    """Grouped solve: (G, q, p) × (G, p, p) → (G, q, p) in one vmapped call."""
+    spec = cfg.spec
+    if cfg.method == "rtn":
+        return jax.vmap(lambda wi: rtn.rtn_quantize(wi, spec))(w3)
+    if cfg.method == "gptq":
+        return gptq.gptq_quantize(
+            w3, sig3, spec, percdamp=cfg.percdamp, block_size=cfg.block_size
+        )
+    w_init = None
+    if cfg.init_from_gptq:
+        w_init = gptq.gptq_quantize(
+            w3, sig3, spec, percdamp=cfg.percdamp, block_size=cfg.block_size
+        )
+    w_hat, _ = quantease.quantease_quantize(
+        w3, sig3, spec,
+        iterations=cfg.iterations, percdamp=cfg.percdamp, w_init=w_init,
+    )
+    return w_hat
+
+
+def _solve_group(w3: jax.Array, sig3: jax.Array, cfg: PTQConfig, mesh):
+    """Solve G stacked same-shape layers; returns (w_hat (G,q,p), hs list).
+
+    Batchable methods go through one vmapped (optionally row-sharded) call;
+    outlier-aware methods run per-layer inside the same interface so the
+    grouped driver upstream stays method-agnostic.
+    """
+    if cfg.method in _BATCHED_METHODS:
+        solve = lambda w, s: _solve_batched(w, s, cfg)
+        if mesh is not None and cfg.shard:
+            w_hat = _shard_rows(solve, w3, sig3, mesh)
+        else:
+            w_hat = solve(w3, sig3)
+        return w_hat, [None] * w3.shape[0]
+    outs, hs = [], []
+    for g in range(w3.shape[0]):
+        w_hat, h = _quantize_one(w3[g], sig3[g], cfg)
+        outs.append(w_hat)
+        hs.append(h)
+    return jnp.stack(outs), hs
+
+
+def _shard_rows(solve: Callable, w3: jax.Array, sig3: jax.Array, mesh):
+    """shard_map a grouped solve over the independent q (output-row) dim.
+
+    Rows are independent in every column-sweep method (the CD update of row
+    i never reads row j), so splitting q across devices is exact.  Rows pad
+    up to the axis size; padded zero rows quantize in isolation and are
+    stripped.  Single-device meshes skip the wrapper entirely.
+    """
+    from repro.core.calib import shard_axis
+
+    axis = shard_axis(mesh)
+    n = mesh.shape[axis]
+    if n <= 1:
+        return solve(w3, sig3)
+    from jax.experimental.shard_map import shard_map
+
+    G, q, p = w3.shape
+    pad = (-q) % n
+    if pad:
+        w3 = jnp.pad(w3, ((0, 0), (0, pad), (0, 0)))
+
+    sharded = shard_map(
+        solve,
+        mesh=mesh,
+        in_specs=(PartitionSpec(None, axis, None), PartitionSpec(None, None, None)),
+        out_specs=PartitionSpec(None, axis, None),
+        check_rep=False,
+    )
+    return sharded(w3, sig3)[:, :q]
+
+
+# ---------------------------------------------------------------------------
+# Leaf marshalling
+# ---------------------------------------------------------------------------
+
+
 def _to_2d(w: jax.Array, d_in: int) -> jax.Array:
     return w.reshape(d_in, -1).T.astype(jnp.float32)  # (out, in)
 
@@ -147,57 +259,104 @@ def _emit_leaf(w_hat, h, like, cfg: PTQConfig):
     return qt
 
 
-def _sigma_from_records(xs: list[jax.Array]) -> jax.Array:
-    p = xs[0].shape[-1]
-    sigma = jnp.zeros((p, p), jnp.float32)
-    for x in xs:
-        x32 = x.astype(jnp.float32)
-        sigma = sigma + x32.T @ x32
-    return sigma
+# ---------------------------------------------------------------------------
+# Block quantization: group → batched solve → scatter back
+# ---------------------------------------------------------------------------
 
 
-def _quantize_block(p_blk: dict, records: dict, scope: str, cfg: PTQConfig, report: dict):
-    """Quantize every captured linear of one block, in place (returns copy)."""
-    new = dict(p_blk)
+@dataclasses.dataclass
+class _Item:
+    """One captured linear flattened to solver layout."""
+
+    name: str  # leaf name in the block param dict
+    key: str  # report key (scope/name[, .e{i} appended per expert])
+    w3: jax.Array  # (G, q, p) — G=1 for dense linears, G=E for MoE
+    sig3: jax.Array  # (G, p, p)
+    like: jax.Array  # original leaf (or one expert's leaf) for reshaping
+    moe: bool
+
+
+def _collect_items(p_blk: dict, stats: dict, scope: str) -> list[_Item]:
+    items = []
     for name, w in p_blk.items():
-        if name not in QUANTIZABLE or f"{scope}/{name}" not in records:
+        key = f"{scope}/{name}"
+        if name not in QUANTIZABLE or key not in stats:
             continue
-        xs = records[f"{scope}/{name}"]
+        st: CalibStats = stats[key]
         if name in _MOE_NAMES:
-            # xs: list of (E, C, d_in); per-expert Σ and per-expert quantize.
+            # w: (E, d_in, d_out); st.sigma: (E, p, p) — already stacked.
             E = w.shape[0]
-            outs, hs = [], []
-            for e in range(E):
-                sigma = _sigma_from_records([x[e] for x in xs])
-                w2d = w[e].reshape(w.shape[1], -1).T.astype(jnp.float32)
-                w_hat, h = _quantize_one(w2d, sigma, cfg)
-                report[f"{scope}/{name}.e{e}"] = float(
-                    relative_error(w2d, w_hat if h is None else w_hat + h, sigma)
-                )
-                outs.append(w_hat)
-                hs.append(h)
-            if cfg.emit == "fake":
-                new[name] = jnp.stack(
-                    [
-                        _from_2d(o if h is None else o + h, w[0])
-                        for o, h in zip(outs, hs)
-                    ]
-                ).astype(w.dtype)
-            else:
-                qts = [
-                    _emit_leaf(o, h, w[0], cfg) for o, h in zip(outs, hs)
-                ]
-                new[name] = jax.tree.map(lambda *ls: jnp.stack(ls), *qts)
-        else:
-            sigma = _sigma_from_records(xs)
-            d_in = xs[0].shape[-1]
-            w2d = _to_2d(w, d_in)
-            w_hat, h = _quantize_one(w2d, sigma, cfg)
-            report[f"{scope}/{name}"] = float(
-                relative_error(w2d, w_hat if h is None else w_hat + h, sigma)
+            w3 = jax.vmap(lambda we: we.reshape(w.shape[1], -1).T)(w).astype(
+                jnp.float32
             )
-            new[name] = _emit_leaf(w_hat, h, w, cfg)
+            items.append(_Item(name, key, w3, st.sigma, w[0], True))
+        else:
+            p = st.p
+            items.append(
+                _Item(name, key, _to_2d(w, p)[None], st.sigma[None], w, False)
+            )
+    return items
+
+
+def _quantize_block(
+    p_blk: dict, stats: dict, scope: str, cfg: PTQConfig, report: dict, mesh
+) -> dict:
+    """Quantize every captured linear of one block (returns a new dict).
+
+    Items are grouped by solver shape (q, p): each group — e.g. wq/wk/wv
+    sharing d_model inputs, or wg/wu, or the E experts of one MoE matrix —
+    is solved by a single batched call.
+    """
+    items = _collect_items(p_blk, stats, scope)
+    groups: dict[tuple, list[_Item]] = {}
+    for it in items:
+        groups.setdefault(it.w3.shape[1:], []).append(it)
+
+    new = dict(p_blk)
+    for shape, group in groups.items():
+        w3 = jnp.concatenate([it.w3 for it in group], axis=0)
+        sig3 = jnp.concatenate([it.sig3 for it in group], axis=0)
+        w_hat3, hs = _solve_group(w3, sig3, cfg, mesh)
+        errs = relative_error(w3, _effective(w_hat3, hs), sig3)
+        off = 0
+        for it in group:
+            G = it.w3.shape[0]
+            sl = slice(off, off + G)
+            _scatter_item(it, w_hat3[sl], hs[off : off + G], errs[sl], new, cfg, report)
+            off += G
     return new
+
+
+def _effective(w_hat3, hs):
+    if all(h is None for h in hs):
+        return w_hat3
+    return jnp.stack(
+        [w if h is None else w + h for w, h in zip(w_hat3, hs)]
+    )
+
+
+def _scatter_item(it: _Item, w_hat, hs, errs, new: dict, cfg: PTQConfig, report: dict):
+    if it.moe:
+        for e in range(w_hat.shape[0]):
+            report[f"{it.key}.e{e}"] = float(errs[e])
+        if cfg.emit == "fake":
+            new[it.name] = jnp.stack(
+                [
+                    _from_2d(w if h is None else w + h, it.like)
+                    for w, h in zip(w_hat, hs)
+                ]
+            ).astype(new[it.name].dtype)
+        else:
+            qts = [_emit_leaf(w, h, it.like, cfg) for w, h in zip(w_hat, hs)]
+            new[it.name] = jax.tree.map(lambda *ls: jnp.stack(ls), *qts)
+    else:
+        report[it.key] = float(errs[0])
+        new[it.name] = _emit_leaf(w_hat[0], hs[0], it.like, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model driver
+# ---------------------------------------------------------------------------
 
 
 def _slice_period(stack, i):
@@ -214,11 +373,36 @@ def _set_period(stack, i, new_period):
     )
 
 
+def _capture_chunks(x: jax.Array, chunk: int):
+    """Split a (B, S, d) batch along B into ≤chunk-sequence slices."""
+    if chunk <= 0 or x.shape[0] <= chunk:
+        return [x]
+    return [x[i : i + chunk] for i in range(0, x.shape[0], chunk)]
+
+
+def _apply_chunked(mcfg, plan, b, blk, x, enc_out, chunk: int) -> jax.Array:
+    """Forward one block over ≤chunk-sequence slices (batch dim independent)."""
+    x_chunks = _capture_chunks(x, chunk)
+    eo_chunks = (
+        [None] * len(x_chunks) if enc_out is None else _capture_chunks(enc_out, chunk)
+    )
+    outs = [
+        M._block_apply(
+            mcfg, plan.heads, b, blk, xc,
+            mode="train", pos_ids=jnp.arange(xc.shape[1]), enc_out=ec,
+        )[0]
+        for xc, ec in zip(x_chunks, eo_chunks)
+    ]
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+
 def ptq_quantize_model(
     plan: M.ModelPlan,
     params,
     calib_batches: list[dict],
     cfg: PTQConfig,
+    mesh=None,
+    progress_cb: Optional[Callable[[dict], None]] = None,
 ):
     """Quantize a model's decoder (+ encoder) stacks.
 
@@ -229,9 +413,16 @@ def ptq_quantize_model(
     — usable by train_loss/prefill/decode directly.  ``emit="qt"`` returns
     per-period *lists* of blocks with QuantizedTensor leaves (the serving
     engine consumes this unrolled layout).
+
+    ``mesh`` (+ ``cfg.shard``): data-shard Gram accumulation and row-shard
+    the CD solves; identical results on one device.  ``progress_cb``
+    receives one dict per quantized block — the launcher renders these as
+    progress lines and a block-level progress file (an audit trail for
+    post-hoc/restart inspection; quantization itself restarts from scratch).
     """
     mcfg = plan.cfg
     report: dict[str, float] = {}
+    calib_mesh = mesh if (mesh is not None and cfg.shard) else None
 
     # --- embed calibration batches once ---
     xs, enc_outs = [], []
@@ -261,6 +452,7 @@ def ptq_quantize_model(
         new_params["enc"], enc_inputs = _quantize_stack(
             plan, params["enc"], mcfg.enc_pattern, mcfg.n_enc_periods,
             enc_inputs, "enc", cfg, report, enc_outs=None,
+            mesh=calib_mesh, progress_cb=progress_cb,
         )
         enc_outs = [
             M.apply_norm(params["enc_final_norm"], e, mcfg.norm) for e in enc_inputs
@@ -268,42 +460,74 @@ def ptq_quantize_model(
 
     new_params["dec"], _ = _quantize_stack(
         plan, params["dec"], mcfg.pattern, mcfg.n_periods, xs, "dec", cfg, report,
-        enc_outs=enc_outs,
+        enc_outs=enc_outs, mesh=calib_mesh, progress_cb=progress_cb,
     )
     return new_params, report
 
 
-def _quantize_stack(plan, stack, pattern, n_periods, xs, stack_name, cfg, report, enc_outs):
+def _quantize_stack(
+    plan, stack, pattern, n_periods, xs, stack_name, cfg, report, enc_outs,
+    mesh=None, progress_cb=None,
+):
     mcfg = plan.cfg
     quantized_periods = []  # for emit="qt": list of {bi: block params}
     stack_out = stack
+    n_blocks_total = n_periods * len(pattern)
     for period in range(n_periods):
         p_period = _slice_period(stack, period)
         new_period = {}
         for i, b in enumerate(pattern):
+            t0 = time.monotonic()
             scope = f"{stack_name}.p{period}.b{i}"
-            records: dict = {}
-            # capture pass: current block, current (quantized-prefix) inputs
-            with capture_linear_inputs(records), capture_scope(scope):
+            stats: dict[str, CalibStats] = {}
+            # Capture pass: current block, current (quantized-prefix) inputs.
+            # Each chunk's activations fold into Σ immediately — nothing but
+            # the p×p accumulators survives this loop.
+            with capture_gram_stats(stats, mesh=mesh), capture_scope(scope):
                 for bi, x in enumerate(xs):
-                    pos = jnp.arange(x.shape[1])
-                    M._block_apply(
-                        mcfg, plan.heads, b, p_period[f"b{i}"], x,
-                        mode="train", pos_ids=pos,
-                        enc_out=None if enc_outs is None else enc_outs[bi],
+                    eo = None if enc_outs is None else enc_outs[bi]
+                    x_chunks = _capture_chunks(x, cfg.stream_chunk)
+                    eo_chunks = (
+                        [None] * len(x_chunks)
+                        if eo is None
+                        else _capture_chunks(eo, cfg.stream_chunk)
                     )
-            new_blk = _quantize_block(p_period[f"b{i}"], records, scope, cfg, report)
+                    for xc, ec in zip(x_chunks, eo_chunks):
+                        pos = jnp.arange(xc.shape[1])
+                        M._block_apply(
+                            mcfg, plan.heads, b, p_period[f"b{i}"], xc,
+                            mode="train", pos_ids=pos, enc_out=ec,
+                        )
+            n_before = len(report)
+            new_blk = _quantize_block(
+                p_period[f"b{i}"], stats, scope, cfg, report, mesh
+            )
             new_period[f"b{i}"] = new_blk
-            # recompute this block's outputs with quantized weights
-            blk_for_fwd = new_blk if cfg.emit == "fake" else new_blk
+            # Recompute this block's outputs with quantized weights — chunked
+            # like the capture pass, so stream_chunk bounds transient
+            # activation memory in *both* passes (the stored block inputs xs
+            # themselves are the pipeline's irreducible working set).
             xs = [
-                M._block_apply(
-                    mcfg, plan.heads, b, blk_for_fwd, x,
-                    mode="train", pos_ids=jnp.arange(x.shape[1]),
-                    enc_out=None if enc_outs is None else enc_outs[bi],
-                )[0]
+                _apply_chunked(
+                    mcfg, plan, b, new_blk, x,
+                    None if enc_outs is None else enc_outs[bi],
+                    cfg.stream_chunk,
+                )
                 for bi, x in enumerate(xs)
             ]
+            if progress_cb is not None:
+                new_keys = list(report)[n_before:]
+                errs = [report[k] for k in new_keys]
+                progress_cb({
+                    "stack": stack_name,
+                    "period": period,
+                    "block": i,
+                    "done_blocks": period * len(pattern) + i + 1,
+                    "total_blocks": n_blocks_total,
+                    "n_linears": len(new_keys),
+                    "mean_rel_error": float(np.mean(errs)) if errs else 0.0,
+                    "seconds": round(time.monotonic() - t0, 3),
+                })
         quantized_periods.append(new_period)
         if cfg.emit == "fake":
             stack_out = _set_period(stack_out, period, new_period)

@@ -1,0 +1,14 @@
+"""Distribution layer: logical-axis sharding rules, checkpoints, elasticity.
+
+Submodules:
+
+* :mod:`repro.dist.sharding` — logical axis names → mesh ``PartitionSpec``
+  rules engine with divisibility fallbacks; the ambient ``axis_rules``
+  context that makes ``logical_constraint`` calls in model code resolve.
+* :mod:`repro.dist.checkpoint` — atomic step-directory checkpoints
+  (``step_N.tmp`` → rename), dtype-exact round-trips including bf16.
+* :mod:`repro.dist.elastic` — ``RetryingRunner`` restart-from-checkpoint
+  loop and degraded-capacity mesh rebuilding.
+* :mod:`repro.dist.qgather` — int8-quantized FSDP gather transform
+  (§Perf H3; kept out of default configs, see launch/specs.py).
+"""

@@ -1,0 +1,143 @@
+"""Atomic step-directory checkpoints with dtype-exact round-trips.
+
+Layout: ``<dir>/step_<N>/`` holding one raw-bytes blob per pytree leaf (in
+flatten order) plus ``manifest.json`` (step, user meta, per-leaf shape and
+dtype).  Writes go to ``step_<N>.tmp`` and are renamed into place only after
+the manifest lands, so a crashed half-write can never be mistaken for a
+checkpoint — :func:`cleanup_tmp` sweeps orphaned ``.tmp`` dirs at restart.
+
+Leaves are stored as raw buffers (``tobytes``), not ``np.save``: numpy can't
+round-trip ml_dtypes extension dtypes (bf16) through ``.npy`` without
+pickling, while ``np.frombuffer(..., np.dtype("bfloat16"))`` is exact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # noqa: F401 — registers bfloat16 & friends with np.dtype
+import numpy as np
+
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "latest_step",
+    "cleanup_tmp",
+]
+
+_MANIFEST = "manifest.json"
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step}")
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None):
+    """Write ``tree`` as ``step_<step>`` atomically (tmp dir + rename)."""
+    leaves, _ = jax.tree.flatten(tree)
+    final = _step_dir(ckpt_dir, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    records = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        with open(os.path.join(tmp, f"leaf_{i}.bin"), "wb") as f:
+            f.write(np.ascontiguousarray(arr).tobytes())
+        records.append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+    manifest = {"step": step, "meta": meta or {}, "leaves": records}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    # Re-saving an existing step (elastic retry rewrites the recovery step):
+    # move the old dir aside first so there is never a moment where neither
+    # a valid old nor new step_<N> exists; the .old copy dies only after the
+    # replace lands (and cleanup_tmp sweeps any crash leftovers).
+    old = final + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(final):
+        os.replace(final, old)
+    os.replace(tmp, final)
+    shutil.rmtree(old, ignore_errors=True)
+
+
+def load_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None):
+    """Restore the pytree saved at ``step`` (default: latest).
+
+    ``like`` supplies the tree structure; leaf dtypes/shapes come from the
+    manifest (and are checked against ``like`` where it carries them).
+    Returns ``(tree, manifest)``.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = _step_dir(ckpt_dir, step)
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    flat_like, tdef = jax.tree.flatten(like)
+    recs = manifest["leaves"]
+    if len(recs) != len(flat_like):
+        raise ValueError(
+            f"checkpoint has {len(recs)} leaves, template has {len(flat_like)}"
+        )
+    out = []
+    for i, rec in enumerate(recs):
+        like_leaf = flat_like[i]
+        if hasattr(like_leaf, "shape") and tuple(like_leaf.shape) != tuple(rec["shape"]):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {rec['shape']} != template "
+                f"shape {tuple(like_leaf.shape)}"
+            )
+        if hasattr(like_leaf, "dtype") and str(np.dtype(like_leaf.dtype)) != rec["dtype"]:
+            raise ValueError(
+                f"leaf {i}: checkpoint dtype {rec['dtype']} != template "
+                f"dtype {np.dtype(like_leaf.dtype)}"
+            )
+        with open(os.path.join(d, f"leaf_{i}.bin"), "rb") as f:
+            raw = f.read()
+        arr = np.frombuffer(raw, dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(tdef, out), manifest
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Highest complete checkpoint step under ``ckpt_dir`` (None if none)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, _MANIFEST)):
+                try:
+                    steps.append(int(name[len("step_"):]))
+                except ValueError:
+                    continue
+    return max(steps) if steps else None
+
+
+def cleanup_tmp(ckpt_dir: str):
+    """Remove orphaned ``step_*.tmp``/``step_*.old`` dirs from crashed writers.
+
+    A ``step_N.old`` whose ``step_N`` is missing means the crash hit between
+    the two renames in :func:`save_checkpoint` — restore it instead of
+    deleting (the .tmp replacement is unproven; the .old was a committed
+    checkpoint)."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    for name in os.listdir(ckpt_dir):
+        path = os.path.join(ckpt_dir, name)
+        if name.startswith("step_") and name.endswith(".tmp"):
+            shutil.rmtree(path, ignore_errors=True)
+        elif name.startswith("step_") and name.endswith(".old"):
+            final = path[: -len(".old")]
+            if not os.path.exists(final):
+                os.replace(path, final)
+            else:
+                shutil.rmtree(path, ignore_errors=True)

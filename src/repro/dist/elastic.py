@@ -1,0 +1,71 @@
+"""Elastic training: retry-from-checkpoint loop + degraded-capacity meshes.
+
+``RetryingRunner`` is deliberately dumb: any exception inside a step rolls
+the loop back to the last checkpoint via ``restore_fn`` and keeps going, up
+to ``max_retries`` total recoveries.  Determinism comes from the caller's
+exact-step data replay (``data_step`` in the checkpoint meta), not from
+anything here — see trainer tests for the contract.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+__all__ = ["RetryingRunner", "elastic_mesh"]
+
+
+class RetryingRunner:
+    """Run ``step_fn(state, step)`` for a span of steps with crash recovery.
+
+    ``restore_fn() -> (state, step)`` must rebuild state from the latest
+    checkpoint and report the step to resume at.  ``fault_hook(step)`` is a
+    test seam: it runs before each step and may raise to simulate a failure.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        restore_fn: Callable,
+        fault_hook: Optional[Callable] = None,
+        max_retries: int = 3,
+    ):
+        self.step_fn = step_fn
+        self.restore_fn = restore_fn
+        self.fault_hook = fault_hook
+        self.max_retries = max_retries
+        self.recoveries = 0
+
+    def run(self, state, start: int, n_steps: int):
+        step, end = start, start + n_steps
+        while step < end:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                state = self.step_fn(state, step)
+                step += 1
+            except Exception:
+                if self.recoveries >= self.max_retries:
+                    raise
+                self.recoveries += 1
+                state, step = self.restore_fn()
+        return state, step
+
+
+def elastic_mesh(model_axis: int = 1, devices=None):
+    """Largest ("data", "model") mesh the *currently alive* devices support.
+
+    On a restart after losing hosts, the surviving device count may no
+    longer fill the original mesh; this trims the data axis to the largest
+    multiple of ``model_axis`` that fits (dropping remainder devices) so
+    training resumes at degraded capacity instead of wedging.
+    """
+    devs = list(devices if devices is not None else jax.devices())
+    if model_axis <= 0 or len(devs) < model_axis:
+        raise ValueError(
+            f"{len(devs)} device(s) cannot host model_axis={model_axis}"
+        )
+    data = len(devs) // model_axis
+    keep = devs[: data * model_axis]
+    return jax.make_mesh((data, model_axis), ("data", "model"), devices=keep)

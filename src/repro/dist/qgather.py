@@ -1,0 +1,63 @@
+"""Int8-quantized FSDP gather (§Perf H3) — kept out of default configs.
+
+Under FSDP the scan body must all-gather each period's weights before use.
+Gathering bf16 costs 2 bytes/param of interconnect; quantizing shards to
+int8 (per-row scale) before the gather and dequantizing after halves that.
+XLA's convert-pair elimination defeats the narrow dtype when expressed as
+plain ``convert → all-gather → convert`` (see launch/specs.py note), so the
+transform pins the gathered layout with explicit sharding constraints on
+the int8 codes + fp32 scales.
+
+``make_period_transform`` returns a function applied to one period's param
+tree inside the scan body (ModelPlan.param_transform), mapping
+FSDP-sharded leaves (``rules`` layout) to replicated leaves (``rep_rules``
+layout).  Non-float and small (<2-D) leaves gather unquantized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import Rules
+
+__all__ = ["make_period_transform"]
+
+_QUANT_DTYPES = (jnp.bfloat16, jnp.float32, jnp.float16)
+
+
+def _gather_int8(x: jax.Array, sharded, replicated) -> jax.Array:
+    """Quantize per leading-row, gather codes+scales, dequantize."""
+    x32 = x.astype(jnp.float32)
+    red = tuple(range(1, x.ndim))
+    scale = jnp.max(jnp.abs(x32), axis=red, keepdims=True) / 127.0 + 1e-12
+    codes = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    codes = jax.lax.with_sharding_constraint(codes, sharded)
+    codes = jax.lax.with_sharding_constraint(codes, replicated)
+    scale = jax.lax.with_sharding_constraint(scale, replicated)
+    return (codes.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def make_period_transform(period_axes, rules: Rules, rep_rules: Rules):
+    """Build the per-period transform: FSDP layout → replicated layout.
+
+    ``period_axes``: logical-axes tree matching one period's params (the
+    stacked "layers" axis already stripped by the caller).
+    """
+    flat_ax = jax.tree.flatten(
+        period_axes, is_leaf=lambda x: isinstance(x, tuple)
+    )[0]
+
+    def transform(p_period):
+        flat_p, tdef = jax.tree.flatten(p_period)
+        out = []
+        for leaf, ax in zip(flat_p, flat_ax):
+            ax = tuple(ax)
+            rep = rep_rules.sharding(ax)
+            if leaf.ndim >= 2 and leaf.dtype in _QUANT_DTYPES:
+                out.append(_gather_int8(leaf, rules.sharding(ax), rep))
+            else:
+                out.append(jax.lax.with_sharding_constraint(leaf, rep))
+        return jax.tree.unflatten(tdef, out)
+
+    return transform

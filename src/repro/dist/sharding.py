@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules (t5x-style), with divisibility fallbacks.
+
+Model code annotates parameters and activations with *logical* axis names
+("embed", "heads", "ffn", ...; see models/model.py ``param_axes``).  This
+module owns the single mapping from those names to mesh axes:
+
+* :func:`make_rules` builds a :class:`Rules` table for one mesh, checking
+  divisibility of every dimension it knows the size of and falling back to
+  replication (or to an alternative axis — e.g. ``head_dim`` when
+  ``kv_heads`` doesn't divide the model axis) when a dim doesn't fit.
+* :class:`Rules` resolves logical-axes tuples to ``PartitionSpec`` /
+  ``NamedSharding``.  A mesh axis may appear at most once per spec (GSPMD
+  rule); duplicate uses degrade to ``None`` — this is what lets a leaf like
+  ``("embed", "ffn", "ffn")`` stay lowerable instead of erroring.
+* :func:`axis_rules` installs a Rules as the ambient context;
+  :func:`logical_constraint` is the model-side entry point: identity when no
+  rules are active (CPU tests), ``with_sharding_constraint`` otherwise.
+
+Nothing here touches jax device state at import time.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+__all__ = [
+    "Rules",
+    "make_rules",
+    "axis_rules",
+    "current_rules",
+    "logical_constraint",
+    "mesh_axis_size",
+]
+
+# A table value: one mesh axis, a tuple of mesh axes (e.g. batch over
+# ("pod", "data")), or None (replicated).
+_Entry = Union[str, tuple, None]
+
+
+def mesh_axis_size(mesh, axes) -> int:
+    """Product of the sizes of the named mesh axes (missing axes count 1)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Resolved logical-axis → mesh-axis table for one mesh."""
+
+    mesh: jax.sharding.Mesh
+    table: dict
+
+    def spec(self, axes: tuple) -> PartitionSpec:
+        """Resolve a logical-axes tuple to a PartitionSpec.
+
+        Each mesh axis is used at most once; later logical axes that map to
+        an already-used mesh axis resolve to None (replicated on that dim).
+        """
+        used: set = set()
+        out = []
+        for name in axes:
+            entry: _Entry = self.table.get(name) if name is not None else None
+            if entry is None:
+                out.append(None)
+                continue
+            members = (entry,) if isinstance(entry, str) else tuple(entry)
+            free = tuple(m for m in members if m not in used)
+            used.update(free)
+            if not free:
+                out.append(None)
+            elif len(free) == 1:
+                out.append(free[0])
+            else:
+                out.append(free)
+        return PartitionSpec(*out)
+
+    def sharding(self, axes: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes))
+
+
+def make_rules(
+    mesh,
+    *,
+    n_heads: int = 0,
+    n_kv_heads: int = 0,
+    head_dim: int = 0,
+    d_ff: int = 0,
+    n_experts: int = 0,
+    vocab: int = 0,
+    d_model: int = 0,
+    moe_ff: int = 0,
+    ssm_heads: int = 0,
+    fsdp: bool = False,
+    seq_sharded_cache: bool = False,
+    extra: Optional[dict] = None,
+) -> Rules:
+    """Build the rules table for ``mesh``.
+
+    Sizes are the *global* (padded) dimension carried under each logical
+    name; 0 means "unknown" and maps to replicated.  ``extra`` entries
+    (e.g. the serve path's fused-dim names from qparams.qt_rules_extra)
+    override/extend the base table verbatim.
+    """
+    model_n = mesh.shape.get("model", 1)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    data_n = mesh.shape.get("data", 1)
+
+    def fits(n: int) -> bool:
+        return n > 0 and n % model_n == 0
+
+    kv_on_model = fits(n_kv_heads)
+    experts_on_model = fits(n_experts)
+    table: dict = {
+        "batch": data_axes or None,
+        "layers": None,
+        # Attention: kv_pad is padded to a model-axis multiple by HeadPlan,
+        # so "heads" (and the fused h_pad passed as n_heads) always fits.
+        "heads": "model" if fits(n_heads) else None,
+        "kv_heads": "model" if kv_on_model else None,
+        # Fallback: when true kv heads don't divide (GQA with few kv heads),
+        # shard the head_dim instead so wk/wv aren't replicated.
+        "head_dim": "model" if (not kv_on_model and fits(head_dim)) else None,
+        "ffn": "model" if fits(d_ff) else None,
+        "experts": "model" if experts_on_model else None,
+        # EP when experts divide (OLMoE 64, Jamba 16), else TP on the
+        # per-expert ffn axis (Mixtral 8 on a 16-wide model axis).
+        "expert_ffn": None
+        if experts_on_model
+        else ("model" if (moe_ff == 0 or fits(moe_ff)) else None),
+        "vocab": "model" if fits(vocab) else None,
+        "ssm_heads": "model" if fits(ssm_heads) else None,
+        # FSDP: parameters sharded over the data axis on their embed dim.
+        "embed": ("data" if (fsdp and d_model and d_model % data_n == 0) else None),
+        # Sequence parallelism for the pre-stack activation region.
+        "seq_sp": "model",
+        "cache_seq": "model" if seq_sharded_cache else None,
+    }
+    if extra:
+        table.update(extra)
+    return Rules(mesh=mesh, table=table)
+
+
+# ---------------------------------------------------------------------------
+# Ambient rules context
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Rules]):
+    """Install ``rules`` as the ambient table (None → constraints no-op)."""
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def logical_constraint(x: jax.Array, axes: tuple) -> jax.Array:
+    """``with_sharding_constraint`` under the ambient rules; identity when
+    no rules are installed (single-device tests and examples)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(axes))

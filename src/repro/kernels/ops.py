@@ -8,6 +8,8 @@ dispatchers never change semantics, only execution engines.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -25,18 +27,22 @@ def on_tpu() -> bool:
 def quantease_block_sweep(
     beta0, sig_blk, w_old_blk, scale_blk, zero_blk, *, n_levels, quantize, interpret=None
 ):
+    """Intra-block CD sweep.  2-D operands: one (q, B) block; a leading
+    group dim (``beta0: (G, q, B)``, ``sig_blk: (G, B, B)``, …) sweeps G
+    independent layers at once — pallas_call's batching rule folds the vmap
+    into an extra grid dimension, so the grouped-block solver issues a
+    single kernel launch per column block."""
     if interpret is None:
         interpret = not on_tpu()
-    return quantease_block_sweep_pallas(
-        beta0,
-        sig_blk,
-        w_old_blk,
-        scale_blk,
-        zero_blk,
+    kernel = functools.partial(
+        quantease_block_sweep_pallas,
         n_levels=n_levels,
         quantize=quantize,
         interpret=interpret,
     )
+    if beta0.ndim == 3:
+        return jax.vmap(kernel)(beta0, sig_blk, w_old_blk, scale_blk, zero_blk)
+    return kernel(beta0, sig_blk, w_old_blk, scale_blk, zero_blk)
 
 
 def dequant_matmul(

@@ -6,9 +6,11 @@ jax device state.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
-__all__ = ["make_production_mesh", "mesh_devices"]
+__all__ = ["make_production_mesh", "make_data_mesh", "mesh_devices"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,6 +18,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(
         shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_data_mesh(n: Optional[int] = None):
+    """1-D ("data",) mesh over the first ``n`` local devices (default: all).
+
+    The PTQ driver's sharding unit (launch/quantize.py --shard): calibration
+    Gram accumulation splits batch rows over it, the CD solve splits output
+    rows over it.  Returns None for a single device — callers treat None as
+    "run the local fallback path".
+    """
+    n = len(jax.devices()) if n is None else n
+    if n <= 1:
+        return None
+    return jax.make_mesh(
+        (n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
     )
 
 

@@ -1,17 +1,52 @@
 """PTQ launcher: quantize a trained checkpoint with any paper method.
 
+Runs the streaming, sharded whole-model engine (core/solver.py): the
+capture pass accumulates Σ = XXᵀ per linear batch-by-batch (never raw
+activations), same-shape linears solve in batched vmapped calls, and with
+``--shard`` both the Gram accumulation and the coordinate-descent solve
+split across all local devices (single-device runs take the identical
+local fallback automatically).
+
+Flags beyond the model/method basics:
+
+* ``--shard`` — build a 1-D ("data",) mesh over every local device;
+  calibration batches data-shard with psum'd Σ accumulation and the CD
+  solve shard_maps over output rows.  A no-op on one device.
+* ``--stream-calib N`` — feed the capture pass at most N sequences at a
+  time (0 = whole calibration batch at once).  Transient activation memory
+  during capture becomes O(N·seq·p) regardless of ``--calib-batches``.
+  For dense linears the accumulated Σ is identical either way; MoE layers
+  compute dispatch capacity per forward, so chunking can change which
+  overflow tokens drop and perturb the per-expert Σ slightly (same effect
+  as choosing a different calibration batch size).
+* ``--resume`` — report progress from a previous run's ``progress.jsonl``
+  in the output dir before starting (block-level audit trail of what
+  completed and the per-block error summary).
+
+Progress: one line + one ``progress.jsonl`` record per quantized block
+(stack, period, block index, linears solved, mean relative error, seconds).
+
+End-to-end on the reduced CPU configs (quickstart-sized, ~a minute):
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm_12b \
+        --reduce --steps 20 --ckpt-dir /tmp/repro_train
     PYTHONPATH=src python -m repro.launch.quantize --arch stablelm_12b \
-        --reduce --ckpt-dir /tmp/repro_train --method quantease --bits 3
+        --reduce --ckpt-dir /tmp/repro_train --method quantease --bits 3 \
+        --stream-calib 2 --shard
 """
 
 import argparse
 import json
+import os
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Whole-model PTQ with the streaming/sharded QuantEase engine."
+    )
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--reduce", action="store_true",
+                    help="CPU-sized config (same reduction as launch/train.py)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--out-dir", default="/tmp/repro_quant")
     ap.add_argument("--method", default="quantease",
@@ -23,6 +58,12 @@ def main():
     ap.add_argument("--group-size", type=int, default=0)
     ap.add_argument("--calib-batches", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--shard", action="store_true",
+                    help="shard Σ accumulation + CD solve over all local devices")
+    ap.add_argument("--stream-calib", type=int, default=0, metavar="N",
+                    help="capture-pass chunk size in sequences (0 = whole batch)")
+    ap.add_argument("--resume", action="store_true",
+                    help="report a previous run's block progress before starting")
     args = ap.parse_args()
 
     import jax.numpy as jnp
@@ -31,6 +72,7 @@ def main():
     from repro.core.solver import PTQConfig, ptq_quantize_model
     from repro.data.pipeline import DataConfig, make_batch_fn
     from repro.dist import checkpoint as ckpt
+    from repro.launch.mesh import make_data_mesh
     from repro.launch.train import reduced
     from repro.models import make_plan, param_shapes
     from repro.quant import GridSpec
@@ -43,6 +85,22 @@ def main():
 
     import jax
 
+    progress_path = os.path.join(args.out_dir, "progress.jsonl")
+    if args.resume and os.path.exists(progress_path):
+        with open(progress_path) as f:
+            lines = [json.loads(ln) for ln in f if ln.strip()]
+        if lines:
+            last = lines[-1]
+            print(
+                f"previous run: {last['done_blocks']}/{last['total_blocks']} blocks "
+                f"({last['stack']}.p{last['period']}.b{last['block']}), "
+                f"mean_err={last['mean_rel_error']:.4g} — restarting from scratch"
+            )
+    # Each run owns its progress file: truncate so records never interleave
+    # across runs (with or without --resume).
+    if os.path.exists(progress_path):
+        os.remove(progress_path)
+
     like_params = jax.tree.map(
         lambda s: jnp.zeros(s.shape, s.dtype), param_shapes(plan)
     )
@@ -50,6 +108,11 @@ def main():
     state, manifest = ckpt.load_checkpoint(args.ckpt_dir, like)
     params = state["params"]
     print(f"loaded checkpoint step {manifest['step']}")
+
+    mesh = make_data_mesh() if args.shard else None
+    if args.shard:
+        n = len(jax.devices())
+        print(f"--shard: {n} device(s)" + (" — single-device fallback" if mesh is None else ""))
 
     batch_fn, _ = make_batch_fn(
         DataConfig(vocab=cfg.vocab), cfg, batch=4, seq=args.seq
@@ -63,8 +126,25 @@ def main():
         spec=GridSpec(bits=args.bits, group_size=args.group_size or None),
         iterations=args.iterations,
         outlier_frac=args.outlier_frac,
+        stream_chunk=args.stream_calib,
+        shard=args.shard,
     )
-    qparams, report = ptq_quantize_model(plan, params, calib, pcfg)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def progress(rec: dict):
+        print(
+            f"[{rec['stack']} p{rec['period']} b{rec['block']} "
+            f"{rec['done_blocks']}/{rec['total_blocks']}] "
+            f"{rec['n_linears']} linears  mean_err={rec['mean_rel_error']:.4g}  "
+            f"{rec['seconds']}s"
+        )
+        with open(progress_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    qparams, report = ptq_quantize_model(
+        plan, params, calib, pcfg, mesh=mesh, progress_cb=progress
+    )
     ckpt.save_checkpoint(
         args.out_dir, manifest["step"],
         {"params": qparams},

@@ -165,8 +165,11 @@ def capture_scope(name: str):
 
 @contextlib.contextmanager
 def capture_linear_inputs(records: dict):
-    """Collect {scope/name: [x2d, ...]} for every linear applied within.
-    Used by the PTQ solver (eager, layer-by-layer); never active under jit."""
+    """Collect {scope/name: [x2d, ...]} for every linear applied within —
+    RAW activations, O(n·p) memory per layer.  Kept as the numerical oracle
+    for the streaming path (tests); the whole-model solver uses
+    :func:`capture_gram_stats` instead and never materializes these lists.
+    Eager-only; never active under jit."""
     prev = getattr(_capture_state, "records", None)
     _capture_state.records = records
     try:
@@ -175,13 +178,49 @@ def capture_linear_inputs(records: dict):
         _capture_state.records = prev
 
 
-def _record_linear(name, x):
+@contextlib.contextmanager
+def capture_gram_stats(stats: dict, mesh=None):
+    """Accumulate {scope/name: CalibStats} streaming for every linear applied
+    within: each call folds its activations into the layer's Σ = XXᵀ on the
+    spot (``p²`` fp32 per linear, DESIGN.md §Streaming-solver) — raw
+    activations are never retained.  Under a mesh, row contraction happens
+    shard-locally with a psum (calib.sharded_gram).  Eager-only."""
+    prev = getattr(_capture_state, "stats", None)
+    prev_mesh = getattr(_capture_state, "stats_mesh", None)
+    _capture_state.stats = stats
+    _capture_state.stats_mesh = mesh
+    try:
+        yield stats
+    finally:
+        _capture_state.stats = prev
+        _capture_state.stats_mesh = prev_mesh
+
+
+def _record_linear(name, x, expert_stacked: bool = False):
+    if name is None:
+        return
     records = getattr(_capture_state, "records", None)
-    if records is None or name is None:
+    stats = getattr(_capture_state, "stats", None)
+    if records is None and stats is None:
         return
     scope = getattr(_capture_state, "scope", None)
     key = f"{scope}/{name}" if scope else name
-    records.setdefault(key, []).append(x.reshape(-1, x.shape[-1]))
+    if records is not None:
+        records.setdefault(key, []).append(
+            x if expert_stacked else x.reshape(-1, x.shape[-1])
+        )
+    if stats is not None:
+        from repro.core.calib import CalibStats
+
+        p = x.shape[-1]
+        if key not in stats:
+            stats[key] = CalibStats.zeros(p, experts=x.shape[0] if expert_stacked else 0)
+        if expert_stacked:
+            stats[key] = stats[key].update_expert_tokens(x)
+        else:
+            stats[key] = stats[key].update_tokens(
+                x, mesh=getattr(_capture_state, "stats_mesh", None)
+            )
 
 
 def apply_linear(w, x: jax.Array, out_shape: tuple = (), name: str = None) -> jax.Array:

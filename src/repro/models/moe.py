@@ -35,7 +35,7 @@ def _expert_matmul(w, xs: jax.Array, name: str) -> jax.Array:
     ``w`` is dense (E, d_in, d_out) or a QuantizedTensor with codes
     (E, d_out, d_in) (per-expert grids stacked on the leading axis).
     """
-    _record_linear(name, xs)  # solver consumes (E, C, d_in) specially
+    _record_linear(name, xs, expert_stacked=True)  # (E, C, d_in): per-expert Σ
     if hasattr(w, "codes"):
         from repro.kernels.ref import dequant_matmul_ref
 

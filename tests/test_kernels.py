@@ -3,7 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.quant import pack_codes
@@ -36,6 +37,23 @@ def test_cd_sweep_matches_ref(q, bsz, quantize, n_levels):
     scale = float(jnp.max(jnp.abs(wr))) + 1e-9
     assert float(jnp.max(jnp.abs(wk - wr))) / scale < 1e-5
     assert float(jnp.max(jnp.abs(dk - dr))) / scale < 1e-5
+
+
+def test_cd_sweep_batched_matches_loop():
+    """Leading group dim (grouped-block solver path) == per-slice sweeps."""
+    G = 3
+    probs = [_sweep_problem(11 + g, 24, 16) for g in range(G)]
+    stacked = [jnp.stack([p[j] for p in probs]) for j in range(5)]
+    wb, db = ops.quantease_block_sweep(
+        *stacked, n_levels=16, quantize=True, interpret=True
+    )
+    assert wb.shape == (G, 24, 16)
+    for g in range(G):
+        wg, dg = ops.quantease_block_sweep(
+            *probs[g], n_levels=16, quantize=True, interpret=True
+        )
+        np.testing.assert_allclose(np.asarray(wb[g]), np.asarray(wg), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(db[g]), np.asarray(dg), atol=1e-6)
 
 
 @pytest.mark.parametrize(
