@@ -1,0 +1,248 @@
+"""BENCH_solver — perf trajectory of the CD hot path + serving GEMM.
+
+Measures, on the `benchmarks/runtime.py` layer shapes:
+
+  * per-iteration wall-clock of the QuantEase solve for each engine —
+    ``legacy_obj`` (the pre-fused production default: full Ŵ@Σ̃ recompute,
+    full-width Δ corrections, always-on objective history), ``legacy``
+    (same schedule, objective off), ``fused`` (rolling-Δ incremental
+    engine, the new default) and ``fused_bf16`` (bf16 Σ̃ correction
+    operands) — plus GPTQ's total wall-clock for the paper's
+    "one QuantEase iteration ≈ one GPTQ solve" structural claim,
+  * serving-GEMM throughput of ``ops.dequant_matmul`` (per-channel,
+    grouped, packed-int4 variants) in effective weight-GB/s.
+
+Emits ``BENCH_solver.json`` (schema below) so every future PR has a perf
+trajectory to answer to; ``--smoke`` runs a seconds-scale subset with the
+same schema (CI guards the file shape, not the numbers).  ``--validate``
+checks an existing file and exits non-zero on malformed/missing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+SCHEMA = 2
+_CD_KEYS = {
+    "q", "p", "block_size", "iterations",
+    "legacy_obj_us_per_iter", "legacy_us_per_iter",
+    "fused_us_per_iter", "fused_bf16_us_per_iter",
+    "speedup_fused_vs_legacy_obj", "speedup_fused_vs_legacy",
+    "gptq_total_us", "fused_iter_vs_gptq",
+}
+_GEMM_KEYS = {"m", "q", "p", "variant", "us", "weight_gbps"}
+
+
+def _time(fn, reps):
+    """Best-of-reps wall clock (min filters scheduler noise on shared CPUs)."""
+    import jax
+
+    jax.block_until_ready(fn())  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
+def bench_cd(shapes, iterations, reps, block_size=128):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import gptq, quantease
+    from repro.quant import GridSpec
+
+    rng = np.random.default_rng(0)
+    spec = GridSpec(bits=4)
+    rows = []
+    for q, p in shapes:
+        w = jnp.asarray(rng.standard_normal((q, p)).astype(np.float32))
+        x = rng.standard_normal((p, 2 * p)).astype(np.float32)
+        sig = jnp.asarray(x @ x.T)
+
+        def solve(engine, matmul_dtype="float32", track=False):
+            return lambda: quantease.quantease_quantize(
+                w, sig, spec, iterations=iterations, block_size=block_size,
+                engine=engine, matmul_dtype=matmul_dtype, track_objective=track,
+                use_kernel="auto",
+            )[0]
+
+        us_legacy_obj = _time(solve("legacy", track=True), reps)
+        us_legacy = _time(solve("legacy"), reps)
+        us_fused = _time(solve("fused"), reps)
+        us_bf16 = _time(solve("fused", matmul_dtype="bfloat16"), reps)
+        us_gptq = _time(lambda: gptq.gptq_quantize(w, sig, spec), reps)
+        rows.append({
+            "q": q, "p": p, "block_size": block_size, "iterations": iterations,
+            "legacy_obj_us_per_iter": round(us_legacy_obj / iterations, 1),
+            "legacy_us_per_iter": round(us_legacy / iterations, 1),
+            "fused_us_per_iter": round(us_fused / iterations, 1),
+            "fused_bf16_us_per_iter": round(us_bf16 / iterations, 1),
+            "speedup_fused_vs_legacy_obj": round(us_legacy_obj / us_fused, 2),
+            "speedup_fused_vs_legacy": round(us_legacy / us_fused, 2),
+            "gptq_total_us": round(us_gptq, 1),
+            "fused_iter_vs_gptq": round(us_fused / iterations / us_gptq, 2),
+        })
+    return rows
+
+
+def bench_serve_gemm(shapes, reps):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+    from repro.quant import pack_codes
+
+    rng = np.random.default_rng(1)
+    rows = []
+    for m, q, p in shapes:
+        x = jnp.asarray(rng.standard_normal((m, p)).astype(np.float32), jnp.bfloat16)
+        codes = jnp.asarray(rng.integers(0, 16, (q, p)).astype(np.uint8))
+        gsz = 128 if p % 128 == 0 else p
+        variants = {
+            "perchannel": dict(
+                codes=codes,
+                scale=jnp.asarray((rng.random(q) * 0.1 + 0.01).astype(np.float32)),
+                zero=jnp.zeros((q,), jnp.float32),
+                packed4=False,
+                wbytes=q * p,
+            ),
+            f"grouped{gsz}": dict(
+                codes=codes,
+                scale=jnp.asarray(
+                    (rng.random((q, p // gsz)) * 0.1 + 0.01).astype(np.float32)
+                ),
+                zero=jnp.zeros((q, p // gsz), jnp.float32),
+                packed4=False,
+                wbytes=q * p,
+            ),
+            "packed4": dict(
+                codes=pack_codes(codes, 4),
+                scale=jnp.asarray((rng.random(q) * 0.1 + 0.01).astype(np.float32)),
+                zero=jnp.zeros((q,), jnp.float32),
+                packed4=True,
+                wbytes=q * p // 2,
+            ),
+        }
+        for name, v in variants.items():
+            fn = lambda v=v: ops.dequant_matmul(
+                x, v["codes"], v["scale"], v["zero"], packed4=v["packed4"]
+            )
+            us = _time(fn, reps)
+            rows.append({
+                "m": m, "q": q, "p": p, "variant": name, "us": round(us, 1),
+                "weight_gbps": round(v["wbytes"] / (us * 1e-6) / 1e9, 2),
+            })
+    return rows
+
+
+def collect(smoke: bool) -> dict:
+    import jax
+
+    if smoke:
+        cd = bench_cd([(64, 64)], iterations=2, reps=1, block_size=32)
+        gemm = bench_serve_gemm([(4, 64, 64)], reps=1)
+    else:
+        cd = bench_cd([(128, 128), (256, 256), (512, 512)], iterations=5, reps=7)
+        gemm = bench_serve_gemm([(8, 512, 512), (64, 1024, 1024)], reps=7)
+    return {
+        "schema": SCHEMA,
+        "smoke": smoke,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "cd": cd,
+        "serve_gemm": gemm,
+    }
+
+
+def validate(path: str) -> list[str]:
+    """Returns a list of problems; empty means the file is well-formed."""
+    if not os.path.exists(path):
+        return [f"{path}: missing"]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable/not JSON ({e})"]
+    probs = []
+    if doc.get("schema") != SCHEMA:
+        probs.append(f"schema != {SCHEMA}")
+    for section, keys in (("cd", _CD_KEYS), ("serve_gemm", _GEMM_KEYS)):
+        rows = doc.get(section)
+        if not isinstance(rows, list) or not rows:
+            probs.append(f"{section}: missing/empty")
+            continue
+        for i, row in enumerate(rows):
+            missing = keys - set(row)
+            if missing:
+                probs.append(f"{section}[{i}]: missing keys {sorted(missing)}")
+    return probs
+
+
+def run(csv):
+    """benchmarks/run.py entry point: measure, write BENCH_solver.json, and
+    mirror the headline numbers into the shared CSV.
+
+    Under BENCH_FAST=1 the smoke subset is measured and written to
+    ``BENCH_solver_smoke.json`` instead — the committed full trajectory
+    must only ever be overwritten by full-budget runs.
+    """
+    smoke = os.environ.get("BENCH_FAST", "0") == "1"
+    doc = collect(smoke=smoke)
+    name = "BENCH_solver_smoke.json" if smoke else "BENCH_solver.json"
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", name)
+    with open(os.path.normpath(out), "w") as f:
+        json.dump(doc, f, indent=1)
+    for row in doc["cd"]:
+        csv.add(
+            f"solver_p{row['p']}_q{row['q']}",
+            us=row["fused_us_per_iter"],
+            fused_speedup=row["speedup_fused_vs_legacy_obj"],
+            iter_vs_gptq=row["fused_iter_vs_gptq"],
+        )
+    for row in doc["serve_gemm"]:
+        csv.add(
+            f"gemm_{row['variant']}_m{row['m']}_p{row['p']}",
+            us=row["us"],
+            weight_gbps=row["weight_gbps"],
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="seconds-scale subset")
+    ap.add_argument("--out", default="BENCH_solver.json")
+    ap.add_argument("--validate", metavar="PATH", help="check an existing file")
+    args = ap.parse_args()
+    if args.validate:
+        probs = validate(args.validate)
+        for pr in probs:
+            print(f"INVALID: {pr}", file=sys.stderr)
+        print(f"{args.validate}: {'FAIL' if probs else 'ok'}")
+        sys.exit(1 if probs else 0)
+    doc = collect(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    for row in doc["cd"]:
+        print(
+            f"cd p={row['p']} q={row['q']}: fused {row['fused_us_per_iter']}us/iter "
+            f"(legacy+obj {row['legacy_obj_us_per_iter']}, legacy {row['legacy_us_per_iter']}, "
+            f"bf16 {row['fused_bf16_us_per_iter']}) "
+            f"speedup {row['speedup_fused_vs_legacy_obj']}x/{row['speedup_fused_vs_legacy']}x"
+        )
+    for row in doc["serve_gemm"]:
+        print(
+            f"gemm {row['variant']} m={row['m']} p={row['p']}: {row['us']}us "
+            f"({row['weight_gbps']} weight-GB/s)"
+        )
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    main()

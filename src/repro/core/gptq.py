@@ -60,12 +60,14 @@ def gptq_quantize(
     ``grid``: optional explicit grid (e.g. SpQR's outlier-shrunk ranges).
 
     **Batched:** ``w: (G, q, p)`` / ``sigma: (G, p, p)`` solves G layers in
-    one vmapped call (grouped-block solver; ``keep_mask``/``grid`` must be
-    None on this path).
+    one vmapped call (grouped-block solver; ``grid`` may be batched too —
+    Grid leaves ``(G, q, n_groups)`` — so the whole-model solver can thread
+    its precomputed grids through; ``keep_mask`` must be None on this
+    path).
     """
     if w.ndim == 3:
-        if keep_mask is not None or grid is not None:
-            raise ValueError("keep_mask/grid unsupported on the batched path")
+        if keep_mask is not None:
+            raise ValueError("keep_mask unsupported on the batched path")
         solve = functools.partial(
             _gptq_2d,
             spec=spec,
@@ -73,9 +75,10 @@ def gptq_quantize(
             block_size=block_size,
             act_order=act_order,
             keep_mask=None,
-            grid=None,
         )
-        return jax.vmap(lambda wi, si: solve(wi, si))(w, sigma)
+        if grid is None:
+            return jax.vmap(lambda wi, si: solve(wi, si, grid=None))(w, sigma)
+        return jax.vmap(lambda wi, si, gi: solve(wi, si, grid=gi))(w, sigma, grid)
     return _gptq_2d(
         w, sigma, spec=spec, percdamp=percdamp, block_size=block_size,
         act_order=act_order, keep_mask=keep_mask, grid=grid,

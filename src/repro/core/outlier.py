@@ -41,6 +41,9 @@ class OutlierResult:
     w_hat: jax.Array  # (q, p) quantized part (on-grid, fp32)
     h: jax.Array  # (q, p) dense sparse-correction (‖H‖₀ ≤ s)
     objective: jax.Array  # per-outer-iteration damped objective
+    # Range-shrunk grid the CD sweeps quantized against — threaded to the
+    # solver's emit path so codes round-trip the solve exactly.
+    grid: object = None
 
     @property
     def w_eff(self) -> jax.Array:
@@ -147,4 +150,4 @@ def outlier_quantease(
         h = project(h - eta * grad)
         e = w32 - w_hat - h
         objs.append(jnp.einsum("ij,jk,ik->", e, sigma_d, e))
-    return OutlierResult(w_hat=w_hat, h=h, objective=jnp.stack(objs))
+    return OutlierResult(w_hat=w_hat, h=h, objective=jnp.stack(objs), grid=grid)

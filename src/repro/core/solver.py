@@ -44,7 +44,13 @@ from repro.core.calib import CalibStats
 from repro.core.quantease import relative_error
 from repro.models import model as M
 from repro.models.common import capture_gram_stats, capture_scope
-from repro.quant import GridSpec, QuantizedTensor, compute_grid, quantize_codes
+from repro.quant import (
+    GridSpec,
+    QuantizedTensor,
+    compute_grid,
+    quantize_codes,
+    quantize_dequantize,
+)
 
 __all__ = ["PTQConfig", "ptq_quantize_model", "QUANTIZABLE"]
 
@@ -81,6 +87,21 @@ class PTQConfig:
     # Shard the CD solve over output rows (and Gram accumulation over data)
     # when a mesh is passed to ptq_quantize_model.
     shard: bool = False
+    # QuantEase engine knobs, threaded through QuantEaseConfig.solve_kwargs:
+    # "auto" resolves to the compiled Pallas kernel on TPU, XLA elsewhere;
+    # matmul_dtype="bfloat16" runs the Σ̃ correction matmuls with bf16
+    # operands (fp32 accumulation — the β/quantize path stays fp32).
+    use_kernel: str = "auto"
+    matmul_dtype: str = "float32"
+
+    def qe_config(self) -> "quantease.QuantEaseConfig":
+        """The CD-solver config this PTQ run resolves to (wired end-to-end)."""
+        return quantease.QuantEaseConfig(
+            iterations=self.iterations,
+            percdamp=self.percdamp,
+            use_kernel=self.use_kernel,
+            matmul_dtype=self.matmul_dtype,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -89,40 +110,49 @@ class PTQConfig:
 
 
 def _quantize_one(w2d: jax.Array, sigma: jax.Array, cfg: PTQConfig):
-    """Single (q, p) solve.  Returns (w_hat fp32, h or None)."""
+    """Single (q, p) solve.  Returns (w_hat fp32, h or None, grid or None).
+
+    ``grid`` is the quantization grid the solve actually used, threaded to
+    the emit path so stored codes round-trip the solve exactly; methods
+    whose emitted tensor is not on a single known grid (AWQ's rescaled
+    grids, SpQR's full-precision kept outliers) return None and the emit
+    path falls back to re-deriving a grid from Ŵ.
+    """
     spec = cfg.spec
     if cfg.method == "rtn":
-        return rtn.rtn_quantize(w2d, spec), None
+        grid = compute_grid(w2d, spec)
+        return quantize_dequantize(w2d, grid), None, grid
     if cfg.method == "gptq":
+        grid = compute_grid(w2d, spec)
         return (
             gptq.gptq_quantize(
-                w2d, sigma, spec, percdamp=cfg.percdamp, block_size=cfg.block_size
+                w2d, sigma, spec,
+                percdamp=cfg.percdamp, block_size=cfg.block_size, grid=grid,
             ),
             None,
+            grid,
         )
     if cfg.method == "awq":
-        return awq.awq_quantize(w2d, sigma, spec), None
+        return awq.awq_quantize(w2d, sigma, spec), None, None
     if cfg.method == "quantease":
+        grid = compute_grid(w2d, spec)
         w_init = None
         if cfg.init_from_gptq:
             w_init = gptq.gptq_quantize(
-                w2d, sigma, spec, percdamp=cfg.percdamp, block_size=cfg.block_size
+                w2d, sigma, spec,
+                percdamp=cfg.percdamp, block_size=cfg.block_size, grid=grid,
             )
         w_hat, _ = quantease.quantease_quantize(
-            w2d,
-            sigma,
-            spec,
-            iterations=cfg.iterations,
-            percdamp=cfg.percdamp,
-            w_init=w_init,
+            w2d, sigma, spec,
+            w_init=w_init, grid=grid, **cfg.qe_config().solve_kwargs(),
         )
-        return w_hat, None
+        return w_hat, None, grid
     if cfg.method == "spqr":
         s = max(int(cfg.outlier_frac * w2d.size), 1)
         w_hat, _ = spqr.spqr_quantize(
             w2d, sigma, spec, s=s, percdamp=cfg.percdamp, block_size=cfg.block_size
         )
-        return w_hat, None
+        return w_hat, None, None
     if cfg.method in ("qe_outlier", "qe_outlier_struct"):
         s = max(int(cfg.outlier_frac * w2d.size), 1)
         res = outlier.outlier_quantease(
@@ -133,60 +163,74 @@ def _quantize_one(w2d: jax.Array, sigma: jax.Array, cfg: PTQConfig):
             iterations=cfg.iterations,
             structured=cfg.method.endswith("struct"),
             percdamp=cfg.percdamp,
+            use_kernel=cfg.use_kernel,
         )
-        return res.w_hat, res.h
+        return res.w_hat, res.h, res.grid
     raise ValueError(cfg.method)
 
 
-def _solve_batched(w3: jax.Array, sig3: jax.Array, cfg: PTQConfig):
-    """Grouped solve: (G, q, p) × (G, p, p) → (G, q, p) in one vmapped call."""
+def _solve_batched(w3: jax.Array, sig3: jax.Array, cfg: PTQConfig, grid3):
+    """Grouped solve: (G, q, p) × (G, p, p) → (G, q, p) in one vmapped call.
+
+    ``grid3``: batched Grid (leaves (G, q, n_groups)) computed from the
+    original weights — the same grid every method here quantizes onto, so
+    the emit path can reuse it verbatim.
+    """
     spec = cfg.spec
     if cfg.method == "rtn":
-        return jax.vmap(lambda wi: rtn.rtn_quantize(wi, spec))(w3)
+        return jax.vmap(quantize_dequantize)(w3, grid3)
     if cfg.method == "gptq":
         return gptq.gptq_quantize(
-            w3, sig3, spec, percdamp=cfg.percdamp, block_size=cfg.block_size
+            w3, sig3, spec,
+            percdamp=cfg.percdamp, block_size=cfg.block_size, grid=grid3,
         )
     w_init = None
     if cfg.init_from_gptq:
         w_init = gptq.gptq_quantize(
-            w3, sig3, spec, percdamp=cfg.percdamp, block_size=cfg.block_size
+            w3, sig3, spec,
+            percdamp=cfg.percdamp, block_size=cfg.block_size, grid=grid3,
         )
     w_hat, _ = quantease.quantease_quantize(
         w3, sig3, spec,
-        iterations=cfg.iterations, percdamp=cfg.percdamp, w_init=w_init,
+        w_init=w_init, grid=grid3, **cfg.qe_config().solve_kwargs(),
     )
     return w_hat
 
 
 def _solve_group(w3: jax.Array, sig3: jax.Array, cfg: PTQConfig, mesh):
-    """Solve G stacked same-shape layers; returns (w_hat (G,q,p), hs list).
+    """Solve G stacked same-shape layers; returns (w_hat (G,q,p), hs, grids).
 
     Batchable methods go through one vmapped (optionally row-sharded) call;
     outlier-aware methods run per-layer inside the same interface so the
-    grouped driver upstream stays method-agnostic.
+    grouped driver upstream stays method-agnostic.  ``grids`` is a per-slice
+    list of the Grid each solve quantized onto (None where unavailable).
     """
+    G = w3.shape[0]
     if cfg.method in _BATCHED_METHODS:
-        solve = lambda w, s: _solve_batched(w, s, cfg)
+        grid3 = jax.vmap(lambda wi: compute_grid(wi, cfg.spec))(w3)
+        solve = lambda w, s, g: _solve_batched(w, s, cfg, g)
         if mesh is not None and cfg.shard:
-            w_hat = _shard_rows(solve, w3, sig3, mesh)
+            w_hat = _shard_rows(solve, w3, sig3, grid3, mesh)
         else:
-            w_hat = solve(w3, sig3)
-        return w_hat, [None] * w3.shape[0]
-    outs, hs = [], []
-    for g in range(w3.shape[0]):
-        w_hat, h = _quantize_one(w3[g], sig3[g], cfg)
+            w_hat = solve(w3, sig3, grid3)
+        grids = [jax.tree.map(lambda a: a[g], grid3) for g in range(G)]
+        return w_hat, [None] * G, grids
+    outs, hs, grids = [], [], []
+    for g in range(G):
+        w_hat, h, grid = _quantize_one(w3[g], sig3[g], cfg)
         outs.append(w_hat)
         hs.append(h)
-    return jnp.stack(outs), hs
+        grids.append(grid)
+    return jnp.stack(outs), hs, grids
 
 
-def _shard_rows(solve: Callable, w3: jax.Array, sig3: jax.Array, mesh):
+def _shard_rows(solve: Callable, w3: jax.Array, sig3: jax.Array, grid3, mesh):
     """shard_map a grouped solve over the independent q (output-row) dim.
 
     Rows are independent in every column-sweep method (the CD update of row
-    i never reads row j), so splitting q across devices is exact.  Rows pad
-    up to the axis size; padded zero rows quantize in isolation and are
+    i never reads row j), so splitting q across devices is exact; the
+    per-row grid shards along with the rows.  Rows pad up to the axis size;
+    padded zero rows quantize in isolation (unit pad scale) and are
     stripped.  Single-device meshes skip the wrapper entirely.
     """
     from repro.core.calib import shard_axis
@@ -194,22 +238,33 @@ def _shard_rows(solve: Callable, w3: jax.Array, sig3: jax.Array, mesh):
     axis = shard_axis(mesh)
     n = mesh.shape[axis]
     if n <= 1:
-        return solve(w3, sig3)
+        return solve(w3, sig3, grid3)
     from jax.experimental.shard_map import shard_map
 
     G, q, p = w3.shape
     pad = (-q) % n
     if pad:
         w3 = jnp.pad(w3, ((0, 0), (0, pad), (0, 0)))
+        grid3 = dataclasses.replace(
+            grid3,
+            scale=jnp.pad(
+                grid3.scale, ((0, 0), (0, pad), (0, 0)), constant_values=1.0
+            ),
+            zero=jnp.pad(grid3.zero, ((0, 0), (0, pad), (0, 0))),
+        )
 
     sharded = shard_map(
         solve,
         mesh=mesh,
-        in_specs=(PartitionSpec(None, axis, None), PartitionSpec(None, None, None)),
+        in_specs=(
+            PartitionSpec(None, axis, None),
+            PartitionSpec(None, None, None),
+            PartitionSpec(None, axis, None),
+        ),
         out_specs=PartitionSpec(None, axis, None),
         check_rep=False,
     )
-    return sharded(w3, sig3)[:, :q]
+    return sharded(w3, sig3, grid3)[:, :q]
 
 
 # ---------------------------------------------------------------------------
@@ -226,11 +281,14 @@ def _from_2d(w2d: jax.Array, like: jax.Array) -> jax.Array:
     return w2d.T.reshape(like.shape).astype(like.dtype)
 
 
-def _emit_leaf(w_hat, h, like, cfg: PTQConfig):
+def _emit_leaf(w_hat, h, like, cfg: PTQConfig, grid=None):
     if cfg.emit == "fake":
         w_eff = w_hat if h is None else w_hat + h
         return _from_2d(w_eff, like)
-    grid = compute_grid(w_hat, cfg.spec)
+    if grid is None:
+        # Fallback for methods that don't expose their grid (AWQ/SpQR):
+        # re-derive from Ŵ — lossy if Ŵ doesn't attain its grid extremes.
+        grid = compute_grid(w_hat, cfg.spec)
     codes = quantize_codes(w_hat, grid)
     packed = cfg.spec.bits == 4 and codes.shape[-1] % 2 == 0
     if packed:
@@ -316,13 +374,15 @@ def _quantize_block(
     for shape, group in groups.items():
         w3 = jnp.concatenate([it.w3 for it in group], axis=0)
         sig3 = jnp.concatenate([it.sig3 for it in group], axis=0)
-        w_hat3, hs = _solve_group(w3, sig3, cfg, mesh)
+        w_hat3, hs, grids = _solve_group(w3, sig3, cfg, mesh)
         errs = relative_error(w3, _effective(w_hat3, hs), sig3)
         off = 0
         for it in group:
             G = it.w3.shape[0]
             sl = slice(off, off + G)
-            _scatter_item(it, w_hat3[sl], hs[off : off + G], errs[sl], new, cfg, report)
+            _scatter_item(
+                it, w_hat3[sl], hs[sl], errs[sl], new, cfg, report, grids[sl]
+            )
             off += G
     return new
 
@@ -335,7 +395,9 @@ def _effective(w_hat3, hs):
     )
 
 
-def _scatter_item(it: _Item, w_hat, hs, errs, new: dict, cfg: PTQConfig, report: dict):
+def _scatter_item(
+    it: _Item, w_hat, hs, errs, new: dict, cfg: PTQConfig, report: dict, grids
+):
     if it.moe:
         for e in range(w_hat.shape[0]):
             report[f"{it.key}.e{e}"] = float(errs[e])
@@ -347,11 +409,14 @@ def _scatter_item(it: _Item, w_hat, hs, errs, new: dict, cfg: PTQConfig, report:
                 ]
             ).astype(new[it.name].dtype)
         else:
-            qts = [_emit_leaf(w, h, it.like, cfg) for w, h in zip(w_hat, hs)]
+            qts = [
+                _emit_leaf(w, h, it.like, cfg, grid)
+                for w, h, grid in zip(w_hat, hs, grids)
+            ]
             new[it.name] = jax.tree.map(lambda *ls: jnp.stack(ls), *qts)
     else:
         report[it.key] = float(errs[0])
-        new[it.name] = _emit_leaf(w_hat[0], hs[0], it.like, cfg)
+        new[it.name] = _emit_leaf(w_hat[0], hs[0], it.like, cfg, grids[0])
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,14 @@ Tiling defaults (TM=128, TQ=128, TK=512):
 The packed-int4 variant (``packed4=True``) takes codes packed two-per-byte
 (p/2 bytes per row) and unpacks with shift/mask in-kernel, halving HBM
 traffic — the lever that matters when decode is HBM-bandwidth-bound.
+
+**Grouped grids** (``scale/zero: (q, n_groups)``, group_size = p/n_groups
+columns per (s, z) pair) are first-class: the k-tile width ``tk`` is
+snapped so every tile covers a whole number of groups (``tk % gsz == 0``,
+tile carries a (TQ, tk//gsz) scale slab expanded in-VMEM) or sits inside
+one group (``gsz % tk == 0``, tile carries a (TQ, 1) slab addressed by the
+k→group index map) — group metadata HBM traffic stays O(q·n_groups), never
+the O(q·p) a per-column pre-expansion would cost.
 """
 
 from __future__ import annotations
@@ -35,12 +43,13 @@ __all__ = ["dequant_matmul_pallas"]
 def _dequant_matmul_kernel(
     x_ref,  # (TM, TK) activations
     codes_ref,  # (TQ, TK) uint8 (or (TQ, TK//2) packed4)
-    scale_ref,  # (TQ, 1) f32
-    zero_ref,  # (TQ, 1) f32
+    scale_ref,  # (TQ, groups_per_tile) f32
+    zero_ref,  # (TQ, groups_per_tile) f32
     o_ref,  # (TM, TQ) f32 accumulator
     *,
     n_k: int,
     packed4: bool,
+    expand: int,
 ):
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -52,7 +61,13 @@ def _dequant_matmul_kernel(
         hi = codes >> 4
         # Interleave back to (TQ, TK): packed byte b holds codes (2b, 2b+1).
         codes = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0], -1)
-    w = (codes.astype(jnp.float32) - zero_ref[...]) * scale_ref[...]  # (TQ, TK)
+    scale = scale_ref[...]
+    zero = zero_ref[...]
+    if expand > 1:
+        # One (s, z) pair per contiguous group of `expand` columns.
+        scale = jnp.repeat(scale, expand, axis=1)
+        zero = jnp.repeat(zero, expand, axis=1)
+    w = (codes.astype(jnp.float32) - zero) * scale  # (TQ, TK)
     x = x_ref[...].astype(jnp.float32)
     o_ref[...] += jnp.dot(x, w.T, preferred_element_type=jnp.float32)
 
@@ -64,8 +79,8 @@ def _dequant_matmul_kernel(
 def dequant_matmul_pallas(
     x: jax.Array,  # (m, p)
     codes: jax.Array,  # (q, p) uint8, or (q, p//2) when packed4
-    scale: jax.Array,  # (q,) f32 (per-channel; groups go through the XLA path)
-    zero: jax.Array,  # (q,) f32
+    scale: jax.Array,  # (q,) or (q, n_groups) f32 — uniform groups (p % n_groups == 0)
+    zero: jax.Array,  # same shape as scale
     *,
     tm: int = 128,
     tq: int = 128,
@@ -76,9 +91,22 @@ def dequant_matmul_pallas(
 ) -> jax.Array:
     m, p = x.shape
     q = codes.shape[0]
+    if scale.ndim == 1:
+        scale = scale[:, None]
+        zero = zero[:, None]
+    n_groups = scale.shape[1]
+    gsz = p // n_groups if n_groups > 1 else p
+    if n_groups > 1 and p % n_groups:
+        raise ValueError("grouped Pallas GEMM requires uniform groups")
     tm = min(tm, m)
     tq = min(tq, q)
     tk = min(tk, p)
+    if n_groups > 1:
+        # Snap tk so each k-tile covers whole groups or sits inside one.
+        if tk >= gsz:
+            tk = (tk // gsz) * gsz
+        elif gsz % tk:
+            tk = gsz
 
     pad_m, pad_q, pad_k = (-m) % tm, (-q) % tq, (-p) % tk
     if pad_m or pad_k:
@@ -87,21 +115,40 @@ def dequant_matmul_pallas(
         kdim_pad = pad_k // 2 if packed4 else pad_k
         codes = jnp.pad(codes, ((0, pad_q), (0, kdim_pad)))
     if pad_q:
-        scale = jnp.pad(scale, (0, pad_q))
-        zero = jnp.pad(zero, (0, pad_q))
+        scale = jnp.pad(scale, ((0, pad_q), (0, 0)))
+        zero = jnp.pad(zero, ((0, pad_q), (0, 0)))
+    if pad_k and tk % gsz == 0:
+        # Whole-groups tiling addresses ceil(pp/gsz) groups; the k padding
+        # may extend past the last real group — pad the metadata to match
+        # (padded x columns are zero, so the values are never observed).
+        pad_g = (p + pad_k) // gsz - n_groups
+        if pad_g:
+            scale = jnp.pad(scale, ((0, 0), (0, pad_g)), constant_values=1.0)
+            zero = jnp.pad(zero, ((0, 0), (0, pad_g)))
     mp, qp, pp = m + pad_m, q + pad_q, p + pad_k
     n_k = pp // tk
     ck = tk // 2 if packed4 else tk  # codes tile width in stored bytes
 
-    kernel = functools.partial(_dequant_matmul_kernel, n_k=n_k, packed4=packed4)
+    if tk % gsz == 0:  # k-tile covers whole groups → (TQ, tk/gsz) slab per tile
+        g_tile = tk // gsz
+        scale_spec = pl.BlockSpec((tq, g_tile), lambda i, j, k: (j, k))
+        expand = gsz
+    else:  # k-tile inside one group (gsz % tk == 0, and per-channel where
+        # gsz = p): a (TQ, 1) slab addressed by the k-tile's group index.
+        scale_spec = pl.BlockSpec((tq, 1), lambda i, j, k: (j, (k * tk) // gsz))
+        expand = tk
+
+    kernel = functools.partial(
+        _dequant_matmul_kernel, n_k=n_k, packed4=packed4, expand=expand
+    )
     out = pl.pallas_call(
         kernel,
         grid=(mp // tm, qp // tq, n_k),
         in_specs=[
             pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
             pl.BlockSpec((tq, ck), lambda i, j, k: (j, k)),
-            pl.BlockSpec((tq, 1), lambda i, j, k: (j, 0)),
-            pl.BlockSpec((tq, 1), lambda i, j, k: (j, 0)),
+            scale_spec,
+            scale_spec,
         ],
         out_specs=pl.BlockSpec((tm, tq), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, qp), jnp.float32),
@@ -111,5 +158,5 @@ def dequant_matmul_pallas(
         )
         if not interpret
         else None,
-    )(x, codes, scale[:, None], zero[:, None])
+    )(x, codes, scale, zero)
     return out[:m, :q].astype(out_dtype)

@@ -15,9 +15,18 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
-from repro.kernels.quantease_cd import quantease_block_sweep_pallas
+from repro.kernels.quantease_cd import (
+    quantease_block_sweep_pallas,
+    quantease_fused_iteration_pallas,
+)
 
-__all__ = ["quantease_block_sweep", "dequant_matmul", "on_tpu"]
+__all__ = [
+    "quantease_block_sweep",
+    "quantease_fused_iteration",
+    "fused_iteration_tq",
+    "dequant_matmul",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -45,8 +54,85 @@ def quantease_block_sweep(
     return kernel(beta0, sig_blk, w_old_blk, scale_blk, zero_blk)
 
 
+def fused_iteration_tq(p_pad: int, bsz: int, matmul_dtype: str = "float32", tq: int = 256):
+    """Pick a q-tile for the fused-iteration kernel, or None if it cannot
+    fit VMEM.
+
+    Resident per program: the (p_pad × tq) fp32 Δ accumulator scratch, the
+    (bsz × p_pad) Σ̃ᵀ correction slab (bf16 halves it), and ~7 (bsz × tq)
+    fp32 tiles.  Only the Δ term shrinks with ``tq`` — the Σ̃ slab is fixed
+    by ``bsz``, so very wide layers don't fit at any tq and the caller must
+    fall back to the per-block XLA schedule (same iterates).
+    """
+    sig_bytes = bsz * p_pad * (2 if matmul_dtype == "bfloat16" else 4)
+    budget = 12 * 1024 * 1024  # of ~16 MB VMEM, leaving double-buffer headroom
+    while tq > 128 and p_pad * tq * 4 + sig_bytes + 7 * bsz * tq * 4 > budget:
+        tq //= 2
+    if p_pad * tq * 4 + sig_bytes + 7 * bsz * tq * 4 > budget:
+        return None
+    return tq
+
+
+def quantease_fused_iteration(
+    base,
+    sig_tilde,
+    w_hat,
+    scale_pc,
+    zero_pc,
+    delta_prev,
+    *,
+    n_levels,
+    quantize,
+    bsz,
+    matmul_dtype="float32",
+    interpret=None,
+    tq=None,
+):
+    """One full CD iteration as a single fused kernel launch.
+
+    2-D operands: one (q, p_pad) layer; a leading group dim batches G
+    layers into one launch (vmap folds into the grid).  Returns
+    ``(w_new, base_new, delta_new)``.  ``tq`` defaults to
+    :func:`fused_iteration_tq`'s VMEM-fitted choice; callers should gate on
+    that helper returning non-None before taking this path.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    p_pad = sig_tilde.shape[-1]
+    if tq is None:
+        tq = fused_iteration_tq(p_pad, bsz, matmul_dtype)
+        if tq is None:
+            raise ValueError(
+                f"fused iteration does not fit VMEM (p_pad={p_pad}, bsz={bsz}); "
+                "use the XLA engine for this layer"
+            )
+    kernel = functools.partial(
+        quantease_fused_iteration_pallas,
+        n_levels=n_levels,
+        quantize=quantize,
+        bsz=bsz,
+        tq=tq,
+        matmul_dtype=matmul_dtype,
+        interpret=interpret,
+    )
+    if base.ndim == 3:
+        return jax.vmap(kernel)(
+            base, sig_tilde, w_hat, scale_pc, zero_pc, delta_prev
+        )
+    return kernel(base, sig_tilde, w_hat, scale_pc, zero_pc, delta_prev)
+
+
+def _unpacked(codes, packed4):
+    if not packed4:
+        return codes
+    from repro.quant import unpack_codes
+
+    return unpack_codes(codes, 4, codes.shape[-1] * 2)
+
+
 def dequant_matmul(
-    x, codes, scale, zero, *, packed4=False, out_dtype=jnp.bfloat16, interpret=None
+    x, codes, scale, zero, *, packed4=False, out_dtype=jnp.bfloat16,
+    interpret=None, group_size=None,
 ):
     """Serving GEMM.
 
@@ -55,18 +141,38 @@ def dequant_matmul(
     *interpret* mode is reserved for kernel tests (``interpret=True``) — it
     must never end up in lowered production graphs: its grid loops
     materialize per-step buffers and wreck both memory and cost analysis.
-    Grouped grids always take the reference path.
+
+    Grouped grids (``scale: (q, n_groups)``, n_groups > 1) take the Pallas
+    kernel too when the groups are uniform — the kernel tiles scale/zero
+    per group; ragged layouts (a narrower last group) fall back to the XLA
+    reference with the true ``group_size`` (packed4 codes are unpacked
+    first — the reference consumes raw uint8 planes).  Pass ``group_size``
+    (QuantizedTensor carries it) whenever the grid was built with one:
+    without it a ragged layout is indistinguishable from a uniform
+    ceil(p/n_groups) layout and would dequantize with wrong boundaries.
     """
-    if scale.ndim > 1 and scale.shape[1] > 1:
-        return ref.dequant_matmul_ref(x, codes, scale, zero, out_dtype=out_dtype)
+    n_groups = scale.shape[1] if scale.ndim > 1 else 1
+    p = codes.shape[-1] * (2 if packed4 else 1)
+    gsz = group_size if group_size else (-(-p // n_groups) if n_groups > 1 else p)
+    uniform = n_groups == 1 or (p % gsz == 0 and p // gsz == n_groups)
+
+    def reference():
+        return ref.dequant_matmul_ref(
+            x, _unpacked(codes, packed4), scale, zero,
+            out_dtype=out_dtype, group_size=group_size,
+        )
+
     if interpret is None:
         if not on_tpu():
-            if packed4:
-                from repro.quant import unpack_codes
-
-                codes = unpack_codes(codes, 4, codes.shape[-1] * 2)
-            return ref.dequant_matmul_ref(x, codes, scale, zero, out_dtype=out_dtype)
+            return reference()
         interpret = False
+    if n_groups > 1:
+        if not uniform:  # ragged last group — reference path only
+            return reference()
+        return dequant_matmul_pallas(
+            x, codes, scale, zero,
+            packed4=packed4, out_dtype=out_dtype, interpret=interpret,
+        )
     s = scale.reshape(-1)
     z = zero.reshape(-1)
     return dequant_matmul_pallas(

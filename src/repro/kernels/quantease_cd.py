@@ -1,28 +1,34 @@
-"""Pallas TPU kernel: QuantEase intra-block coordinate-descent sweep.
+"""Pallas TPU kernels: QuantEase coordinate-descent sweeps.
 
-The blocked Algorithm 2 (see repro/core/quantease.py) reduces each iteration
-to, per column-block of width B:
+Two kernels:
 
-  1. one MXU matmul for the cross-block correction (done by XLA outside), and
-  2. a strictly-sequential sweep over the B columns inside the block — this
-     kernel.
+* :func:`quantease_block_sweep_pallas` — the intra-block sweep of one column
+  block (the original per-block kernel; the legacy engine launches one of
+  these per block per iteration).
+* :func:`quantease_fused_iteration_pallas` — one **whole CD iteration** as a
+  single kernel launch (DESIGN.md §Fused-iteration).  Grid
+  ``(q-tiles, blocks)`` with the block dimension "arbitrary" (sequential):
+  each program applies the full-width rolling-Δ correction for its block —
+  ``corr = Σ̃ᵀ[blk, :] @ Δ`` with the (p × TQ) Δ accumulator resident in
+  VMEM scratch across block steps — then runs the sequential intra-block
+  sweep, then publishes its block's fresh Δ into the accumulator for the
+  blocks that follow.  The rolling buffer holds current-iteration Δ for
+  processed blocks and previous-iteration Δ for the rest, so the one matmul
+  per block simultaneously applies the triangular cross-block correction
+  and the incremental ``base = P − P̂`` maintenance (see
+  repro/core/quantease.py).
 
-Row independence makes the sweep embarrassingly parallel over the q
-(output-channel) dimension, so the grid tiles q; each program keeps its
-(B × TQ) working set plus the (B × B) Σ̃ tile entirely in VMEM and runs the
-B-step recurrence with `jax.lax.fori_loop`:
+Row independence makes everything embarrassingly parallel over the q
+(output-channel) dimension, so the grid tiles q.  All operands are carried
+*transposed* — (B, TQ) instead of (TQ, B) — so the sequential index
+addresses the sublane dimension (dynamic lane-dim slicing is slow on TPU;
+sublane slicing is free).
 
-    corr_i  = Σ̃_blkᵀ[i, :] @ Δ            (VPU/MXU (1,B)×(B,TQ))
-    β_i     = β0[i] + corr_i
-    new_i   = quantize(β_i)  (or β_i on "unquantized heuristic" iterations)
-    Δ[i]    = old_i − new_i
-
-All operands are carried *transposed* — (B, TQ) instead of (TQ, B) — so the
-sequential index i addresses the sublane dimension (dynamic lane-dim slicing
-is slow on TPU; sublane slicing is free).
-
-VMEM budget per program (TQ=256, B=256, fp32):
-6 × 256×256×4 B (β0, old, scale, zero, new, Δ) + 256²×4 B (Σ̃ᵀ) ≈ 1.8 MB.
+VMEM budget per fused-iteration program (TQ=256, B=256, fp32, p=4096):
+Δ accumulator p×TQ×4 B = 4 MB + Σ̃ᵀ correction rows B×p×4 B = 4 MB
+(2 MB at bf16) + 7 small (B × TQ) tiles ≈ 1.8 MB — fits the ~16 MB VMEM
+with double-buffering headroom up to p ≈ 4–5k; shrink ``tq`` for wider
+layers.
 """
 
 from __future__ import annotations
@@ -32,8 +38,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["quantease_block_sweep_pallas"]
+__all__ = ["quantease_block_sweep_pallas", "quantease_fused_iteration_pallas"]
 
 
 def _sweep_kernel(
@@ -128,3 +135,152 @@ def quantease_block_sweep_pallas(
         interpret=interpret,
     )(beta0_t, sig_t, w_old_t, scale_t, zero_t)
     return w_new_t.T[:q], delta_t.T[:q]
+
+
+# ---------------------------------------------------------------------------
+# Fused iteration: the whole blocked sweep as one kernel launch.
+# ---------------------------------------------------------------------------
+
+
+def _fused_iter_kernel(
+    base_t_ref,  # (B, TQ) f32 — (P − P̂)ᵀ tile for this block
+    sig_corr_ref,  # (B, p_pad) cdt — Σ̃ᵀ rows of this block (row i = Σ̃[:, col0+i])
+    sig_diag_ref,  # (B, B) f32 — Σ̃ᵀ diagonal block (intra-block sweep)
+    w_old_t_ref,  # (B, TQ) f32 — Ŵᵀ at iteration start
+    scale_t_ref,  # (B, TQ) f32
+    zero_t_ref,  # (B, TQ) f32
+    delta_prev_t_ref,  # (p_pad, TQ) f32 — previous-iteration rolling Δᵀ
+    w_new_t_ref,  # (B, TQ) f32 out
+    base_out_t_ref,  # (B, TQ) f32 out — next iteration's base invariant
+    delta_out_t_ref,  # (B, TQ) f32 out — this block's fresh Δ
+    delta_acc,  # (p_pad, TQ) f32 VMEM scratch — rolling Δ, lives across blocks
+    *,
+    n_levels: int,
+    quantize: bool,
+    bsz: int,
+    corr_dtype,
+):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _seed():
+        delta_acc[...] = delta_prev_t_ref[...]
+
+    # Full-width rolling-Δ correction: rows < col0 of Δ hold *this*
+    # iteration's deltas (triangular prefix), rows ≥ col0 the *previous*
+    # iteration's (incremental base maintenance) — one matmul does both.
+    corr = jnp.dot(
+        sig_corr_ref[...],
+        delta_acc[...].astype(corr_dtype),
+        preferred_element_type=jnp.float32,
+    )  # (B, TQ)
+    beta0 = base_t_ref[...] + corr
+    base_out_t_ref[...] = beta0
+
+    # Intra-block sequential sweep (fp32 — the β/quantize path).
+    delta_out_t_ref[...] = jnp.zeros_like(delta_out_t_ref)
+
+    def body(i, _):
+        sig_row = sig_diag_ref[pl.ds(i, 1), :]  # (1, B)
+        c = jnp.dot(
+            sig_row, delta_out_t_ref[...], preferred_element_type=jnp.float32
+        )  # (1, TQ)
+        beta = jax.lax.dynamic_slice(beta0, (i, 0), (1, beta0.shape[1])) + c
+        if quantize:
+            sc = scale_t_ref[pl.ds(i, 1), :]
+            zc = zero_t_ref[pl.ds(i, 1), :]
+            codes = jnp.clip(jnp.round(beta / sc) + zc, 0, n_levels - 1)
+            new = (codes - zc) * sc
+        else:
+            new = beta
+        w_new_t_ref[pl.ds(i, 1), :] = new
+        delta_out_t_ref[pl.ds(i, 1), :] = w_old_t_ref[pl.ds(i, 1), :] - new
+        return 0
+
+    jax.lax.fori_loop(0, bsz, body, 0)
+    # Publish this block's Δ so later blocks' corrections see it.
+    delta_acc[pl.ds(b * bsz, bsz), :] = delta_out_t_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_levels", "quantize", "bsz", "tq", "matmul_dtype", "interpret"),
+)
+def quantease_fused_iteration_pallas(
+    base: jax.Array,  # (q, p_pad) f32 — P − P̂ invariant entering this iteration
+    sig_tilde: jax.Array,  # (p_pad, p_pad) f32 — zero diag, column-normalized
+    w_hat: jax.Array,  # (q, p_pad) f32 — iterate entering this iteration
+    scale_pc: jax.Array,  # (q, p_pad) f32
+    zero_pc: jax.Array,  # (q, p_pad) f32
+    delta_prev: jax.Array,  # (q, p_pad) f32 — previous iteration's rolling Δ
+    *,
+    n_levels: int,
+    quantize: bool,
+    bsz: int,
+    tq: int = 256,
+    matmul_dtype: str = "float32",
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One full CD iteration in a single ``pallas_call``.
+
+    Returns ``(w_new, base_new, delta_new)`` — feed them straight back in
+    for the next iteration.  ``p_pad`` must be a multiple of ``bsz`` (the
+    caller's column-block padding).
+    """
+    q, p_pad = base.shape
+    assert p_pad % bsz == 0, (p_pad, bsz)
+    n_blocks = p_pad // bsz
+    tq = min(tq, q)
+    pad_q = (-q) % tq
+    qp = q + pad_q
+    cdt = jnp.bfloat16 if matmul_dtype == "bfloat16" else jnp.float32
+
+    def prep(a, fill=0.0):  # (q, p_pad) → (p_pad, qp) transposed + padded
+        if pad_q:
+            a = jnp.pad(a, ((0, pad_q), (0, 0)), constant_values=fill)
+        return a.T
+
+    base_t = prep(base)
+    w_old_t = prep(w_hat)
+    scale_t = prep(jnp.maximum(scale_pc, 1e-12), fill=1.0)
+    zero_t = prep(zero_pc)
+    delta_prev_t = prep(delta_prev)
+    sig_t = sig_tilde.T  # row j = Σ̃[:, j]
+    sig_corr = sig_t.astype(cdt)
+
+    kernel = functools.partial(
+        _fused_iter_kernel,
+        n_levels=n_levels,
+        quantize=quantize,
+        bsz=bsz,
+        corr_dtype=cdt,
+    )
+    grid = (qp // tq, n_blocks)
+    out_spec = pl.BlockSpec((bsz, tq), lambda i, b: (b, i))
+    w_new_t, base_out_t, delta_out_t = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, tq), lambda i, b: (b, i)),  # base
+            pl.BlockSpec((bsz, p_pad), lambda i, b: (b, 0)),  # Σ̃ᵀ corr rows
+            pl.BlockSpec((bsz, bsz), lambda i, b: (b, b)),  # Σ̃ᵀ diag block
+            pl.BlockSpec((bsz, tq), lambda i, b: (b, i)),  # w_old
+            pl.BlockSpec((bsz, tq), lambda i, b: (b, i)),  # scale
+            pl.BlockSpec((bsz, tq), lambda i, b: (b, i)),  # zero
+            pl.BlockSpec((p_pad, tq), lambda i, b: (0, i)),  # Δ_prev (resident)
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_pad, qp), jnp.float32),
+            jax.ShapeDtypeStruct((p_pad, qp), jnp.float32),
+            jax.ShapeDtypeStruct((p_pad, qp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p_pad, tq), jnp.float32)],
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
+        )
+        if not interpret
+        else None,
+    )(base_t, sig_corr, sig_t, w_old_t, scale_t, zero_t, delta_prev_t)
+    return w_new_t.T[:q], base_out_t.T[:q], delta_out_t.T[:q]

@@ -58,14 +58,21 @@ def dequant_matmul_ref(
     zero: jax.Array,  # same shape as scale
     *,
     out_dtype=jnp.float32,
+    group_size=None,
 ) -> jax.Array:
-    """y = x @ dequant(codes)ᵀ — the serving GEMM oracle."""
+    """y = x @ dequant(codes)ᵀ — the serving GEMM oracle.
+
+    ``group_size``: columns per (scale, zero) pair — pass the grid's true
+    group size for ragged layouts (last group narrower); when None it is
+    inferred as ceil(p / n_groups), which matches Grid.per_column only for
+    uniform groups.
+    """
     q, p = codes.shape
     if scale.ndim == 1:
         scale = scale[:, None]
         zero = zero[:, None]
     n_groups = scale.shape[1]
-    gsz = -(-p // n_groups)
+    gsz = group_size or -(-p // n_groups)
     idx = jnp.arange(p) // gsz
     w = (codes.astype(jnp.float32) - zero[:, idx]) * scale[:, idx]
     return (x.astype(jnp.float32) @ w.T).astype(out_dtype)

@@ -234,7 +234,7 @@ def apply_linear(w, x: jax.Array, out_shape: tuple = (), name: str = None) -> ja
         x2 = x.reshape(-1, x.shape[-1])
         y2 = kops.dequant_matmul(
             x2, w.codes, w.scale, w.zero, packed4=w.packed and w.bits == 4,
-            out_dtype=x.dtype, interpret=None,
+            out_dtype=x.dtype, interpret=None, group_size=w.group_size,
         )
         if w.outlier_values is not None:
             # Rank-s unstructured correction: y += x[:, cols] ⋅ vals → rows.

@@ -61,7 +61,8 @@ def test_objective_monotone(layer_problem):
     """Non-increasing damped objective from the first feasible iterate."""
     w, sigma = layer_problem
     _, objs = quantease_quantize(
-        w, sigma, SPEC3, iterations=10, unquantized_heuristic=False
+        w, sigma, SPEC3, iterations=10, unquantized_heuristic=False,
+        track_objective=True,
     )
     objs = np.asarray(objs)
     assert np.all(np.diff(objs) <= objs[:-1] * 1e-5 + 1e-3)

@@ -1,0 +1,299 @@
+"""Fused-iteration CD engine: parity, triangular scheduling, bf16 Σ̃, and
+the grouped-scale Pallas serving GEMM (DESIGN.md §Fused-iteration)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantease
+from repro.core.quantease import (
+    layer_objective,
+    quantease_quantize,
+    quantease_reference,
+    relative_error,
+)
+from repro.kernels import ops, ref
+from repro.quant import GridSpec, compute_grid, dequantize_codes, pack_codes, quantize_codes
+
+SPEC3 = GridSpec(bits=3)
+
+
+def _problem(seed, q, p, n):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((p, n)).astype(np.float32)
+    w = r.standard_normal((q, p)).astype(np.float32)
+    w[r.random((q, p)) < 0.003] *= 10.0
+    return jnp.asarray(w), jnp.asarray(x @ x.T)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bsz", [32, 64, 128])
+def test_fused_matches_reference(layer_problem, bsz):
+    """Fused engine reproduces Algorithm 1 (same iterates, any block size)."""
+    w, sigma = layer_problem
+    w_ref = quantease_reference(w, sigma, SPEC3, iterations=3)
+    w_fused, _ = quantease_quantize(
+        w, sigma, SPEC3, iterations=3, block_size=bsz,
+        unquantized_heuristic=False, engine="fused", use_kernel="xla",
+    )
+    np.testing.assert_allclose(np.asarray(w_ref), np.asarray(w_fused), rtol=0, atol=2e-4)
+
+
+@pytest.mark.parametrize("heuristic", [False, True])
+@pytest.mark.parametrize("bsz", [32, 128])
+def test_fused_matches_legacy(layer_problem, bsz, heuristic):
+    """Triangular-correction equivalence: the rolling-Δ fused schedule and
+    the legacy full-recompute schedule apply updates in the same order, so
+    iterates agree (bit-level drift only from fp reassociation, absorbed by
+    the grid snap on quantized iterations)."""
+    w, sigma = layer_problem
+    kw = dict(iterations=4, block_size=bsz, unquantized_heuristic=heuristic)
+    w_leg, _ = quantease_quantize(w, sigma, SPEC3, engine="legacy", **kw)
+    w_fus, _ = quantease_quantize(w, sigma, SPEC3, engine="fused", use_kernel="xla", **kw)
+    np.testing.assert_allclose(np.asarray(w_leg), np.asarray(w_fus), rtol=0, atol=2e-4)
+
+
+def test_fused_objective_matches_legacy(layer_problem):
+    w, sigma = layer_problem
+    kw = dict(iterations=5, unquantized_heuristic=False, track_objective=True)
+    _, o_leg = quantease_quantize(w, sigma, SPEC3, engine="legacy", **kw)
+    _, o_fus = quantease_quantize(w, sigma, SPEC3, engine="fused", **kw)
+    np.testing.assert_allclose(np.asarray(o_leg), np.asarray(o_fus), rtol=1e-5)
+
+
+def test_objective_opt_out_returns_none(layer_problem):
+    w, sigma = layer_problem
+    _, objs = quantease_quantize(w, sigma, SPEC3, iterations=2)
+    assert objs is None
+
+
+def test_bf16_sigma_within_tolerance(layer_problem):
+    """bf16 Σ̃ correction operands: solution quality stays at the fp32 level
+    (β/quantize path is fp32 — only correction matmul rounding differs)."""
+    w, sigma = layer_problem
+    kw = dict(iterations=8, unquantized_heuristic=False)
+    w32, _ = quantease_quantize(w, sigma, SPEC3, matmul_dtype="float32", **kw)
+    wbf, _ = quantease_quantize(w, sigma, SPEC3, matmul_dtype="bfloat16", **kw)
+    e32 = float(relative_error(w, w32, sigma))
+    ebf = float(relative_error(w, wbf, sigma))
+    assert ebf <= e32 * 1.05 + 1e-6
+    # and the bf16 iterate is still a descent vs RTN-style starting error
+    f0 = float(layer_objective(w, quantease.quantease_reference(
+        w, sigma, SPEC3, iterations=1), sigma))
+    assert float(layer_objective(w, wbf, sigma)) <= f0 * 1.05 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Single fused kernel vs per-block sweeps (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q,p,bsz", [(96, 128, 32), (64, 96, 48), (130, 64, 64)])
+def test_fused_kernel_matches_fused_xla(q, p, bsz):
+    w, sigma = _problem(q * p, q, p, 2 * p)
+    kw = dict(iterations=3, block_size=bsz, unquantized_heuristic=True)
+    wx, _ = quantease_quantize(w, sigma, SPEC3, use_kernel="xla", **kw)
+    wp, _ = quantease_quantize(w, sigma, SPEC3, use_kernel="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(wx), np.asarray(wp), atol=1e-5)
+
+
+def test_fused_kernel_single_launch_per_iteration():
+    """The fused Pallas path launches one kernel per iteration — not one per
+    column block (the pre-fused schedule's launch pattern)."""
+    w, sigma = _problem(7, 64, 128, 256)
+    n_calls = 0
+    orig = ops.quantease_fused_iteration
+
+    def counting(*a, **k):
+        nonlocal n_calls
+        n_calls += 1
+        return orig(*a, **k)
+
+    ops.quantease_fused_iteration, saved = counting, orig
+    try:
+        # under jit the wrapper traces once per distinct quantize flag; run
+        # untraced via the internal 2-D path to count real invocations
+        quantease._quantease_2d(
+            w, sigma, spec=SPEC3, iterations=4, block_size=32, percdamp=0.01,
+            unquantized_heuristic=False, w_init=None, grid=None,
+            use_kernel="pallas", matmul_dtype="float32",
+            track_objective=False, engine="fused",
+        )
+    finally:
+        ops.quantease_fused_iteration = saved
+    assert n_calls == 4  # one per iteration, though p/32 = 4 blocks each
+
+
+def test_fused_kernel_batched_matches_per_slice():
+    """Leading group dim through the fused kernel == per-slice solves."""
+    G = 3
+    probs = [_problem(11 + g, 48, 64, 128) for g in range(G)]
+    w3 = jnp.stack([pr[0] for pr in probs])
+    sig3 = jnp.stack([pr[1] for pr in probs])
+    kw = dict(iterations=2, block_size=32, unquantized_heuristic=False,
+              use_kernel="pallas")
+    wb, _ = quantease_quantize(w3, sig3, SPEC3, **kw)
+    for g in range(G):
+        wg, _ = quantease_quantize(w3[g], sig3[g], SPEC3, **kw)
+        np.testing.assert_allclose(np.asarray(wb[g]), np.asarray(wg), atol=1e-5)
+
+
+def test_use_kernel_auto_resolves():
+    assert quantease._resolve_use_kernel("auto") in ("xla", "pallas_hw")
+    if not ops.on_tpu():
+        assert quantease._resolve_use_kernel("auto") == "xla"
+    with pytest.raises(ValueError):
+        quantease._resolve_use_kernel("mosaic")
+    w, sigma = _problem(3, 32, 48, 96)
+    wa, _ = quantease_quantize(w, sigma, SPEC3, iterations=2, use_kernel="auto")
+    wx, _ = quantease_quantize(w, sigma, SPEC3, iterations=2, use_kernel="xla")
+    if not ops.on_tpu():
+        np.testing.assert_array_equal(np.asarray(wa), np.asarray(wx))
+
+
+# ---------------------------------------------------------------------------
+# Grouped-scale Pallas serving GEMM
+# ---------------------------------------------------------------------------
+
+
+def _gemm_problem(seed, m, q, p, n_groups):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((m, p)).astype(np.float32))
+    codes = jnp.asarray(r.integers(0, 16, (q, p)).astype(np.uint8))
+    scale = jnp.asarray((r.random((q, n_groups)) * 0.1 + 0.01).astype(np.float32))
+    zero = jnp.asarray(r.integers(0, 16, (q, n_groups)).astype(np.float32))
+    return x, codes, scale, zero
+
+
+@pytest.mark.parametrize(
+    "m,q,p,n_groups",
+    [
+        (4, 16, 64, 4),  # gsz=16 < tk: whole groups per tile
+        (8, 32, 128, 2),  # gsz=64
+        (5, 24, 640, 5),  # gsz=128, tk snaps to a multiple of gsz
+        (3, 16, 1536, 2),  # gsz=768 > tk=512: tile inside one group
+    ],
+)
+def test_grouped_dequant_matmul_pallas_matches_ref(m, q, p, n_groups):
+    x, codes, scale, zero = _gemm_problem(m * p, m, q, p, n_groups)
+    y_k = ops.dequant_matmul(
+        x, codes, scale, zero, out_dtype=jnp.float32, interpret=True
+    )
+    y_r = ref.dequant_matmul_ref(x, codes, scale, zero)
+    rel = float(jnp.max(jnp.abs(y_k - y_r)) / (jnp.max(jnp.abs(y_r)) + 1e-9))
+    assert rel < 2e-6
+
+
+def test_grouped_dequant_matmul_packed4_pallas_matches_ref():
+    x, codes, scale, zero = _gemm_problem(0, 6, 24, 256, 4)
+    packed = pack_codes(codes, 4)
+    y_k = ops.dequant_matmul(
+        x, packed, scale, zero, packed4=True, out_dtype=jnp.float32, interpret=True
+    )
+    y_r = ref.dequant_matmul_ref(x, codes, scale, zero)
+    rel = float(jnp.max(jnp.abs(y_k - y_r)) / (jnp.max(jnp.abs(y_r)) + 1e-9))
+    assert rel < 2e-6
+
+
+def test_grouped_packed4_cpu_dispatch_unpacks():
+    """Regression (kernels/ops.py): the grouped-scale CPU path used to hand
+    *packed* int4 codes to the reference GEMM, which reads them as raw uint8
+    codes — silently wrong results for every group_size spec with packed
+    weights."""
+    x, codes, scale, zero = _gemm_problem(1, 4, 8, 64, 4)
+    packed = pack_codes(codes, 4)
+    y = ops.dequant_matmul(x, packed, scale, zero, packed4=True, out_dtype=jnp.float32)
+    y_r = ref.dequant_matmul_ref(x, codes, scale, zero)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), rtol=1e-6, atol=1e-5)
+
+
+def test_grouped_ragged_falls_back_to_ref():
+    # p=60 with 8 groups: ragged last group — must still be correct (ref path).
+    x, codes, scale, zero = _gemm_problem(2, 3, 8, 60, 8)
+    y = ops.dequant_matmul(x, codes, scale, zero, out_dtype=jnp.float32, interpret=True)
+    y_r = ref.dequant_matmul_ref(x, codes, scale, zero)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), rtol=1e-6, atol=1e-5)
+
+
+def test_ragged_group_size_threads_true_boundaries():
+    """Regression: a ragged grid whose group *count* happens to divide p
+    (p=384, group_size=256 → groups of 256+128, n_groups=2) must dequantize
+    with the grid's true boundaries — without the threaded ``group_size``
+    both the uniform check (384 % 2 == 0) and ceil inference (gsz=192) get
+    it wrong."""
+    r = np.random.default_rng(5)
+    q, p, gsz = 8, 384, 256
+    w = jnp.asarray(r.standard_normal((q, p)).astype(np.float32))
+    spec = GridSpec(bits=4, group_size=gsz)
+    grid = compute_grid(w, spec)
+    codes = quantize_codes(w, grid)
+    x = jnp.asarray(r.standard_normal((3, p)).astype(np.float32))
+    scale_pc, zero_pc = grid.per_column(p)
+    w_true = (codes.astype(jnp.float32) - zero_pc) * scale_pc
+    y_true = x @ w_true.T
+    y = ops.dequant_matmul(
+        x, codes, grid.scale, grid.zero,
+        out_dtype=jnp.float32, group_size=gsz,
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_true), rtol=1e-6, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Solver grid threading: codes round-trip the solve exactly
+# ---------------------------------------------------------------------------
+
+
+def test_codes_roundtrip_solver_grid(layer_problem):
+    """quantize_codes on the *solver's* grid inverts exactly: dequantizing
+    the emitted codes reproduces Ŵ bit-for-bit (satellite: thread Grid
+    through _emit_leaf instead of recomputing on Ŵ)."""
+    w, sigma = layer_problem
+    grid = compute_grid(w, SPEC3)
+    w_hat, _ = quantease_quantize(w, sigma, SPEC3, iterations=3, grid=grid)
+    codes = quantize_codes(w_hat, grid)
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_codes(codes, grid)), np.asarray(w_hat)
+    )
+
+
+def test_emit_qt_roundtrips_model_solve():
+    """End-to-end: emit='qt' QuantizedTensor leaves dequantize back to the
+    solver's Ŵ exactly (error report == dequantized-leaf error)."""
+    from repro.configs import get_config
+    from repro.core.solver import PTQConfig, ptq_quantize_model
+    from repro.models import init_params, make_plan
+    from repro.quant import unpack_codes
+    from tests.conftest import reduce_cfg
+
+    cfg = reduce_cfg(get_config("stablelm_12b"), n_periods=1)
+    plan = make_plan(cfg, 1)
+    params = init_params(plan, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    calib = [{"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 64)).astype(np.int32))}]
+
+    pcfg = PTQConfig(method="quantease", spec=GridSpec(bits=4), iterations=3, emit="qt")
+    qt_params, report = ptq_quantize_model(plan, params, calib, pcfg)
+    qt_periods = qt_params["dec"]
+
+    # Re-run with emit='fake' (same solves, same grids) and compare a leaf.
+    fcfg = PTQConfig(method="quantease", spec=GridSpec(bits=4), iterations=3, emit="fake")
+    fake, _ = ptq_quantize_model(plan, params, calib, fcfg)
+
+    qt = qt_periods[0]["b0"]["wq"]
+    codes = qt.codes
+    if qt.packed:
+        codes = unpack_codes(codes, 4, codes.shape[-1] * 2)
+    deq = (codes.astype(jnp.float32) - qt.zero) * qt.scale  # (out_f, d_in)
+    w_fake = fake["dec"]["b0"]["wq"][0]  # original leaf layout, period 0
+    d_in = deq.shape[1]
+    w2 = w_fake.reshape(d_in, -1).T  # (out_f, d_in), fake-emit dtype (bf16)
+    # The fake leaf is Ŵ cast to the param dtype; an exact codes round-trip
+    # means dequantizing the QT leaf and casting reproduces it bit-for-bit.
+    np.testing.assert_array_equal(
+        np.asarray(deq.astype(w2.dtype)), np.asarray(w2)
+    )

@@ -56,7 +56,8 @@ def test_quantease_never_worse_than_rtn(seed, q, p, bits):
 def test_objective_monotone_property(seed, q, p):
     w, sigma = _problem(seed, q, p, max(2 * p, 16))
     _, objs = quantease_quantize(
-        w, sigma, GridSpec(bits=3), iterations=8, unquantized_heuristic=False
+        w, sigma, GridSpec(bits=3), iterations=8, unquantized_heuristic=False,
+        track_objective=True,
     )
     objs = np.asarray(objs)
     assert np.all(np.diff(objs) <= np.abs(objs[:-1]) * 1e-4 + 1e-3)

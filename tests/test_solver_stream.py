@@ -117,7 +117,9 @@ def test_batched_solve_matches_sequential(layer_problem, method):
         batched = gptq_quantize(w3, sig3, spec)
         seq = [gptq_quantize(w3[g], sig3[g], spec) for g in range(3)]
     else:
-        batched, objs = quantease_quantize(w3, sig3, spec, iterations=4)
+        batched, objs = quantease_quantize(
+            w3, sig3, spec, iterations=4, track_objective=True
+        )
         assert objs.shape == (3, 4)
         seq = [quantease_quantize(w3[g], sig3[g], spec, iterations=4)[0] for g in range(3)]
     for g in range(3):
@@ -139,7 +141,7 @@ def test_moe_vmapped_experts_match_per_expert_loop():
         w = p_blk[name]
         for e in range(w.shape[0]):
             w2d = w[e].reshape(w.shape[1], -1).T.astype(jnp.float32)
-            w_hat, _ = _quantize_one(w2d, st.sigma[e], cfg)
+            w_hat, _, _ = _quantize_one(w2d, st.sigma[e], cfg)
             ref = float(relative_error(w2d, w_hat, st.sigma[e]))
             got = report[f"dec.p0.b0/{name}.e{e}"]
             assert abs(got - ref) < 1e-4, (name, e)
@@ -178,7 +180,7 @@ def test_engine_report_matches_record_based_reference():
                     continue
                 sigma = _sigma_from_records(records[key])
                 w2d = w.reshape(sigma.shape[0], -1).T.astype(jnp.float32)
-                w_hat, _ = _quantize_one(w2d, sigma, cfg)
+                w_hat, _, _ = _quantize_one(w2d, sigma, cfg)
                 ref_report[key] = float(relative_error(w2d, w_hat, sigma))
                 new_blk[name] = w_hat.T.reshape(w.shape).astype(w.dtype)
             xs = [
