@@ -9,6 +9,15 @@ Measures, on the `benchmarks/runtime.py` layer shapes:
     engine, the new default) and ``fused_bf16`` (bf16 Σ̃ correction
     operands) — plus GPTQ's total wall-clock for the paper's
     "one QuantEase iteration ≈ one GPTQ solve" structural claim,
+  * per-outer-iteration wall-clock of the **outlier-aware** solve
+    (Algorithm 3) for ``legacy_obj`` (the pre-PR production default:
+    re-prepped quantease re-entry + dense IHT-gradient matmul +
+    unconditional objective, unrolled Python loop), ``legacy`` (same
+    schedule, objective off), ``fused`` (scanned resident-base engine,
+    DESIGN.md §Outlier-aware-fused) and ``fused_bf16`` — unstructured and
+    structured variants.  Per-outer-iteration numbers are *marginal*
+    ((t(iters) − t(1)) / (iters − 1)) so the shared one-time prep (grid
+    shrink, λ_max power iteration) doesn't flatter either engine,
   * serving-GEMM throughput of ``ops.dequant_matmul`` (per-channel,
     grouped, packed-int4 variants) in effective weight-GB/s.
 
@@ -26,13 +35,19 @@ import os
 import sys
 import time
 
-SCHEMA = 2
+SCHEMA = 3
 _CD_KEYS = {
     "q", "p", "block_size", "iterations",
     "legacy_obj_us_per_iter", "legacy_us_per_iter",
     "fused_us_per_iter", "fused_bf16_us_per_iter",
     "speedup_fused_vs_legacy_obj", "speedup_fused_vs_legacy",
     "gptq_total_us", "fused_iter_vs_gptq",
+}
+_OUTLIER_KEYS = {
+    "q", "p", "s", "structured", "iterations",
+    "legacy_obj_us_per_iter", "legacy_us_per_iter",
+    "fused_us_per_iter", "fused_bf16_us_per_iter",
+    "speedup_fused_vs_legacy_obj", "speedup_fused_vs_legacy",
 }
 _GEMM_KEYS = {"m", "q", "p", "variant", "us", "weight_gbps"}
 
@@ -91,6 +106,78 @@ def bench_cd(shapes, iterations, reps, block_size=128):
     return rows
 
 
+def _time_pair(fn_short, fn_long, reps):
+    """Best-of-reps for a (1-iteration, N-iteration) pair, interleaved so
+    machine-load drift hits both measurements equally."""
+    import jax
+
+    jax.block_until_ready(fn_short())
+    jax.block_until_ready(fn_long())
+    bs = bl = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_short())
+        bs = min(bs, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_long())
+        bl = min(bl, time.perf_counter() - t0)
+    return bs * 1e6, bl * 1e6
+
+
+def bench_outlier(shapes, iterations, reps, outlier_frac=0.01):
+    """Outlier-aware Algorithm 3: legacy (pre-PR schedule) vs the fused
+    resident-base engine, marginal us per outer iteration."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import outlier
+    from repro.quant import GridSpec
+
+    rng = np.random.default_rng(2)
+    spec = GridSpec(bits=3)  # the paper's outlier headline regime
+    rows = []
+    for q, p in shapes:
+        w = jnp.asarray(rng.standard_normal((q, p)).astype(np.float32))
+        x = rng.standard_normal((p, 2 * p)).astype(np.float32)
+        sig = jnp.asarray(x @ x.T)
+        s = max(int(outlier_frac * q * p), 1)
+
+        for structured in (False, True):
+            def solve(engine, iters, matmul_dtype="float32", track=False):
+                return lambda: outlier.outlier_quantease(
+                    w, sig, spec, s=s, iterations=iters, structured=structured,
+                    engine=engine, matmul_dtype=matmul_dtype,
+                    track_objective=track, use_kernel="auto",
+                ).w_hat
+
+            marg = {}
+            for name, engine, kw in (
+                ("legacy_obj", "legacy", dict(track=True)),
+                ("legacy", "legacy", {}),
+                ("fused", "fused", {}),
+                ("fused_bf16", "fused", dict(matmul_dtype="bfloat16")),
+            ):
+                u1, un = _time_pair(
+                    solve(engine, 1, **kw), solve(engine, iterations, **kw), reps
+                )
+                marg[name] = max(un - u1, 1e-9) / (iterations - 1)
+            rows.append({
+                "q": q, "p": p, "s": s, "structured": structured,
+                "iterations": iterations,
+                "legacy_obj_us_per_iter": round(marg["legacy_obj"], 1),
+                "legacy_us_per_iter": round(marg["legacy"], 1),
+                "fused_us_per_iter": round(marg["fused"], 1),
+                "fused_bf16_us_per_iter": round(marg["fused_bf16"], 1),
+                "speedup_fused_vs_legacy_obj": round(
+                    marg["legacy_obj"] / marg["fused"], 2
+                ),
+                "speedup_fused_vs_legacy": round(
+                    marg["legacy"] / marg["fused"], 2
+                ),
+            })
+    return rows
+
+
 def bench_serve_gemm(shapes, reps):
     import jax.numpy as jnp
     import numpy as np
@@ -146,9 +233,13 @@ def collect(smoke: bool) -> dict:
 
     if smoke:
         cd = bench_cd([(64, 64)], iterations=2, reps=1, block_size=32)
+        outl = bench_outlier([(64, 64)], iterations=3, reps=1)
         gemm = bench_serve_gemm([(4, 64, 64)], reps=1)
     else:
         cd = bench_cd([(128, 128), (256, 256), (512, 512)], iterations=5, reps=7)
+        outl = bench_outlier(
+            [(128, 128), (256, 256), (512, 512)], iterations=13, reps=7
+        )
         gemm = bench_serve_gemm([(8, 512, 512), (64, 1024, 1024)], reps=7)
     return {
         "schema": SCHEMA,
@@ -156,6 +247,7 @@ def collect(smoke: bool) -> dict:
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "cd": cd,
+        "outlier": outl,
         "serve_gemm": gemm,
     }
 
@@ -172,7 +264,9 @@ def validate(path: str) -> list[str]:
     probs = []
     if doc.get("schema") != SCHEMA:
         probs.append(f"schema != {SCHEMA}")
-    for section, keys in (("cd", _CD_KEYS), ("serve_gemm", _GEMM_KEYS)):
+    for section, keys in (
+        ("cd", _CD_KEYS), ("outlier", _OUTLIER_KEYS), ("serve_gemm", _GEMM_KEYS)
+    ):
         rows = doc.get(section)
         if not isinstance(rows, list) or not rows:
             probs.append(f"{section}: missing/empty")
@@ -205,6 +299,13 @@ def run(csv):
             fused_speedup=row["speedup_fused_vs_legacy_obj"],
             iter_vs_gptq=row["fused_iter_vs_gptq"],
         )
+    for row in doc["outlier"]:
+        kind = "struct" if row["structured"] else "unstruct"
+        csv.add(
+            f"outlier_{kind}_p{row['p']}_q{row['q']}",
+            us=row["fused_us_per_iter"],
+            fused_speedup=row["speedup_fused_vs_legacy_obj"],
+        )
     for row in doc["serve_gemm"]:
         csv.add(
             f"gemm_{row['variant']}_m{row['m']}_p{row['p']}",
@@ -234,6 +335,17 @@ def main():
             f"(legacy+obj {row['legacy_obj_us_per_iter']}, legacy {row['legacy_us_per_iter']}, "
             f"bf16 {row['fused_bf16_us_per_iter']}) "
             f"speedup {row['speedup_fused_vs_legacy_obj']}x/{row['speedup_fused_vs_legacy']}x"
+        )
+    for row in doc["outlier"]:
+        kind = "struct" if row["structured"] else "unstruct"
+        print(
+            f"outlier[{kind}] p={row['p']} q={row['q']}: "
+            f"fused {row['fused_us_per_iter']}us/outer-iter "
+            f"(legacy+obj {row['legacy_obj_us_per_iter']}, "
+            f"legacy {row['legacy_us_per_iter']}, "
+            f"bf16 {row['fused_bf16_us_per_iter']}) "
+            f"speedup {row['speedup_fused_vs_legacy_obj']}x"
+            f"/{row['speedup_fused_vs_legacy']}x"
         )
     for row in doc["serve_gemm"]:
         print(

@@ -36,6 +36,12 @@ All paths support the paper's "every third iteration unquantized" heuristic
 (§3.2 Initialization) and initialization from any Ŵ (e.g. GPTQ's output,
 §3.1 last paragraph).  The per-iteration objective history costs an extra
 qp² einsum per iteration and is **opt-in** (``track_objective=True``).
+
+The outlier-aware solver (:mod:`repro.core.outlier`, DESIGN.md
+§Outlier-aware-fused) builds its Algorithm-3 loop on the same
+``base = P − P̂`` / rolling-Δ invariant, sharing it across the Ŵ-block/
+Ĥ-block boundary instead of re-entering :func:`quantease_quantize` per
+outer iteration.
 """
 
 from __future__ import annotations

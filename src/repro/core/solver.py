@@ -62,9 +62,11 @@ QUANTIZABLE = {
 }
 _MOE_NAMES = {"w_gate", "w_up", "w_down"}
 
-# Methods whose solves are batchable with a single vmapped call; the rest
-# (outlier-aware variants carrying per-layer top-k structures) fall back to
-# a per-layer loop inside the same grouped interface.
+# Methods batchable with a single vmapped call *and* row-shardable under a
+# mesh.  qe_outlier/qe_outlier_struct also batch (one vmapped fused-engine
+# call per same-shape group — see _solve_group) but never row-shard: the
+# top-s projection is global across output rows.  The remainder (awq, spqr)
+# fall back to a per-layer loop inside the same grouped interface.
 _BATCHED_METHODS = {"rtn", "gptq", "quantease"}
 
 
@@ -164,6 +166,7 @@ def _quantize_one(w2d: jax.Array, sigma: jax.Array, cfg: PTQConfig):
             structured=cfg.method.endswith("struct"),
             percdamp=cfg.percdamp,
             use_kernel=cfg.use_kernel,
+            matmul_dtype=cfg.matmul_dtype,
         )
         return res.w_hat, res.h, res.grid
     raise ValueError(cfg.method)
@@ -215,6 +218,25 @@ def _solve_group(w3: jax.Array, sig3: jax.Array, cfg: PTQConfig, mesh):
             w_hat = solve(w3, sig3, grid3)
         grids = [jax.tree.map(lambda a: a[g], grid3) for g in range(G)]
         return w_hat, [None] * G, grids
+    if cfg.method in ("qe_outlier", "qe_outlier_struct"):
+        # Fused outlier engine batches like everything else: one vmapped
+        # solve per same-shape group.  (Never row-sharded: the unstructured
+        # top-s projection is global across output rows, so splitting q
+        # would change the solve.)
+        s = max(int(cfg.outlier_frac * int(w3[0].size)), 1)
+        res = outlier.outlier_quantease(
+            w3,
+            sig3,
+            cfg.spec,
+            s=s,
+            iterations=cfg.iterations,
+            structured=cfg.method.endswith("struct"),
+            percdamp=cfg.percdamp,
+            use_kernel=cfg.use_kernel,
+            matmul_dtype=cfg.matmul_dtype,
+        )
+        grids = [jax.tree.map(lambda a: a[g], res.grid) for g in range(G)]
+        return res.w_hat, [res.h[g] for g in range(G)], grids
     outs, hs, grids = [], [], []
     for g in range(G):
         w_hat, h, grid = _quantize_one(w3[g], sig3[g], cfg)
@@ -304,15 +326,17 @@ def _emit_leaf(w_hat, h, like, cfg: PTQConfig, grid=None):
         packed=packed,
     )
     if h is not None:
+        # Sparse-Ĥ artifact: COO with flat int32 indices + fp16 values
+        # (48 bits/outlier — §5.4 accounting) instead of a dense (q, p)
+        # fp32 array.  ‖Ĥ‖₀ ≤ s, so top-s by |value| captures the support
+        # exactly; pad entries carry (idx 0, value 0) — additive no-ops.
         s = max(int(cfg.outlier_frac * w_hat.size), 1)
-        flat = jnp.abs(h).reshape(-1)
-        _, idx = jax.lax.top_k(flat, s)
-        rows, cols = idx // h.shape[1], idx % h.shape[1]
+        flat = h.reshape(-1)
+        _, idx = jax.lax.top_k(jnp.abs(flat), s)
         qt = dataclasses.replace(
             qt,
-            outlier_values=h.reshape(-1)[idx],
-            outlier_rows=rows.astype(jnp.int32),
-            outlier_cols=cols.astype(jnp.int32),
+            outlier_values=flat[idx].astype(jnp.float16),
+            outlier_idx=idx.astype(jnp.int32),
         )
     return qt
 

@@ -18,12 +18,17 @@ from repro.kernels.dequant_matmul import dequant_matmul_pallas
 from repro.kernels.quantease_cd import (
     quantease_block_sweep_pallas,
     quantease_fused_iteration_pallas,
+    quantease_outlier_iteration_pallas,
+    quantease_outlier_iteration_t_pallas,
 )
 
 __all__ = [
     "quantease_block_sweep",
     "quantease_fused_iteration",
+    "quantease_outlier_iteration",
+    "quantease_outlier_iteration_t",
     "fused_iteration_tq",
+    "outlier_iteration_tq",
     "dequant_matmul",
     "on_tpu",
 ]
@@ -120,6 +125,120 @@ def quantease_fused_iteration(
             base, sig_tilde, w_hat, scale_pc, zero_pc, delta_prev
         )
     return kernel(base, sig_tilde, w_hat, scale_pc, zero_pc, delta_prev)
+
+
+def outlier_iteration_tq(
+    p_pad: int, bsz: int, matmul_dtype: str = "float32", tq: int = 256
+):
+    """Pick a q-tile for the outlier-aware fused-iteration kernel, or None
+    if it cannot fit VMEM.
+
+    Resident per program, beyond the base kernel's set: a second
+    (p_pad × tq) fp32 slab (the R accumulator output) and a second
+    (p_pad × bsz) Σ̃ slab (the suffix column block; bf16 halves both Σ̃
+    slabs).  As with :func:`fused_iteration_tq`, only the p_pad×tq terms
+    shrink with ``tq`` — too-wide layers must take the XLA schedule.
+    """
+    sig_bytes = 2 * bsz * p_pad * (2 if matmul_dtype == "bfloat16" else 4)
+    budget = 12 * 1024 * 1024
+    while tq > 128 and 2 * p_pad * tq * 4 + sig_bytes + 8 * bsz * tq * 4 > budget:
+        tq //= 2
+    if 2 * p_pad * tq * 4 + sig_bytes + 8 * bsz * tq * 4 > budget:
+        return None
+    return tq
+
+
+def quantease_outlier_iteration(
+    base,
+    sig_tilde,
+    w_old,
+    scale_pc,
+    zero_pc,
+    delta_prev,
+    dh_prev,
+    *,
+    n_levels,
+    quantize,
+    bsz,
+    matmul_dtype="float32",
+    interpret=None,
+    tq=None,
+):
+    """One outlier-aware fused CD iteration (sweep + exact residual) as a
+    single kernel launch.
+
+    2-D operands: one (q, p_pad) layer; a leading group dim batches G layers
+    into one launch (vmap folds into the grid).  Returns
+    ``(w_new, base_new, delta_pure, r)`` — see
+    :func:`repro.kernels.quantease_cd.quantease_outlier_iteration_pallas`.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    p_pad = sig_tilde.shape[-1]
+    if tq is None:
+        tq = outlier_iteration_tq(p_pad, bsz, matmul_dtype)
+        if tq is None:
+            raise ValueError(
+                f"outlier fused iteration does not fit VMEM "
+                f"(p_pad={p_pad}, bsz={bsz}); use the XLA engine for this layer"
+            )
+    kernel = functools.partial(
+        quantease_outlier_iteration_pallas,
+        n_levels=n_levels,
+        quantize=quantize,
+        bsz=bsz,
+        tq=tq,
+        matmul_dtype=matmul_dtype,
+        interpret=interpret,
+    )
+    if base.ndim == 3:
+        return jax.vmap(kernel)(
+            base, sig_tilde, w_old, scale_pc, zero_pc, delta_prev, dh_prev
+        )
+    return kernel(base, sig_tilde, w_old, scale_pc, zero_pc, delta_prev, dh_prev)
+
+
+def quantease_outlier_iteration_t(
+    base_t,
+    *,
+    sig_corr,
+    sig_t,
+    w_old_t,
+    scale_t,
+    zero_t,
+    dh_prev_t,
+    delta_prev_t,
+    n_levels,
+    quantize,
+    bsz,
+    tq,
+    matmul_dtype="float32",
+    interpret=None,
+):
+    """Transposed-native outlier fused iteration (the scanned engine's hot
+    entry): operands arrive in the resident (p_pad, qp) layout, so no
+    per-iteration transposes cross the kernel boundary.  Loop-invariant
+    operands (``sig_corr``/``sig_t``/``scale_t``/``zero_t``) are prepped
+    once by the caller.  Returns ``(w_new_t, base_new_t, delta_pure_t,
+    r_t)``, all (p_pad, qp)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return quantease_outlier_iteration_t_pallas(
+        base_t,
+        sig_corr=sig_corr,
+        sig_t=sig_t,
+        w_old_t=w_old_t,
+        scale_t=scale_t,
+        zero_t=zero_t,
+        dh_prev_t=dh_prev_t,
+        delta_prev_t=delta_prev_t,
+        n_levels=n_levels,
+        quantize=quantize,
+        bsz=bsz,
+        tq=tq,
+        matmul_dtype=matmul_dtype,
+        interpret=interpret,
+    )
 
 
 def _unpacked(codes, packed4):

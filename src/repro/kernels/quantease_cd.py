@@ -1,6 +1,6 @@
 """Pallas TPU kernels: QuantEase coordinate-descent sweeps.
 
-Two kernels:
+Three kernels:
 
 * :func:`quantease_block_sweep_pallas` — the intra-block sweep of one column
   block (the original per-block kernel; the legacy engine launches one of
@@ -17,6 +17,14 @@ Two kernels:
   per block simultaneously applies the triangular cross-block correction
   and the incremental ``base = P − P̂`` maintenance (see
   repro/core/quantease.py).
+* :func:`quantease_outlier_iteration_pallas` — the outlier-aware variant
+  (DESIGN.md §Outlier-aware-fused): same rolling-Δ sweep plus, in the same
+  launch, (a) the Ĥ-step's lazy target move (``−dĤ_prev`` absorbed at the
+  base read, ``−dĤ_prevΣ̃`` folded into the published Δ) and (b) the exact
+  post-sweep residual ``R = P − ŴΣ̃`` accumulated into a VMEM-resident
+  output: each block adds its β0 tile plus its pure δŴ's suffix
+  contribution ``Σ̃ᵀ[:, blk] δŴ_blk`` masked to the blocks already seeded.
+  One launch per *outer* Algorithm-3 iteration.
 
 Row independence makes everything embarrassingly parallel over the q
 (output-channel) dimension, so the grid tiles q.  All operands are carried
@@ -40,7 +48,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["quantease_block_sweep_pallas", "quantease_fused_iteration_pallas"]
+__all__ = [
+    "quantease_block_sweep_pallas",
+    "quantease_fused_iteration_pallas",
+    "quantease_outlier_iteration_pallas",
+    "quantease_outlier_iteration_t_pallas",
+]
 
 
 def _sweep_kernel(
@@ -284,3 +297,226 @@ def quantease_fused_iteration_pallas(
         else None,
     )(base_t, sig_corr, sig_t, w_old_t, scale_t, zero_t, delta_prev_t)
     return w_new_t.T[:q], base_out_t.T[:q], delta_out_t.T[:q]
+
+
+# ---------------------------------------------------------------------------
+# Outlier-aware fused iteration: CD sweep + exact-residual accumulation in
+# one launch (DESIGN.md §Outlier-aware-fused).
+# ---------------------------------------------------------------------------
+
+
+def _outlier_iter_kernel(
+    base_t_ref,  # (B, TQ) f32 — base invariant tile for this block
+    sig_corr_ref,  # (B, p_pad) cdt — Σ̃ᵀ rows of this block (full-width corr)
+    sig_col_ref,  # (p_pad, B) cdt — Σ̃ᵀ columns of this block (suffix resid)
+    sig_diag_ref,  # (B, B) f32 — Σ̃ᵀ diagonal block (intra-block sweep)
+    w_old_t_ref,  # (B, TQ) f32 — Ŵᵀ at iteration start
+    scale_t_ref,  # (B, TQ) f32
+    zero_t_ref,  # (B, TQ) f32
+    dh_prev_t_ref,  # (B, TQ) f32 — previous IHT step dĤᵀ tile
+    delta_prev_t_ref,  # (p_pad, TQ) f32 — rolling Δᵀ entering the iteration
+    w_new_t_ref,  # (B, TQ) f32 out
+    base_out_t_ref,  # (B, TQ) f32 out — next iteration's base invariant
+    dpure_t_ref,  # (B, TQ) f32 out — this block's *pure* δŴ
+    r_t_ref,  # (p_pad, TQ) f32 out — exact residual R = P − ŴΣ̃, accumulated
+    delta_acc,  # (p_pad, TQ) f32 VMEM scratch — rolling Δ across blocks
+    *,
+    n_levels: int,
+    quantize: bool,
+    bsz: int,
+    corr_dtype,
+):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _seed():
+        delta_acc[...] = delta_prev_t_ref[...]
+        r_t_ref[...] = jnp.zeros_like(r_t_ref)
+
+    # Full-width rolling-Δ correction.  The buffer holds, for blocks < b,
+    # this iteration's published (δŴ − dĤ_prev) deltas and, for blocks ≥ b,
+    # the previous iteration's — so one matmul applies the triangular
+    # cross-block correction, the incremental base maintenance, AND the
+    # −dĤΣ̃ target move of the Ĥ-step.  The identity part of the target move
+    # (−dĤ) is absorbed into the read below.
+    corr = jnp.dot(
+        sig_corr_ref[...],
+        delta_acc[...].astype(corr_dtype),
+        preferred_element_type=jnp.float32,
+    )  # (B, TQ)
+    beta0 = base_t_ref[...] - dh_prev_t_ref[...] + corr
+    base_out_t_ref[...] = beta0
+    r_t_ref[pl.ds(b * bsz, bsz), :] += beta0
+
+    # Intra-block sequential sweep (fp32 — the β/quantize path).
+    dpure_t_ref[...] = jnp.zeros_like(dpure_t_ref)
+
+    def body(i, _):
+        sig_row = sig_diag_ref[pl.ds(i, 1), :]  # (1, B)
+        c = jnp.dot(
+            sig_row, dpure_t_ref[...], preferred_element_type=jnp.float32
+        )  # (1, TQ) — rows ≥ i still zero; dĤ_prev cancels in the difference
+        beta = jax.lax.dynamic_slice(beta0, (i, 0), (1, beta0.shape[1])) + c
+        if quantize:
+            sc = scale_t_ref[pl.ds(i, 1), :]
+            zc = zero_t_ref[pl.ds(i, 1), :]
+            codes = jnp.clip(jnp.round(beta / sc) + zc, 0, n_levels - 1)
+            new = (codes - zc) * sc
+        else:
+            new = beta
+        w_new_t_ref[pl.ds(i, 1), :] = new
+        dpure_t_ref[pl.ds(i, 1), :] = w_old_t_ref[pl.ds(i, 1), :] - new
+        return 0
+
+    jax.lax.fori_loop(0, bsz, body, 0)
+    # Publish δŴ − dĤ_prev so later blocks' corrections also carry the Ĥ
+    # step's −dĤΣ̃ target move; the pure δŴ stays in the output (suffix
+    # residual + next iteration's rolling state).
+    delta_acc[pl.ds(b * bsz, bsz), :] = (
+        dpure_t_ref[...] - dh_prev_t_ref[...]
+    )
+    # Suffix-residual contribution: this block's pure δŴ corrects R of every
+    # block ≤ b (row mask) — accumulated into the resident R output.
+    contrib = jnp.dot(
+        sig_col_ref[...],
+        dpure_t_ref[...].astype(corr_dtype),
+        preferred_element_type=jnp.float32,
+    )  # (p_pad, TQ)
+    row = jax.lax.broadcasted_iota(jnp.int32, contrib.shape, 0)
+    r_t_ref[...] += jnp.where(row < (b + 1) * bsz, contrib, 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_levels", "quantize", "bsz", "tq", "matmul_dtype", "interpret"),
+)
+def quantease_outlier_iteration_pallas(
+    base: jax.Array,  # (q, p_pad) f32 — base invariant entering this iteration
+    sig_tilde: jax.Array,  # (p_pad, p_pad) f32 — zero diag, column-normalized
+    w_old: jax.Array,  # (q, p_pad) f32 — iterate Ŵ entering this iteration
+    scale_pc: jax.Array,  # (q, p_pad) f32
+    zero_pc: jax.Array,  # (q, p_pad) f32
+    delta_prev: jax.Array,  # (q, p_pad) f32 — rolling Δ entering the iteration
+    dh_prev: jax.Array,  # (q, p_pad) f32 — previous IHT step dĤ
+    *,
+    n_levels: int,
+    quantize: bool,
+    bsz: int,
+    tq: int = 256,
+    matmul_dtype: str = "float32",
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One outlier-aware fused CD iteration in a single ``pallas_call``.
+
+    Returns ``(w_new, base_new, delta_pure, r)``: the new iterate, the next
+    iteration's base invariant, the pure δŴ (rolling-Δ state before the
+    next dĤ fold), and the **exact residual** ``R = P − Ŵ_newΣ̃`` the IHT
+    step consumes.  ``p_pad`` must be a multiple of ``bsz``.
+    """
+    q, p_pad = base.shape
+    assert p_pad % bsz == 0, (p_pad, bsz)
+    tq = min(tq, q)
+    pad_q = (-q) % tq
+    qp = q + pad_q
+
+    def prep(a, fill=0.0):  # (q, p_pad) → (p_pad, qp) transposed + padded
+        if pad_q:
+            a = jnp.pad(a, ((0, pad_q), (0, 0)), constant_values=fill)
+        return a.T
+
+    cdt = jnp.bfloat16 if matmul_dtype == "bfloat16" else jnp.float32
+    sig_t = sig_tilde.T  # row j = Σ̃[:, j]
+    w_new_t, base_out_t, dpure_t, r_t = quantease_outlier_iteration_t_pallas(
+        prep(base),
+        sig_corr=sig_t.astype(cdt),
+        sig_t=sig_t,
+        w_old_t=prep(w_old),
+        scale_t=prep(jnp.maximum(scale_pc, 1e-12), fill=1.0),
+        zero_t=prep(zero_pc),
+        dh_prev_t=prep(dh_prev),
+        delta_prev_t=prep(delta_prev),
+        n_levels=n_levels,
+        quantize=quantize,
+        bsz=bsz,
+        tq=tq,
+        matmul_dtype=matmul_dtype,
+        interpret=interpret,
+    )
+    return w_new_t.T[:q], base_out_t.T[:q], dpure_t.T[:q], r_t.T[:q]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_levels", "quantize", "bsz", "tq", "matmul_dtype", "interpret"),
+)
+def quantease_outlier_iteration_t_pallas(
+    base_t: jax.Array,  # (p_pad, qp) f32 — transposed base invariant
+    *,
+    sig_corr: jax.Array,  # (p_pad, p_pad) cdt — Σ̃ᵀ cast for the matmuls
+    sig_t: jax.Array,  # (p_pad, p_pad) f32 — Σ̃ᵀ (intra-block sweep)
+    w_old_t: jax.Array,  # (p_pad, qp) f32
+    scale_t: jax.Array,  # (p_pad, qp) f32 — clamped ≥ 1e-12, pad cols = 1
+    zero_t: jax.Array,  # (p_pad, qp) f32
+    dh_prev_t: jax.Array,  # (p_pad, qp) f32
+    delta_prev_t: jax.Array,  # (p_pad, qp) f32
+    n_levels: int,
+    quantize: bool,
+    bsz: int,
+    tq: int,
+    matmul_dtype: str = "float32",
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Transposed-native entry: one outlier-aware fused CD iteration on
+    operands already in the engine's resident (p_pad, qp) layout.
+
+    The scanned outer loop in :mod:`repro.core.outlier` carries its state
+    transposed and its Σ̃/scale/zero operands are loop-invariant — calling
+    this entry directly (rather than the (q, p) wrapper above) means no
+    per-iteration layout transposes cross the pallas_call boundary.
+    ``p_pad % bsz == 0`` and ``qp % tq == 0`` are the caller's contract.
+    """
+    p_pad, qp = base_t.shape
+    assert p_pad % bsz == 0 and qp % tq == 0, (p_pad, bsz, qp, tq)
+    n_blocks = p_pad // bsz
+    cdt = jnp.bfloat16 if matmul_dtype == "bfloat16" else jnp.float32
+
+    kernel = functools.partial(
+        _outlier_iter_kernel,
+        n_levels=n_levels,
+        quantize=quantize,
+        bsz=bsz,
+        corr_dtype=cdt,
+    )
+    grid = (qp // tq, n_blocks)
+    out_spec = pl.BlockSpec((bsz, tq), lambda i, b: (b, i))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, tq), lambda i, b: (b, i)),  # base
+            pl.BlockSpec((bsz, p_pad), lambda i, b: (b, 0)),  # Σ̃ᵀ corr rows
+            pl.BlockSpec((p_pad, bsz), lambda i, b: (0, b)),  # Σ̃ᵀ suffix cols
+            pl.BlockSpec((bsz, bsz), lambda i, b: (b, b)),  # Σ̃ᵀ diag block
+            pl.BlockSpec((bsz, tq), lambda i, b: (b, i)),  # w_old
+            pl.BlockSpec((bsz, tq), lambda i, b: (b, i)),  # scale
+            pl.BlockSpec((bsz, tq), lambda i, b: (b, i)),  # zero
+            pl.BlockSpec((bsz, tq), lambda i, b: (b, i)),  # dh_prev
+            pl.BlockSpec((p_pad, tq), lambda i, b: (0, i)),  # Δ_prev (resident)
+        ],
+        out_specs=[out_spec, out_spec, out_spec,
+                   pl.BlockSpec((p_pad, tq), lambda i, b: (0, i))],  # R resident
+        out_shape=[
+            jax.ShapeDtypeStruct((p_pad, qp), jnp.float32),
+            jax.ShapeDtypeStruct((p_pad, qp), jnp.float32),
+            jax.ShapeDtypeStruct((p_pad, qp), jnp.float32),
+            jax.ShapeDtypeStruct((p_pad, qp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p_pad, tq), jnp.float32)],
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
+        )
+        if not interpret
+        else None,
+    )(base_t, sig_corr, sig_corr, sig_t, w_old_t, scale_t, zero_t,
+      dh_prev_t, delta_prev_t)

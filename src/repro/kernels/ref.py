@@ -10,7 +10,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantease_block_sweep_ref", "dequant_matmul_ref", "gram_ref"]
+__all__ = [
+    "quantease_block_sweep_ref",
+    "quantease_outlier_iteration_ref",
+    "dequant_matmul_ref",
+    "gram_ref",
+]
 
 
 def _quant_cols(x, scale, zero, n_levels):
@@ -49,6 +54,48 @@ def quantease_block_sweep_ref(
         col, jnp.zeros((q, bsz), jnp.float32), jnp.arange(bsz)
     )
     return new_cols.T, delta
+
+
+def quantease_outlier_iteration_ref(
+    base: jax.Array,  # (q, p) f32 — rolling base invariant entering the iter
+    sig_tilde: jax.Array,  # (p, p) f32 — zero diag, column-normalized
+    w_old: jax.Array,  # (q, p) f32 — Ŵ entering the iteration
+    scale_pc: jax.Array,  # (q, p) f32
+    zero_pc: jax.Array,  # (q, p) f32
+    delta_prev: jax.Array,  # (q, p) f32 — rolling Δ (δŴ_prev − dĤ_prev)
+    dh_prev: jax.Array,  # (q, p) f32 — previous IHT step dĤ
+    *,
+    n_levels: int,
+    quantize: bool,
+    bsz: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for the outlier-aware fused iteration kernel: the blocked
+    rolling-Δ sweep with the Ĥ-step's target move applied lazily, plus the
+    exact post-sweep residual ``R = P − Ŵ_newΣ̃`` via the masked block-suffix
+    product.  Returns ``(w_new, base_new, delta_pure, r)``.
+    """
+    q, p = base.shape
+    n_blocks = p // bsz
+    w_new = w_old
+    delta_buf = delta_prev  # rolling: published (δŴ − dĤ_prev) rows
+    base_out = jnp.zeros_like(base)
+    dpure = jnp.zeros_like(base)
+    for b in range(n_blocks):
+        sl = slice(b * bsz, (b + 1) * bsz)
+        corr = delta_buf @ sig_tilde[:, sl]
+        beta0 = base[:, sl] - dh_prev[:, sl] + corr
+        new_blk, dblk = quantease_block_sweep_ref(
+            beta0, sig_tilde[sl, sl], w_old[:, sl], scale_pc[:, sl],
+            zero_pc[:, sl], n_levels=n_levels, quantize=quantize,
+        )
+        w_new = w_new.at[:, sl].set(new_blk)
+        base_out = base_out.at[:, sl].set(beta0)
+        dpure = dpure.at[:, sl].set(dblk)
+        delta_buf = delta_buf.at[:, sl].set(dblk - dh_prev[:, sl])
+    blk = jnp.arange(p) // bsz
+    sig_suffix = jnp.where(blk[:, None] >= blk[None, :], sig_tilde, 0.0)
+    r = base_out + dpure @ sig_suffix
+    return w_new, base_out, dpure, r
 
 
 def dequant_matmul_ref(

@@ -237,11 +237,17 @@ def apply_linear(w, x: jax.Array, out_shape: tuple = (), name: str = None) -> ja
             out_dtype=x.dtype, interpret=None, group_size=w.group_size,
         )
         if w.outlier_values is not None:
-            # Rank-s unstructured correction: y += x[:, cols] ⋅ vals → rows.
-            contrib = x2[:, w.outlier_cols].astype(jnp.float32) * w.outlier_values
+            # Rank-s unstructured COO correction (fp16 values, flat int32
+            # indices): y += x[:, cols] ⋅ vals → rows, after the dequant-GEMM.
+            p_in = w.shape[1]
+            rows = w.outlier_idx // p_in
+            cols = w.outlier_idx % p_in
+            contrib = x2[:, cols].astype(jnp.float32) * w.outlier_values.astype(
+                jnp.float32
+            )
             y2 = (
                 y2.astype(jnp.float32)
-                .at[:, w.outlier_rows]
+                .at[:, rows]
                 .add(contrib)
                 .astype(x.dtype)
             )

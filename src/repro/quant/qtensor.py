@@ -7,10 +7,12 @@ with ``W: (q, p)`` (out, in).  A ``QuantizedTensor`` stores:
     :mod:`repro.quant.pack` provides the packed storage format used by
     checkpoints, and the Pallas dequant-matmul consumes either),
   * ``scale`` / ``zero`` — (q, n_groups) fp32 affine grid,
-  * ``outlier_values`` / ``outlier_rows`` / ``outlier_cols`` — optional COO
-    rank-s correction ``H`` (QuantEase §4: W ≈ Ŵ + H, ‖H‖₀ ≤ s), padded to a
-    static ``s`` so the pytree has static shapes (padding entries carry
-    value 0 and index 0 — a zero-valued update is a no-op),
+  * ``outlier_values`` / ``outlier_idx`` — optional COO rank-s correction
+    ``H`` (QuantEase §4: W ≈ Ŵ + H, ‖H‖₀ ≤ s) stored as fp16 values plus
+    flat row-major int32 indices (``idx = row·p + col`` — 48 bits/outlier
+    total, the §5.4 accounting), padded to a static ``s`` so the pytree has
+    static shapes (padding entries carry value 0 and index 0 — a zero-valued
+    update is a no-op),
   * ``outlier_col_idx`` / ``outlier_col_vals`` — optional *structured* column
     outliers (whole fp columns; QuantEase §4.3 "Structured Outliers").
 
@@ -43,10 +45,10 @@ class QuantizedTensor:
         metadata=dict(static=True), default=None
     )
     packed: bool = dataclasses.field(metadata=dict(static=True), default=False)
-    # Unstructured outliers (COO, statically padded).
-    outlier_values: Optional[jax.Array] = None  # (s,) fp32
-    outlier_rows: Optional[jax.Array] = None  # (s,) int32
-    outlier_cols: Optional[jax.Array] = None  # (s,) int32
+    # Unstructured outliers (COO, statically padded): fp16 values + flat
+    # row-major int32 indices into the (q, p) weight.
+    outlier_values: Optional[jax.Array] = None  # (s,) fp16
+    outlier_idx: Optional[jax.Array] = None  # (s,) int32, row·p + col
     # Structured (column) outliers.
     outlier_col_idx: Optional[jax.Array] = None  # (c,) int32
     outlier_col_vals: Optional[jax.Array] = None  # (q, c) fp32
@@ -107,7 +109,8 @@ def dequantize_tensor(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
     scale, zero = qt.grid.per_column(p)
     w = (qt.unpacked_codes().astype(jnp.float32) - zero) * scale
     if qt.outlier_values is not None:
-        w = w.at[qt.outlier_rows, qt.outlier_cols].add(qt.outlier_values)
+        rows, cols = qt.outlier_idx // p, qt.outlier_idx % p
+        w = w.at[rows, cols].add(qt.outlier_values.astype(jnp.float32))
     if qt.outlier_col_idx is not None:
         w = w.at[:, qt.outlier_col_idx].set(qt.outlier_col_vals)
     return w.astype(dtype)
