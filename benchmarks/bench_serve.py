@@ -1,0 +1,297 @@
+"""BENCH_serve — throughput / latency trajectory of the serving engines.
+
+Serves batches of greedy-decode requests on a small random-init decoder
+(serving perf is weight-value independent) and measures, per (scenario,
+engine, kv-dtype) cell:
+
+  * **tokens/s** — generated tokens over wall-clock from first submit to
+    batch completion (prefill + decode + scheduling, everything included),
+  * **TTFT** — per-request time-to-first-token (mean + p90), which is where
+    chunked prefill and wider paged admission show up,
+  * engine counters: prefill chunks/tokens, prefix-cache hit tokens,
+    preemptions.
+
+The paged and contiguous engines get the **same KV token budget**; the
+contiguous engine spends it on ``budget / max_seq`` whole-sequence slots
+while the paged engine spends it on pages — more concurrent lanes for the
+same memory, which is the paged throughput story (plus prefix-cache prefill
+savings in the shared-prefix scenario).
+
+Scenarios: ``mixed`` (uniform random prompt lengths — the acceptance
+workload: paged ≥ 1.5× contiguous tokens/s), ``shared_prefix`` (a common
+system prompt + unique tails) and a ``mixed`` int8-KV variant.
+
+Emits ``BENCH_serve.json``; ``--smoke`` runs a seconds-scale subset with
+the same schema (CI guards the file shape, not the numbers);
+``--validate`` checks an existing file and exits non-zero on
+malformed/missing.  Mirrors benchmarks/bench_solver.py conventions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+SCHEMA = 1
+_SERVE_KEYS = {
+    "scenario", "engine", "kv", "max_batch", "kv_budget_tokens", "n_requests",
+    "new_tokens", "wall_s", "tokens_per_s", "ttft_mean_ms", "ttft_p90_ms",
+    "prefill_tokens", "prefix_hit_tokens", "preemptions",
+}
+
+
+def _bench_model(smoke: bool):
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.train import reduced
+    from repro.models import init_params, make_plan
+
+    cfg = reduced(get_config("stablelm_12b"))
+    if smoke:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, d_model=64, head_dim=16, d_ff=128)
+    plans = {
+        "bf16": make_plan(cfg, 1),
+        "int8": make_plan(cfg, 1, kv_cache_dtype="int8"),
+    }
+    params = init_params(plans["bf16"], jax.random.PRNGKey(0))
+    return cfg, plans, params
+
+
+def _requests(cfg, scenario: str, n: int, max_prompt: int, max_new: int):
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(7)
+    reqs = []
+    sys_prompt = rng.integers(0, cfg.vocab, max_prompt // 2).astype(np.int32)
+    for i in range(n):
+        if scenario == "shared_prefix":
+            tail = rng.integers(0, cfg.vocab, rng.integers(4, max_prompt // 4))
+            prompt = np.concatenate([sys_prompt, tail.astype(np.int32)])
+        else:  # mixed prompt lengths
+            prompt = rng.integers(0, cfg.vocab, rng.integers(8, max_prompt)).astype(
+                np.int32
+            )
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
+    return reqs
+
+
+def _drive(eng, reqs, max_steps=100_000):
+    """Submit everything up front, step to completion, record per-request
+    time-to-first-token against the common start instant."""
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    ttft = {}
+    steps = 0
+    while (eng.queue or any(s is not None for s in _lanes(eng))) and steps < max_steps:
+        if not eng.step():
+            break
+        now = time.perf_counter()
+        for r in reqs:
+            if r.rid not in ttft and r.output:
+                ttft[r.rid] = now - t0
+        steps += 1
+    wall = time.perf_counter() - t0
+    return wall, [ttft.get(r.rid, wall) for r in reqs]
+
+
+def _lanes(eng):
+    return getattr(eng, "lanes", None) or getattr(eng, "slot_req")
+
+
+def _row(scenario, engine_name, kv, eng, reqs, wall, ttfts, budget):
+    import numpy as np
+
+    new_tokens = sum(len(r.output) for r in reqs)
+    return {
+        "scenario": scenario,
+        "engine": engine_name,
+        "kv": kv,
+        "max_batch": eng.max_batch,
+        "kv_budget_tokens": budget,
+        "n_requests": len(reqs),
+        "new_tokens": new_tokens,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(new_tokens / wall, 1),
+        "ttft_mean_ms": round(float(np.mean(ttfts)) * 1e3, 1),
+        "ttft_p90_ms": round(float(np.percentile(ttfts, 90)) * 1e3, 1),
+        "prefill_tokens": getattr(eng, "n_prefill_tokens", 0),
+        "prefix_hit_tokens": getattr(eng, "n_prefix_hit_tokens", 0),
+        "preemptions": getattr(eng, "n_preemptions", 0),
+    }
+
+
+def collect(smoke: bool) -> dict:
+    import jax
+
+    from repro.serve.engine import PagedServingEngine, ServingEngine
+
+    cfg, plans, params = _bench_model(smoke)
+    if smoke:
+        max_seq, page_size, chunk = 64, 8, 16
+        contig_batch, paged_batch = 2, 4
+        n_req, max_prompt, max_new = 4, 24, 4
+    else:
+        max_seq, page_size, chunk = 256, 16, 64
+        contig_batch, paged_batch = 4, 16
+        n_req, max_prompt, max_new = 32, 160, 32
+    budget = contig_batch * max_seq  # KV tokens both engines may hold
+    n_pages = 1 + budget // page_size
+
+    def contiguous(plan):
+        return ServingEngine(
+            plan, params, max_batch=contig_batch, max_seq=max_seq,
+            prefill_pad=chunk,
+        )
+
+    def paged(plan, prefix_cache=True):
+        return PagedServingEngine(
+            plan, params, max_batch=paged_batch, max_seq=max_seq,
+            page_size=page_size, n_pages=n_pages, prefill_chunk=chunk,
+            prefix_cache=prefix_cache,
+        )
+
+    cells = [
+        ("mixed", "contiguous", "bf16", lambda: contiguous(plans["bf16"])),
+        ("mixed", "paged", "bf16", lambda: paged(plans["bf16"])),
+        ("mixed", "paged", "int8", lambda: paged(plans["int8"])),
+        ("shared_prefix", "contiguous", "bf16", lambda: contiguous(plans["bf16"])),
+        ("shared_prefix", "paged", "bf16", lambda: paged(plans["bf16"])),
+    ]
+    rows = []
+    for scenario, name, kv, mk in cells:
+        import numpy as np
+
+        from repro.serve.engine import Request
+
+        eng = mk()
+        # Warm every executable on the SAME instance (jit caches live on the
+        # engine's jitted closures): prompts long enough to cross chunk and
+        # page boundaries, then drain so the engine returns to idle.  Warmup
+        # prompts are drawn from a disjoint seed so they never seed the
+        # prefix cache for the measured workload.
+        wrng = np.random.default_rng(10_001)
+        warm = [
+            Request(rid=-1 - i,
+                    prompt=wrng.integers(cfg.vocab // 2, cfg.vocab,
+                                         max_prompt - 1 - i).astype(np.int32),
+                    max_new_tokens=2)
+            for i in range(2)
+        ]
+        _drive(eng, warm)
+        eng.finished.clear()
+        for attr in ("n_decode_steps", "n_prefills", "n_prefill_chunks",
+                     "n_prefill_tokens", "n_prefix_hit_tokens", "n_cow_hits",
+                     "n_guard_copies", "n_preemptions"):
+            if hasattr(eng, attr):
+                setattr(eng, attr, 0)
+        reqs = _requests(cfg, scenario, n_req, max_prompt, max_new)
+        wall, ttfts = _drive(eng, reqs)
+        rows.append(_row(scenario, name, kv, eng, reqs, wall, ttfts, budget))
+    by = {(r["scenario"], r["engine"], r["kv"]): r for r in rows}
+    for r in rows:
+        if r["engine"] == "paged":
+            base = by.get((r["scenario"], "contiguous", "bf16"))
+            if base:
+                r["speedup_vs_contiguous"] = round(
+                    r["tokens_per_s"] / base["tokens_per_s"], 2
+                )
+    return {
+        "schema": SCHEMA,
+        "smoke": smoke,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "serve": rows,
+    }
+
+
+def validate(path: str) -> list[str]:
+    """Returns a list of problems; empty means the file is well-formed."""
+    if not os.path.exists(path):
+        return [f"{path}: missing"]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable/not JSON ({e})"]
+    probs = []
+    if doc.get("schema") != SCHEMA:
+        probs.append(f"schema != {SCHEMA}")
+    rows = doc.get("serve")
+    if not isinstance(rows, list) or not rows:
+        probs.append("serve: missing/empty")
+        return probs
+    for i, row in enumerate(rows):
+        missing = _SERVE_KEYS - set(row)
+        if missing:
+            probs.append(f"serve[{i}]: missing keys {sorted(missing)}")
+    engines = {r.get("engine") for r in rows}
+    if not {"contiguous", "paged"} <= engines:
+        probs.append("serve: needs both contiguous and paged rows")
+    return probs
+
+
+def run(csv):
+    """benchmarks/run.py entry point: measure, write BENCH_serve.json, and
+    mirror the headline numbers into the shared CSV.
+
+    Under BENCH_FAST=1 the smoke subset is measured and written to
+    ``BENCH_serve_smoke.json`` instead — the committed full trajectory
+    must only ever be overwritten by full-budget runs.
+    """
+    smoke = os.environ.get("BENCH_FAST", "0") == "1"
+    doc = collect(smoke=smoke)
+    name = "BENCH_serve_smoke.json" if smoke else "BENCH_serve.json"
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", name)
+    with open(os.path.normpath(out), "w") as f:
+        json.dump(doc, f, indent=1)
+    for row in doc["serve"]:
+        csv.add(
+            f"serve_{row['scenario']}_{row['engine']}_{row['kv']}",
+            us=round(1e6 / max(row["tokens_per_s"], 1e-9), 1),
+            tokens_per_s=row["tokens_per_s"],
+            ttft_ms=row["ttft_mean_ms"],
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="seconds-scale subset")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--validate", metavar="PATH", help="check an existing file")
+    args = ap.parse_args()
+    if args.validate:
+        probs = validate(args.validate)
+        for pr in probs:
+            print(f"INVALID: {pr}", file=sys.stderr)
+        print(f"{args.validate}: {'FAIL' if probs else 'ok'}")
+        sys.exit(1 if probs else 0)
+    doc = collect(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    for row in doc["serve"]:
+        extra = (
+            f" ({row['speedup_vs_contiguous']}x vs contiguous)"
+            if "speedup_vs_contiguous" in row
+            else ""
+        )
+        print(
+            f"{row['scenario']:>14} {row['engine']:>10} {row['kv']}: "
+            f"{row['tokens_per_s']} tok/s, ttft {row['ttft_mean_ms']}ms "
+            f"(p90 {row['ttft_p90_ms']}ms), prefill {row['prefill_tokens']} tok, "
+            f"prefix-hit {row['prefix_hit_tokens']}{extra}"
+        )
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    main()

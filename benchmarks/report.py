@@ -1,5 +1,7 @@
-"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
-dryrun_results JSONs.
+"""Render benchmark artifacts as markdown: the EXPERIMENTS.md §Dry-run /
+§Roofline tables from the dryrun_results JSONs, plus the committed perf
+trajectories ``BENCH_solver.json`` (CD/outlier engines + serving GEMM) and
+``BENCH_serve.json`` (paged vs contiguous serving).
 
     PYTHONPATH=src python -m benchmarks.report [--dir benchmarks/dryrun_results]
 """
@@ -107,9 +109,66 @@ def dryrun_table(cells, mesh_name):
     return "\n".join(lines)
 
 
+def _load_json(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def solver_bench_table(doc):
+    lines = [
+        f"### BENCH_solver (schema {doc.get('schema')}, backend {doc.get('backend')})",
+        "",
+        "| section | shape | fused us/iter | vs legacy+obj | vs legacy |",
+        "|---|---|---|---|---|",
+    ]
+    for row in doc.get("cd", []):
+        lines.append(
+            f"| cd | {row['q']}×{row['p']} | {row['fused_us_per_iter']} "
+            f"| {row['speedup_fused_vs_legacy_obj']}x | {row['speedup_fused_vs_legacy']}x |"
+        )
+    for row in doc.get("outlier", []):
+        kind = "outlier/struct" if row["structured"] else "outlier/unstruct"
+        lines.append(
+            f"| {kind} | {row['q']}×{row['p']} | {row['fused_us_per_iter']} "
+            f"| {row['speedup_fused_vs_legacy_obj']}x | {row['speedup_fused_vs_legacy']}x |"
+        )
+    lines += ["", "| GEMM variant | m×q×p | us | weight-GB/s |", "|---|---|---|---|"]
+    for row in doc.get("serve_gemm", []):
+        lines.append(
+            f"| {row['variant']} | {row['m']}×{row['q']}×{row['p']} "
+            f"| {row['us']} | {row['weight_gbps']} |"
+        )
+    return "\n".join(lines)
+
+
+def serve_bench_table(doc):
+    lines = [
+        f"### BENCH_serve (schema {doc.get('schema')}, backend {doc.get('backend')})",
+        "",
+        "| scenario | engine | kv | batch | tok/s | speedup | ttft mean | ttft p90 | prefix-hit tok | preempt |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for row in doc.get("serve", []):
+        sp = row.get("speedup_vs_contiguous")
+        lines.append(
+            "| {sc} | {en} | {kv} | {mb} | {t} | {sp} | {tm}ms | {tp}ms | {ph} | {pe} |".format(
+                sc=row["scenario"], en=row["engine"], kv=row["kv"],
+                mb=row["max_batch"], t=row["tokens_per_s"],
+                sp=f"{sp}x" if sp else "—", tm=row["ttft_mean_ms"],
+                tp=row["ttft_p90_ms"], ph=row["prefix_hit_tokens"],
+                pe=row["preemptions"],
+            )
+        )
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="benchmarks/dryrun_results")
+    ap.add_argument("--bench-dir", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."))
     args = ap.parse_args()
     for mesh in ("single", "multi"):
         cells = load(os.path.join(args.dir, mesh))
@@ -119,6 +178,14 @@ def main():
         print()
         print(roofline_table(cells, mesh))
         print()
+    for name, render in (
+        ("BENCH_solver.json", solver_bench_table),
+        ("BENCH_serve.json", serve_bench_table),
+    ):
+        doc = _load_json(os.path.normpath(os.path.join(args.bench_dir, name)))
+        if doc is not None:
+            print(render(doc))
+            print()
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ def main() -> None:
     from benchmarks.common import Csv
 
     from benchmarks import (
+        bench_serve,
         bench_solver,
         fig2_layer_error,
         fig3_iterations,
@@ -27,7 +28,7 @@ def main() -> None:
 
     fast = os.environ.get("BENCH_FAST", "0") == "1"
     modules = [table123_perplexity, fig2_layer_error, table4_outliers,
-               table5_extreme, runtime, bench_solver]
+               table5_extreme, runtime, bench_solver, bench_serve]
     if not fast:
         modules.insert(2, fig3_iterations)
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.quantease_cd import (
     quantease_block_sweep_pallas,
     quantease_fused_iteration_pallas,
@@ -30,6 +31,8 @@ __all__ = [
     "fused_iteration_tq",
     "outlier_iteration_tq",
     "dequant_matmul",
+    "paged_attention",
+    "paged_attention_fits_vmem",
     "on_tpu",
 ]
 
@@ -237,6 +240,76 @@ def quantease_outlier_iteration_t(
         bsz=bsz,
         tq=tq,
         matmul_dtype=matmul_dtype,
+        interpret=interpret,
+    )
+
+
+def paged_attention_fits_vmem(
+    page_size: int, kvp: int, g: int, hd: int, *,
+    kv_bytes: int = 2, quantized: bool = False,
+) -> bool:
+    """VMEM fit gate for the paged-attention kernel.
+
+    Resident per program: the double-buffered k/v page blocks (the only
+    term that scales with ``page_size``), their fp32 scale planes when the
+    pages are int8, and the fixed per-sequence set (query tile, fp32
+    softmax accumulators, output tile).  Same 12 MB budget/headroom policy
+    as :func:`fused_iteration_tq`; a non-fit must take the XLA gather
+    fallback — there is no smaller tile to retry, pages are the tile.
+    """
+    pages = 2 * 2 * page_size * kvp * hd * kv_bytes  # k+v, double-buffered
+    if quantized:
+        pages += 2 * 2 * page_size * kvp * 4
+    fixed = kvp * g * hd * 4 * 3 + kvp * g * 4 * 2  # q + acc + out, m + l
+    budget = 12 * 1024 * 1024
+    return pages + fixed <= budget
+
+
+def paged_attention(
+    q, k_pages, v_pages, page_table, lengths, *,
+    window=None, attn_softcap=None,
+    k_scale_pages=None, v_scale_pages=None, interpret=None,
+):
+    """Paged decode attention (serving hot path).
+
+    Dispatch mirrors :func:`dequant_matmul`: Mosaic kernel on TPU when the
+    page block fits VMEM (:func:`paged_attention_fits_vmem`); the XLA
+    gather-based reference elsewhere.  Pallas *interpret* mode is reserved
+    for kernel tests (``interpret=True``) and never reaches lowered
+    production graphs.
+
+    int8 pages **must** arrive with both scale planes — they are either
+    folded in-kernel or consumed explicitly by the reference; raw int8
+    codes are never forwarded un-decoded (the grouped-dispatch audit that
+    fixed ``dequant_matmul`` applies here from day one).
+    """
+    quantized = k_scale_pages is not None
+    if (v_scale_pages is None) != (k_scale_pages is None):
+        raise ValueError("k_scale_pages and v_scale_pages must be passed together")
+    if k_pages.dtype == jnp.int8 and not quantized:
+        raise ValueError("int8 KV pages require scale planes (dequant-in-kernel)")
+
+    def reference():
+        return ref.paged_attention_ref(
+            q, k_pages, v_pages, page_table, lengths,
+            window=window, attn_softcap=attn_softcap,
+            k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        )
+
+    if interpret is None:
+        if not on_tpu():
+            return reference()
+        interpret = False
+    psz = k_pages.shape[1]
+    _, kvp, g, hd = q.shape
+    if not paged_attention_fits_vmem(
+        psz, kvp, g, hd, kv_bytes=k_pages.dtype.itemsize, quantized=quantized
+    ):
+        return reference()
+    return paged_attention_pallas(
+        q, k_pages, v_pages, page_table, lengths,
+        window=window, attn_softcap=attn_softcap,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
         interpret=interpret,
     )
 

@@ -7,6 +7,8 @@ tests/test_kernels.py.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -14,6 +16,7 @@ __all__ = [
     "quantease_block_sweep_ref",
     "quantease_outlier_iteration_ref",
     "dequant_matmul_ref",
+    "paged_attention_ref",
     "gram_ref",
 ]
 
@@ -123,6 +126,45 @@ def dequant_matmul_ref(
     idx = jnp.arange(p) // gsz
     w = (codes.astype(jnp.float32) - zero[:, idx]) * scale[:, idx]
     return (x.astype(jnp.float32) @ w.T).astype(out_dtype)
+
+
+def paged_attention_ref(
+    q: jax.Array,  # (B, KVp, G, hd) — one decode token per sequence
+    k_pages: jax.Array,  # (n_pages, psz, KVp, hd) bf16/f32 or int8
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, n_pgs) int32 — padded entries → null page
+    lengths: jax.Array,  # (B,) int32 — valid tokens per sequence
+    *,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    k_scale_pages: Optional[jax.Array] = None,  # (n_pages, psz, KVp, 1) f32
+    v_scale_pages: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Paged decode attention oracle — and the XLA production fallback.
+
+    Gathers each sequence's pages into position order (``page_table`` rows
+    are position-ordered, so the gathered axis *is* the token axis) and
+    delegates to :func:`repro.models.common.decode_attention` — a paged
+    read over the same KV values is bit-identical to the contiguous read
+    *by construction*, which is what makes the engine-level token-identity
+    contract hold.  int8 pages are consumed with their scale planes; raw
+    codes never enter the dots un-decoded.
+    """
+    from repro.models.common import decode_attention  # the shared semantics
+
+    B, KVp, G, hd = q.shape
+    psz = k_pages.shape[1]
+    S = page_table.shape[1] * psz
+    k = k_pages[page_table].reshape(B, S, KVp, hd)
+    v = v_pages[page_table].reshape(B, S, KVp, hd)
+    ks = vs = None
+    if k_scale_pages is not None:
+        ks = k_scale_pages[page_table].reshape(B, S, KVp, 1)
+        vs = v_scale_pages[page_table].reshape(B, S, KVp, 1)
+    return decode_attention(
+        q[:, None], k, v, lengths,
+        window=window, attn_softcap=attn_softcap, k_scale=ks, v_scale=vs,
+    )[:, 0]
 
 
 def gram_ref(x: jax.Array) -> jax.Array:

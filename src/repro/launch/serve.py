@@ -1,7 +1,12 @@
 """Serving launcher: load a (quantized) checkpoint and serve batched requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm_12b --reduce \
-        --ckpt-dir /tmp/repro_quant --requests 8
+        --ckpt-dir /tmp/repro_quant --requests 8 --engine paged
+
+``--engine paged`` (default for self-attention decoder archs) serves from
+the paged-KV engine — shared page pool, chunked prefill, prefix caching;
+``--engine contiguous`` keeps the per-slot max_seq reservation baseline
+(and is the only choice for enc-dec / SSM-hybrid archs).
 """
 
 import argparse
@@ -18,6 +23,12 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--engine", choices=["paged", "contiguous"], default="paged")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="KV pool size in pages (0 = ample: no preemption)")
+    ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8"], default="bf16")
     args = ap.parse_args()
 
     import jax
@@ -28,12 +39,12 @@ def main():
     from repro.dist import checkpoint as ckpt
     from repro.launch.train import reduced
     from repro.models import make_plan, param_shapes
-    from repro.serve.engine import Request, ServingEngine
+    from repro.serve.engine import PagedServingEngine, Request, ServingEngine
 
     cfg = get_config(args.arch)
     if args.reduce:
         cfg = reduced(cfg)
-    plan = make_plan(cfg, 1)
+    plan = make_plan(cfg, 1, kv_cache_dtype=args.kv_dtype)
     like = {"params": jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), param_shapes(plan))}
     try:
         state, manifest = ckpt.load_checkpoint(args.ckpt_dir, like)
@@ -46,15 +57,37 @@ def main():
         params = init_params(plan, jax.random.PRNGKey(0))
 
     rng = np.random.default_rng(0)
-    eng = ServingEngine(plan, params, max_batch=args.max_batch, max_seq=512)
+    if args.engine == "paged":
+        try:  # probe arch support only — config errors must still surface
+            from repro.models import paged_cache_shapes
+
+            paged_cache_shapes(plan, 2, args.page_size)
+        except ValueError as e:  # enc-dec / SSM-hybrid / prefix archs
+            print(f"paged engine unavailable for {args.arch} ({e}); "
+                  "falling back to the contiguous engine")
+            args.engine = "contiguous"
+    if args.engine == "paged":
+        eng = PagedServingEngine(
+            plan, params, max_batch=args.max_batch, max_seq=512,
+            page_size=args.page_size, n_pages=args.n_pages or None,
+            prefill_chunk=args.prefill_chunk,
+        )
+    else:
+        eng = ServingEngine(plan, params, max_batch=args.max_batch, max_seq=512)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, rng.integers(4, 32)).astype(np.int32)
         eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
     finished = eng.run()
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"req{r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
-    print(f"{len(finished)} requests, {eng.n_decode_steps} decode steps, "
-          f"{eng.n_prefills} prefills")
+    if args.engine == "paged":
+        print(f"{len(finished)} requests, {eng.n_decode_steps} decode steps, "
+              f"{eng.n_prefill_chunks} prefill chunks "
+              f"({eng.n_prefix_hit_tokens} prefix-cached tokens, "
+              f"{eng.n_preemptions} preemptions)")
+    else:
+        print(f"{len(finished)} requests, {eng.n_decode_steps} decode steps, "
+              f"{eng.n_prefills} prefills")
 
 
 if __name__ == "__main__":

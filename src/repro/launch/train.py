@@ -68,7 +68,9 @@ def main():
         ),
     )
     out = trainer.run()
-    print(f"final loss: {out['final_loss']:.4f}  recoveries: {out['recoveries']}")
+    loss = out["final_loss"]  # None when steps < the metrics-log interval
+    print(f"final loss: {'n/a' if loss is None else f'{loss:.4f}'}  "
+          f"recoveries: {out['recoveries']}")
     for m in out["log"]:
         print(m)
 

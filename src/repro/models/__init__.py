@@ -12,6 +12,10 @@ from repro.models.model import (
     train_loss,
     prefill,
     decode_step,
+    paged_cache_shapes,
+    init_paged_cache,
+    paged_prefill_chunk,
+    paged_decode_step,
 )
 
 __all__ = [
@@ -26,4 +30,8 @@ __all__ = [
     "train_loss",
     "prefill",
     "decode_step",
+    "paged_cache_shapes",
+    "init_paged_cache",
+    "paged_prefill_chunk",
+    "paged_decode_step",
 ]

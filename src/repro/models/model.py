@@ -58,6 +58,10 @@ __all__ = [
     "train_loss",
     "prefill",
     "decode_step",
+    "paged_cache_shapes",
+    "init_paged_cache",
+    "paged_prefill_chunk",
+    "paged_decode_step",
 ]
 
 
@@ -344,8 +348,18 @@ def _attn_sublayer(
     enc_out=None,
     decode_pos=None,
     kv_dtype: str = "bf16",
+    page_table=None,
+    page_write=None,
 ):
-    """Self-attention (+ optional cross) sublayer.  Returns (x, new_cache)."""
+    """Self-attention (+ optional cross) sublayer.  Returns (x, new_cache).
+
+    With ``page_table`` set the KV cache is block-paged (DESIGN.md
+    §Paged-serving): decode writes the new token into
+    ``(page_write, pos % page_size)`` and attends through
+    ``ops.paged_attention``; prefill scatter-writes the chunk into its
+    pages and attends the gathered context with ``flash_attention`` at
+    ``q_offset = pos_ids[0]`` (chunked prefill).
+    """
     h = apply_norm(p["ln"], x, cfg.norm)
     q, k, v = _qkv(cfg, hp, p, h)
     if cfg.pos == "rope":
@@ -356,6 +370,77 @@ def _attn_sublayer(
     v = logical_constraint(v, ("batch", None, "heads", None))
 
     new_cache = {}
+    if page_table is not None:
+        if b.cross:
+            raise ValueError("paged KV serving does not support cross-attention")
+        from repro.kernels import ops as kops
+
+        kc, vc = cache["k"], cache["v"]  # (n_pages, psz, KVp, hd)
+        psz = kc.shape[1]
+        if mode == "decode":
+            B = q.shape[0]
+            pos_b = jnp.broadcast_to(jnp.asarray(decode_pos, jnp.int32), (B,))
+            slot = pos_b % psz
+            if kv_dtype == "int8":
+                k8, ks_new = _kv_quantize(k[:, 0])
+                v8, vs_new = _kv_quantize(v[:, 0])
+                kc = kc.at[page_write, slot].set(k8)
+                vc = vc.at[page_write, slot].set(v8)
+                ksc = cache["ks"].at[page_write, slot].set(ks_new)
+                vsc = cache["vs"].at[page_write, slot].set(vs_new)
+                new_cache = {"k": kc, "v": vc, "ks": ksc, "vs": vsc}
+                ksp, vsp = ksc, vsc
+            else:
+                kc = kc.at[page_write, slot].set(k[:, 0].astype(kc.dtype))
+                vc = vc.at[page_write, slot].set(v[:, 0].astype(vc.dtype))
+                new_cache = {"k": kc, "v": vc}
+                ksp = vsp = None
+            o = kops.paged_attention(
+                q[:, 0], kc, vc, page_table, pos_b + 1,
+                window=b.window, attn_softcap=cfg.attn_softcap,
+                k_scale_pages=ksp, v_scale_pages=vsp,
+            )[:, None]
+        else:  # chunked paged prefill, one sequence at a time (B == 1)
+            S = k.shape[1]
+            pos = jnp.asarray(pos_ids, jnp.int32).reshape(-1)  # (S,) absolute
+            row = page_table[0]  # (n_pgs,)
+            # Pad positions beyond the table must hit the null page (page 0)
+            # explicitly — the default gather clamp would alias them onto the
+            # last real page and clobber valid prompt KV.
+            pg = pos // psz
+            pidx = jnp.where(
+                pg < row.shape[0], row[jnp.minimum(pg, row.shape[0] - 1)], 0
+            )
+            slot = pos % psz
+            if kv_dtype == "int8":
+                k8, ks_new = _kv_quantize(k[0])
+                v8, vs_new = _kv_quantize(v[0])
+                kc = kc.at[pidx, slot].set(k8)
+                vc = vc.at[pidx, slot].set(v8)
+                ksc = cache["ks"].at[pidx, slot].set(ks_new)
+                vsc = cache["vs"].at[pidx, slot].set(vs_new)
+                new_cache = {"k": kc, "v": vc, "ks": ksc, "vs": vsc}
+            else:
+                kc = kc.at[pidx, slot].set(k[0].astype(kc.dtype))
+                vc = vc.at[pidx, slot].set(v[0].astype(vc.dtype))
+                new_cache = {"k": kc, "v": vc}
+            n_ctx = row.shape[0] * psz
+            kctx = kc[row].reshape(1, n_ctx, *kc.shape[2:])
+            vctx = vc[row].reshape(1, n_ctx, *vc.shape[2:])
+            if kv_dtype == "int8":
+                ksg = new_cache["ks"][row].reshape(1, n_ctx, -1, 1)
+                vsg = new_cache["vs"][row].reshape(1, n_ctx, -1, 1)
+                kctx = (kctx.astype(jnp.float32) * ksg).astype(q.dtype)
+                vctx = (vctx.astype(jnp.float32) * vsg).astype(q.dtype)
+            o = flash_attention(
+                q, kctx, vctx,
+                causal=True, window=b.window, attn_softcap=cfg.attn_softcap,
+                q_offset=pos[0],
+            )
+        out = _apply_out_proj(p["wo"], o, name="wo")
+        if cfg.post_norms:
+            out = apply_norm(p["post_ln"], out, cfg.norm)
+        return x + out, new_cache
     if mode == "decode":
         kc, vc = cache["k"], cache["v"]
         B = kc.shape[0]
@@ -494,12 +579,14 @@ def _mlp_sublayer(cfg, b: BlockDef, p, x, aux, dispatch_groups=1):
 
 
 def _block_apply(cfg, hp, b, p, x, *, mode, pos_ids, cache=None, enc_out=None,
-                 decode_pos=None, aux=None, kv_dtype="bf16", dispatch_groups=1):
+                 decode_pos=None, aux=None, kv_dtype="bf16", dispatch_groups=1,
+                 page_table=None, page_write=None):
     if b.kind == "attn":
         x, new_cache = _attn_sublayer(
             cfg, hp, b, p, x,
             pos_ids=pos_ids, mode=mode, cache=cache, enc_out=enc_out,
             decode_pos=decode_pos, kv_dtype=kv_dtype,
+            page_table=page_table, page_write=page_write,
         )
     else:
         h = apply_norm(p["ln"], x, cfg.norm)
@@ -532,8 +619,12 @@ def _run_stack(
     decode_pos=None,
     aux=None,
     remat: bool = True,
+    page_table=None,
+    page_write=None,
 ):
-    """Scan over periods.  caches: pytree stacked on leading period axis."""
+    """Scan over periods.  caches: pytree stacked on leading period axis.
+    ``page_table``/``page_write`` (shared across periods) switch attention
+    layers to the paged KV path."""
     cfg, hp = plan.cfg, plan.heads
     have_aux = aux is not None
 
@@ -550,6 +641,7 @@ def _run_stack(
                 mode=mode, pos_ids=pos_ids, cache=c_i, enc_out=enc_out,
                 decode_pos=decode_pos, aux=aux, kv_dtype=plan.kv_cache_dtype,
                 dispatch_groups=plan.dispatch_groups,
+                page_table=page_table, page_write=page_write,
             )
             new_caches[f"b{i}"] = nc
         return (x, aux), new_caches
@@ -802,6 +894,50 @@ def init_cache(plan: ModelPlan, B: int, cap: int):
     )
 
 
+def paged_cache_shapes(plan: ModelPlan, n_pages: int, page_size: int):
+    """ShapeDtypeStruct pytree of the block-paged decode cache.
+
+    Per attention layer: ``k``/``v`` pages ``(n_pages, page_size, KVp, hd)``
+    (int8 adds fp32 ``ks``/``vs`` scale planes) with a leading period axis,
+    exactly like :func:`cache_shapes` — page id ``p`` addresses slot ``p``
+    of every layer's array, so page accounting is in shared token slots.
+    There is no batch axis: the pool is shared by all sequences; ownership
+    lives in the page tables (serve/kv_cache.py).  Windowed layers keep
+    full pages and mask in attention (no ring buffer).  Only
+    self-attention decoder stacks page — cross-attention and Mamba state
+    stay on the contiguous engine.
+    """
+    cfg, hp = plan.cfg, plan.heads
+    for b in cfg.pattern:
+        if b.kind != "attn" or b.cross:
+            raise ValueError(
+                "paged KV serving supports self-attention decoder stacks only"
+            )
+    if cfg.family == "encdec" or cfg.n_prefix:
+        raise ValueError("paged KV serving: decoder-only models only")
+    kdt = jnp.int8 if plan.kv_cache_dtype == "int8" else jnp.bfloat16
+    page = jax.ShapeDtypeStruct(
+        (n_pages, page_size, hp.kv_pad, hp.head_dim), kdt
+    )
+    sh = {"k": page, "v": page}
+    if plan.kv_cache_dtype == "int8":
+        sp = jax.ShapeDtypeStruct((n_pages, page_size, hp.kv_pad, 1), jnp.float32)
+        sh["ks"] = sp
+        sh["vs"] = sp
+
+    def stack(sds):
+        return jax.ShapeDtypeStruct((cfg.n_periods, *sds.shape), sds.dtype)
+
+    return {f"b{i}": jax.tree.map(stack, sh) for i in range(len(cfg.pattern))}
+
+
+def init_paged_cache(plan: ModelPlan, n_pages: int, page_size: int):
+    return jax.tree.map(
+        lambda sds: jnp.zeros(sds.shape, sds.dtype),
+        paged_cache_shapes(plan, n_pages, page_size),
+    )
+
+
 def prefill(plan: ModelPlan, params, batch: dict, cache):
     """Full-sequence forward filling `cache`; returns (last_logits, cache)."""
     cfg = plan.cfg
@@ -843,6 +979,73 @@ def decode_step(plan: ModelPlan, params, tokens: jax.Array, cache, pos):
     x, new_cache, _ = _run_stack(
         plan, params["dec"], cfg.pattern, x,
         mode="decode", pos_ids=pos_ids, caches=cache, decode_pos=pos,
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _head_logits(x, _logit_head(plan, params))[:, 0]
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, new_cache
+
+
+def paged_prefill_chunk(
+    plan: ModelPlan, params, tokens: jax.Array, cache, page_table, offset
+):
+    """One chunked-prefill step for a single sequence (DESIGN.md
+    §Paged-serving).
+
+    ``tokens``: (1, C) — chunk ``[offset, offset + C)`` of the prompt
+    (right-padded; pad positions scatter into the null page or into
+    not-yet-valid slots that decode overwrites before they enter any
+    length mask, so no masking of the writes is needed).  ``page_table``:
+    (1, n_pgs) — the sequence's page row; ``offset``: traced scalar, the
+    absolute position of ``tokens[:, 0]``.  Writes the chunk's KV into its
+    pages and attends queries against the gathered context
+    ``[0, offset + C)``, so long prompts stream through in O(C) steps
+    without ever holding a contiguous cache.  Returns the updated cache
+    (no logits — the engine replays the last prompt token as the first
+    decode, exactly like the contiguous engine).
+    """
+    cfg = plan.cfg
+    B, S = tokens.shape
+    if B != 1:
+        raise ValueError("paged prefill processes one sequence per call")
+    x = _embed_tokens(plan, params, tokens)
+    pos = jnp.asarray(offset, jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_emb"], pos, axis=0)[None].astype(plan.dtype)
+    _, new_cache, _ = _run_stack(
+        plan, params["dec"], cfg.pattern, x,
+        mode="prefill", pos_ids=pos, caches=cache, page_table=page_table,
+    )
+    return new_cache
+
+
+def paged_decode_step(
+    plan: ModelPlan, params, tokens: jax.Array, cache, pos, page_table,
+    page_write,
+):
+    """One decode step over the paged KV pool.
+
+    ``tokens``: (B, 1); ``pos``: (B,) int32 positions; ``page_table``:
+    (B, n_pgs) int32 (padded entries → null page); ``page_write``: (B,)
+    int32 — the page holding position ``pos[b]`` (the host scheduler knows
+    the page tables, so the write target arrives precomputed; inactive
+    lanes point at the null page).  Writes each lane's new KV into
+    ``(page_write, pos % page_size)`` and attends via
+    ``ops.paged_attention`` with per-lane lengths ``pos + 1``.
+    """
+    cfg = plan.cfg
+    B = tokens.shape[0]
+    x = _embed_tokens(plan, params, tokens)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    pos_ids = pos_b[:, None]  # (B, 1)
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_emb"], pos_b, axis=0)[:, None].astype(
+            plan.dtype
+        )
+    x, new_cache, _ = _run_stack(
+        plan, params["dec"], cfg.pattern, x,
+        mode="decode", pos_ids=pos_ids, caches=cache, decode_pos=pos,
+        page_table=page_table, page_write=page_write,
     )
     x = apply_norm(params["final_norm"], x, cfg.norm)
     logits = _head_logits(x, _logit_head(plan, params))[:, 0]

@@ -1,1 +1,23 @@
-"""Quantized serving: params, engine, batched requests."""
+"""Quantized serving: engines, paged KV pool, quantized param trees.
+
+The deployment side of the reproduction (DESIGN.md §Paged-serving): the PTQ
+artifact produced by ``core/solver.py emit="qt"`` serves through
+
+* :class:`~repro.serve.engine.PagedServingEngine` — the production engine:
+  shared fixed-size KV page pool (:mod:`repro.serve.kv_cache`), chunked
+  prefill interleaved with continuous-batching decode, hash-chain prefix
+  cache with copy-on-write, preemption-by-eviction, and the Pallas
+  paged-attention decode kernel on TPU (bf16 or int8 pages, dequant
+  in-kernel),
+* :class:`~repro.serve.engine.ServingEngine` — the contiguous per-slot
+  baseline, kept as the paged engine's numerical oracle and benchmark
+  baseline (benchmarks/bench_serve.py),
+* :mod:`repro.serve.qparams` — QuantizedTensor parameter trees + logical
+  axes for the quantized serving footprint (dry-run memory accounting and
+  Megatron-compatible sharding of the codes matrices).
+"""
+
+from repro.serve.engine import PagedServingEngine, Request, ServingEngine
+from repro.serve.kv_cache import PagePool
+
+__all__ = ["PagedServingEngine", "Request", "ServingEngine", "PagePool"]

@@ -1,21 +1,29 @@
-"""Batched serving engine for quantized models (continuous batching).
+"""Batched serving engines for quantized models (continuous batching).
 
-Request lifecycle (vLLM-style, sized to this framework's scope):
+Two engines share the :class:`Request` lifecycle (submit → waiting queue →
+prefill → shared batched decode with per-slot positions → finished) and the
+greedy sampler; weights may be dense bf16 or QuantizedTensor (the PTQ
+artifact) — both engines are agnostic, and the Pallas dequant-GEMM engages
+on TPU.
 
-  submit → waiting queue → (padded) prefill into a free slot → shared
-  batched decode steps with **per-slot positions** → finished
+:class:`ServingEngine` — the **contiguous** baseline: every slot reserves
+``max_seq`` KV memory up front, prompts prefill in one padded shot into a
+per-slot cache.  Kept as the numerical oracle (the paged engine must match
+it token-for-token on bf16 KV) and as the benchmark baseline
+(benchmarks/bench_serve.py).
 
-Up to ``max_batch`` sequences share one jitted decode executable; finished
-slots are refilled from the queue between steps (continuous batching — the
-decode step takes a (B,) position vector, so slots at different depths
-coexist).  Prefills are right-padded to ``prefill_pad`` buckets so one
-prefill executable serves all prompt lengths; the prompt's *last real
-token* is replayed as the first decode so padding never pollutes the
-distribution (pad positions remain invalid: each slot's validity mask is
-its own position).
-
-Weights may be dense bf16 or QuantizedTensor (the PTQ artifact) — the
-engine is agnostic; the Pallas dequant-GEMM engages on TPU.
+:class:`PagedServingEngine` — the production path (DESIGN.md
+§Paged-serving): KV lives in a shared pool of fixed-size pages
+(serve/kv_cache.py), admission is gated by free *pages* instead of free
+slots, prompts stream in **chunked prefills** interleaved with decode steps
+(long prompts never stall the running batch), matching prompt prefixes
+share pages (hash-chain prefix cache + copy-on-write partial hits), and
+when the pool runs dry the newest sequence is **preempted** — its pages
+freed, the request requeued, and later resumed by deterministic
+re-prefill of prompt + already-generated tokens (greedy decode makes the
+final output identical to an uninterrupted run).  Decode attends through
+``ops.paged_attention`` — the Pallas paged kernel on TPU, the XLA gather
+fallback elsewhere.
 """
 
 from __future__ import annotations
@@ -27,10 +35,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_cache, prefill
+from repro.models import (
+    decode_step,
+    init_cache,
+    init_paged_cache,
+    paged_decode_step,
+    paged_prefill_chunk,
+    prefill,
+)
 from repro.models.model import ModelPlan
+from repro.serve.kv_cache import NULL_PAGE, PagePool
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "PagedServingEngine"]
 
 
 @dataclasses.dataclass
@@ -43,6 +59,15 @@ class Request:
 
 
 class ServingEngine:
+    """Contiguous-slot engine: per-slot ``max_seq`` KV reservation.
+
+    Prefills are right-padded to ``prefill_pad`` buckets so one prefill
+    executable serves all prompt lengths; the prompt's *last real token*
+    is replayed as the first decode so padding never pollutes the
+    distribution (pad positions remain invalid: each slot's validity mask
+    is its own position).
+    """
+
     def __init__(
         self,
         plan: ModelPlan,
@@ -69,6 +94,7 @@ class ServingEngine:
         self._prefill = jax.jit(lambda p, b, c: prefill(plan, p, b, c))
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.n_prefill_tokens = 0  # real prompt tokens (pad excluded)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -89,6 +115,7 @@ class ServingEngine:
                 self.params, {"tokens": jnp.asarray(toks)}, tmp_cache
             )
             self.n_prefills += 1
+            self.n_prefill_tokens += n
             self.cache = jax.tree.map(
                 lambda big, one: jax.lax.dynamic_update_slice(
                     big, one.astype(big.dtype), (0, slot) + (0,) * (big.ndim - 2)
@@ -113,6 +140,7 @@ class ServingEngine:
 
     def step(self) -> bool:
         self._admit()
+        self._retire()  # max_new_tokens == 0 finishes without a decode
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return False
@@ -133,6 +161,345 @@ class ServingEngine:
     def run(self, max_steps: int = 10_000):
         steps = 0
         while (self.queue or any(r is not None for r in self.slot_req)) and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return self.finished
+
+
+@dataclasses.dataclass
+class _Seq:
+    """Per-lane scheduler state of the paged engine."""
+
+    req: Request
+    tokens: list  # prompt + generated so far (resume recomputes from this)
+    pages: list  # position-ordered page ids
+    n_prefilled: int  # positions [0, n_prefilled) hold valid KV
+    n_target: int  # == len(tokens) at admission; prefill ends here
+    hashed_upto: int = 0  # pages registered into the prefix cache so far
+    order: int = 0  # admission order (preemption picks the newest)
+
+
+class PagedServingEngine:
+    """Paged-KV engine: shared page pool, chunked prefill, prefix cache,
+    preemption-by-eviction.  See the module docstring for the scheduler
+    contract; on bf16 KV its outputs are token-identical to
+    :class:`ServingEngine` (asserted in tests/test_paged_serve.py)."""
+
+    def __init__(
+        self,
+        plan: ModelPlan,
+        params,
+        *,
+        max_batch: int = 8,
+        max_seq: int = 512,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        prefill_chunk: int = 64,
+        prefix_cache: bool = True,
+        record_logits: bool = False,
+    ):
+        self.plan = plan
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_per_seq = -(-max_seq // page_size)
+        if n_pages is None:
+            n_pages = 1 + max_batch * self.pages_per_seq  # ample: no preemption
+        self.n_pages = n_pages
+        self.prefill_chunk = prefill_chunk
+        self.prefix_cache = prefix_cache
+        self.record_logits = record_logits
+
+        self.cache = init_paged_cache(plan, n_pages, page_size)
+        self.pool = PagePool(n_pages, page_size)
+        self.table = np.full((max_batch, self.pages_per_seq), NULL_PAGE, np.int32)
+        self._dev_table = None  # rebuilt lazily when self.table changes
+        self.lanes: list[Optional[_Seq]] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.slot_pos = np.zeros(max_batch, np.int64)
+        self._last_tok = np.zeros((max_batch, 1), np.int32)
+        self._admitted = 0
+        self.logit_trace: dict[int, list] = {}
+
+        # The page pool is donated (same policy as launch/specs.py serve
+        # specs): each step updates the pool in place instead of allocating
+        # and copying a second full pool — self.cache is always reassigned
+        # from the result, so the consumed buffer is never reused.
+        self._decode = jax.jit(
+            lambda p, t, c, pos, pt, pw: paged_decode_step(plan, p, t, c, pos, pt, pw),
+            donate_argnums=(2,),
+        )
+        self._chunk = jax.jit(
+            lambda p, t, c, pt, off: paged_prefill_chunk(plan, p, t, c, pt, off),
+            donate_argnums=(2,),
+        )
+        # COW page copy: every leaf is (n_periods, n_pages, ...).
+        self._copy_page = jax.jit(
+            lambda c, s, d: jax.tree.map(lambda a: a.at[:, d].set(a[:, s]), c),
+            donate_argnums=(0,),
+        )
+
+        self.n_decode_steps = 0
+        self.n_prefill_chunks = 0
+        self.n_prefill_tokens = 0
+        self.n_prefix_hit_tokens = 0
+        self.n_cow_hits = 0
+        self.n_guard_copies = 0  # replay-target copies off registered pages
+        self.n_preemptions = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        need = -(-(len(req.prompt) + req.max_new_tokens) // self.page_size)
+        if need > self.n_pages - 1 or len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.rid} cannot fit: needs {need} pages / "
+                f"{len(req.prompt) + req.max_new_tokens} positions"
+            )
+        req.output = []
+        self.queue.append(req)
+
+    def _dev_table_now(self):
+        if self._dev_table is None:
+            self._dev_table = jnp.asarray(self.table)
+        return self._dev_table
+
+    def _set_row(self, lane: int, pages: list):
+        self.table[lane] = NULL_PAGE
+        self.table[lane, : len(pages)] = pages
+        self._dev_table = None
+
+    # -- admission ------------------------------------------------------
+    def _admit(self):
+        for lane in range(self.max_batch):
+            if self.lanes[lane] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            if req.max_new_tokens <= 0:  # nothing to generate: skip the pool
+                self.queue.pop(0)
+                req.done = True
+                self.finished.append(req)
+                continue
+            toks = list(map(int, req.prompt)) + list(req.output)
+            T = len(toks)
+            tt = tuple(toks)
+            pages, n_cached, cow_src = [], 0, None
+            if self.prefix_cache:
+                pages, n_cached = self.pool.match_full(tt)
+                cow_src = self.pool.match_partial(tt, n_cached)
+            need = -(-T // self.page_size) - len(pages)
+            fresh = self.pool.alloc(need)
+            if fresh is None:  # head-of-line blocking keeps FIFO fairness
+                for p in pages:
+                    self.pool.release(p)
+                break
+            if cow_src is not None and fresh:
+                # Copy-on-write partial hit: the first fresh page starts as
+                # a copy of the cached page; the matched tail of the prompt
+                # is then already-valid KV.
+                self.cache = self._copy_page(self.cache, cow_src, fresh[0])
+                n_cached = T
+                self.n_cow_hits += 1
+            elif pages and n_cached >= T:
+                # Full-coverage hit: the replay decode will write position
+                # T-1, and replay bytes are decode-path, not prefill-path
+                # (≈1 ulp apart) — never write a shared page; give this
+                # sequence a private copy of the last one (COW), which also
+                # keeps its first-step logits bit-identical to a cold run.
+                repl = self.pool.alloc(1)
+                if repl is None:
+                    for p in pages:
+                        self.pool.release(p)
+                    break
+                self.cache = self._copy_page(self.cache, pages[-1], repl[0])
+                self.pool.release(pages[-1])
+                pages[-1] = repl[0]
+                self.n_cow_hits += 1
+            self.queue.pop(0)
+            seq = _Seq(
+                req=req, tokens=toks, pages=pages + fresh,
+                n_prefilled=n_cached, n_target=T,
+                hashed_upto=len(pages), order=self._admitted,
+            )
+            self._admitted += 1
+            self.n_prefix_hit_tokens += n_cached
+            self.lanes[lane] = seq
+            self._set_row(lane, seq.pages)
+            if seq.n_prefilled >= T:
+                self._arm_decode(lane, seq)
+
+    def _arm_decode(self, lane: int, seq: _Seq):
+        # The replay decode writes position T-1 with decode-path bytes
+        # (≈1 ulp from the prefill-path bytes).  If that page is already
+        # registered in the prefix cache (page-aligned prompt: its final
+        # page registered the moment prefill filled it), give the sequence
+        # a private copy so registered content stays prefill-pure — a
+        # later warm hit must read exactly what a cold prefill would have
+        # written.  Shared (ref > 1) replay targets can't reach here: the
+        # full-coverage admission branch already COWed them.
+        pg = (seq.n_target - 1) // self.page_size
+        pid = seq.pages[pg]
+        if pid in self.pool.key_of:
+            repl = self.pool.alloc(1)
+            if repl is not None:
+                self.cache = self._copy_page(self.cache, pid, repl[0])
+                self.pool.release(pid)
+                seq.pages[pg] = repl[0]
+                self.table[lane, pg] = repl[0]
+                self._dev_table = None
+                self.n_guard_copies += 1
+            else:
+                # Pool dry: write in place, but drop the registration so no
+                # future prefix hit reads the mutated bytes.
+                self.pool._unregister(pid)
+        self.slot_pos[lane] = seq.n_target - 1  # replay the last known token
+        self._last_tok[lane, 0] = seq.tokens[-1]
+
+    # -- chunked prefill -------------------------------------------------
+    def _register_ready(self, seq: _Seq):
+        psz = self.page_size
+        while (seq.hashed_upto + 1) * psz <= seq.n_prefilled:
+            i = seq.hashed_upto
+            self.pool.register(seq.pages[i], tuple(seq.tokens[: (i + 1) * psz]))
+            seq.hashed_upto = i + 1
+
+    def _prefill_step(self) -> bool:
+        """Run ONE prompt chunk (the oldest unfinished prefill) — prefill
+        interleaves with decode instead of stalling the batch.  Chunks are
+        always padded to ``prefill_chunk`` so a single executable serves
+        every (offset, tail) shape: pad positions scatter into the null
+        page or into not-yet-valid slots that decode rewrites before any
+        length mask exposes them."""
+        cand = [
+            (s.order, lane, s)
+            for lane, s in enumerate(self.lanes)
+            if s is not None and s.n_prefilled < s.n_target
+        ]
+        if not cand:
+            return False
+        _, lane, seq = min(cand)
+        off = seq.n_prefilled
+        C = min(self.prefill_chunk, seq.n_target - off)
+        buf = np.zeros((1, self.prefill_chunk), np.int32)
+        buf[0, :C] = seq.tokens[off : off + C]
+        self.cache = self._chunk(
+            self.params, jnp.asarray(buf), self.cache,
+            self._dev_table_now()[lane : lane + 1], np.int32(off),
+        )
+        seq.n_prefilled += C
+        self.n_prefill_chunks += 1
+        self.n_prefill_tokens += C
+        if self.prefix_cache:
+            self._register_ready(seq)
+        if seq.n_prefilled >= seq.n_target:
+            self._arm_decode(lane, seq)
+        return True
+
+    # -- decode ----------------------------------------------------------
+    def _preempt(self, lane: int):
+        seq = self.lanes[lane]
+        for p in seq.pages:
+            self.pool.release(p)
+        self.lanes[lane] = None
+        self._set_row(lane, [])
+        self.queue.insert(0, seq.req)  # resume ASAP; output so far is kept
+        self.n_preemptions += 1
+
+    def _decode_ready(self):
+        return [
+            i for i, s in enumerate(self.lanes)
+            if s is not None and s.n_prefilled >= s.n_target
+        ]
+
+    def _ensure_capacity(self) -> list[int]:
+        """Grow each decoding lane's page list to cover its write position,
+        preempting the newest sequence when the pool runs dry."""
+        while True:
+            active = self._decode_ready()
+            blocked = None
+            for i in active:
+                seq = self.lanes[i]
+                pg = int(self.slot_pos[i]) // self.page_size
+                if pg < len(seq.pages):
+                    continue
+                got = self.pool.alloc(1)
+                if got is None:
+                    blocked = i
+                    break
+                seq.pages.append(got[0])
+                self.table[i, pg] = got[0]
+                self._dev_table = None
+            if blocked is None:
+                return self._decode_ready()
+            victims = self._decode_ready() + [
+                j for j, s in enumerate(self.lanes)
+                if s is not None and s.n_prefilled < s.n_target
+            ]
+            victim = max(victims, key=lambda i: self.lanes[i].order)
+            if victim == blocked and len(victims) == 1:
+                raise RuntimeError(
+                    "page pool too small for a single sequence"
+                )  # pragma: no cover — submit() bounds prevent this
+            self._preempt(victim)
+
+    def _decode_step(self) -> bool:
+        active = self._ensure_capacity()
+        if not active:
+            return False
+        write_page = np.full(self.max_batch, NULL_PAGE, np.int32)
+        pos = np.zeros(self.max_batch, np.int32)
+        for i in active:
+            seq = self.lanes[i]
+            pos[i] = self.slot_pos[i]
+            write_page[i] = seq.pages[int(self.slot_pos[i]) // self.page_size]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self._last_tok), self.cache,
+            jnp.asarray(pos), self._dev_table_now(), jnp.asarray(write_page),
+        )
+        self.n_decode_steps += 1
+        logits = np.asarray(logits.astype(jnp.float32))
+        for i in active:
+            seq = self.lanes[i]
+            tok = int(np.argmax(logits[i]))
+            if self.record_logits:
+                self.logit_trace.setdefault(seq.req.rid, []).append(logits[i])
+            self._last_tok[i, 0] = tok
+            seq.req.output.append(tok)
+            seq.tokens.append(tok)
+            self.slot_pos[i] += 1
+        return True
+
+    def _retire(self):
+        for i, seq in enumerate(self.lanes):
+            if seq is None or seq.n_prefilled < seq.n_target:
+                continue
+            req = seq.req
+            if len(req.output) >= req.max_new_tokens or self.slot_pos[i] >= self.max_seq - 1:
+                req.done = True
+                self.finished.append(req)
+                for p in seq.pages:
+                    self.pool.release(p)
+                self.lanes[i] = None
+                self._set_row(i, [])
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        self._admit()
+        progressed = self._prefill_step()
+        # Nothing can decode yet (cold start / post-preemption ramp): drain
+        # prefills instead of burning empty steps — time-to-first-token.
+        while progressed and not self._decode_ready():
+            if not self._prefill_step():
+                break
+        progressed |= self._decode_step()
+        self._retire()
+        return progressed
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(s is not None for s in self.lanes)) and steps < max_steps:
             if not self.step():
                 break
             steps += 1
