@@ -47,24 +47,32 @@ _STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "240"))
 _BATCH, _SEQ = 16, 96
 
 
-def _cache_dir(cfg: ModelConfig) -> str:
+def _cache_dir(cfg: ModelConfig, steps: int) -> str:
     key = hashlib.md5(
-        f"{cfg.name}-{cfg.d_model}-{cfg.n_periods}-{cfg.vocab}-{_STEPS}".encode()
+        f"{cfg.name}-{cfg.d_model}-{cfg.n_periods}-{cfg.vocab}-{steps}".encode()
     ).hexdigest()[:10]
     return f"/tmp/repro_bench_{key}"
 
 
-def trained_model(cfg: ModelConfig = BENCH_CFG):
-    """Returns (plan, params, batch_fn, corpus)."""
+def trained_model(cfg: ModelConfig = BENCH_CFG, steps: int = None):
+    """Returns (plan, params, batch_fn, corpus).
+
+    ``steps`` overrides the shared training budget (cache is keyed by it):
+    the perf benches use the fast default, while the end-to-end quality
+    bench (bench_eval) trains closer to the corpus entropy floor so
+    quantization damage — and the method ordering — rises above model
+    error.
+    """
+    steps = _STEPS if steps is None else steps
     plan = make_plan(cfg, 1)
     tcfg = TrainerConfig(
-        steps=_STEPS, batch=_BATCH, seq=_SEQ, ckpt_every=_STEPS,
-        ckpt_dir=_cache_dir(cfg), log_every=max(_STEPS // 4, 1),
+        steps=steps, batch=_BATCH, seq=_SEQ, ckpt_every=steps,
+        ckpt_dir=_cache_dir(cfg, steps), log_every=max(steps // 4, 1),
     )
-    trainer = Trainer(cfg, AdamWConfig(lr=2e-3, total_steps=_STEPS), tcfg)
-    if ckpt.latest_step(tcfg.ckpt_dir) != _STEPS:
+    trainer = Trainer(cfg, AdamWConfig(lr=2e-3, total_steps=steps), tcfg)
+    if ckpt.latest_step(tcfg.ckpt_dir) != steps:
         trainer.run()
-        trainer.save(_STEPS)
+        trainer.save(steps)
     else:
         trainer.restore()
     return plan, trainer.params, trainer.batch_fn, trainer.corpus

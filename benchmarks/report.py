@@ -110,10 +110,19 @@ def dryrun_table(cells, mesh_name):
 
 
 def _load_json(path):
+    """(doc, problem) — never raises: a missing/corrupt artifact becomes a
+    rendered note instead of a crashed report."""
     if not os.path.exists(path):
-        return None
-    with open(path) as f:
-        return json.load(f)
+        return None, "missing — regenerate with the matching benchmarks/ script"
+    try:
+        with open(path) as f:
+            return json.load(f), None
+    except (OSError, json.JSONDecodeError) as e:
+        return None, f"unreadable/not JSON ({e})"
+
+
+_KNOWN_SCHEMAS = {"BENCH_solver.json": (1, 2, 3), "BENCH_serve.json": (1,),
+                  "BENCH_eval.json": (1,)}
 
 
 def solver_bench_table(doc):
@@ -125,20 +134,20 @@ def solver_bench_table(doc):
     ]
     for row in doc.get("cd", []):
         lines.append(
-            f"| cd | {row['q']}×{row['p']} | {row['fused_us_per_iter']} "
-            f"| {row['speedup_fused_vs_legacy_obj']}x | {row['speedup_fused_vs_legacy']}x |"
+            f"| cd | {row.get('q')}×{row.get('p')} | {row.get('fused_us_per_iter', '?')} "
+            f"| {row.get('speedup_fused_vs_legacy_obj', '?')}x | {row.get('speedup_fused_vs_legacy', '?')}x |"
         )
     for row in doc.get("outlier", []):
-        kind = "outlier/struct" if row["structured"] else "outlier/unstruct"
+        kind = "outlier/struct" if row.get("structured") else "outlier/unstruct"
         lines.append(
-            f"| {kind} | {row['q']}×{row['p']} | {row['fused_us_per_iter']} "
-            f"| {row['speedup_fused_vs_legacy_obj']}x | {row['speedup_fused_vs_legacy']}x |"
+            f"| {kind} | {row.get('q')}×{row.get('p')} | {row.get('fused_us_per_iter', '?')} "
+            f"| {row.get('speedup_fused_vs_legacy_obj', '?')}x | {row.get('speedup_fused_vs_legacy', '?')}x |"
         )
     lines += ["", "| GEMM variant | m×q×p | us | weight-GB/s |", "|---|---|---|---|"]
     for row in doc.get("serve_gemm", []):
         lines.append(
-            f"| {row['variant']} | {row['m']}×{row['q']}×{row['p']} "
-            f"| {row['us']} | {row['weight_gbps']} |"
+            f"| {row.get('variant')} | {row.get('m')}×{row.get('q')}×{row.get('p')} "
+            f"| {row.get('us', '?')} | {row.get('weight_gbps', '?')} |"
         )
     return "\n".join(lines)
 
@@ -154,13 +163,44 @@ def serve_bench_table(doc):
         sp = row.get("speedup_vs_contiguous")
         lines.append(
             "| {sc} | {en} | {kv} | {mb} | {t} | {sp} | {tm}ms | {tp}ms | {ph} | {pe} |".format(
-                sc=row["scenario"], en=row["engine"], kv=row["kv"],
-                mb=row["max_batch"], t=row["tokens_per_s"],
-                sp=f"{sp}x" if sp else "—", tm=row["ttft_mean_ms"],
-                tp=row["ttft_p90_ms"], ph=row["prefix_hit_tokens"],
-                pe=row["preemptions"],
+                sc=row.get("scenario"), en=row.get("engine"), kv=row.get("kv"),
+                mb=row.get("max_batch"), t=row.get("tokens_per_s", "?"),
+                sp=f"{sp}x" if sp else "—", tm=row.get("ttft_mean_ms", "?"),
+                tp=row.get("ttft_p90_ms", "?"), ph=row.get("prefix_hit_tokens", "?"),
+                pe=row.get("preemptions", "?"),
             )
         )
+    return "\n".join(lines)
+
+
+def eval_bench_table(doc):
+    dense = doc.get("dense", {}) or {}
+    data = doc.get("data", {}) or {}
+    lines = [
+        f"### BENCH_eval (schema {doc.get('schema')}, backend {doc.get('backend')})",
+        "",
+        f"dense ppl **{dense.get('ppl', '?')}** "
+        f"(entropy floor {data.get('entropy_floor_ppl', '?')}), "
+        f"top1 {dense.get('top1', '?')}, choice {dense.get('choice_acc', '?')}",
+        "",
+        "| method | bits | ppl | top1 | top5 | choice acc | layer err |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for row in doc.get("grid", []):
+        lines.append(
+            f"| {row.get('method')} | {row.get('bits')} | {row.get('ppl', '?')} "
+            f"| {row.get('top1', '?')} | {row.get('top5', '?')} "
+            f"| {row.get('choice_acc', '?')} | {row.get('mean_layer_err', '?')} |"
+        )
+    par = doc.get("parity")
+    if isinstance(par, dict):
+        lines += [
+            "",
+            f"parity ({par.get('cell', 'dense')}): scorer vs contiguous "
+            f"{par.get('max_abs_diff_contiguous', '?')}, vs paged "
+            f"{par.get('max_abs_diff_paged', '?')} (tol {par.get('tol', '?')}); "
+            f"paged bitwise = {par.get('paged_bitwise_contiguous', '?')}",
+        ]
     return "\n".join(lines)
 
 
@@ -181,11 +221,22 @@ def main():
     for name, render in (
         ("BENCH_solver.json", solver_bench_table),
         ("BENCH_serve.json", serve_bench_table),
+        ("BENCH_eval.json", eval_bench_table),
     ):
-        doc = _load_json(os.path.normpath(os.path.join(args.bench_dir, name)))
-        if doc is not None:
+        doc, prob = _load_json(os.path.normpath(os.path.join(args.bench_dir, name)))
+        if doc is None:
+            print(f"### {name}\n\n_{prob}_\n")
+            continue
+        if doc.get("schema") not in _KNOWN_SCHEMAS[name]:
+            # Unknown (likely newer) schema: render best-effort rather than
+            # crash — field lookups below all degrade to '?'.
+            print(f"_{name}: unknown schema {doc.get('schema')!r} "
+                  f"(known: {_KNOWN_SCHEMAS[name]}); rendering best-effort_\n")
+        try:
             print(render(doc))
-            print()
+        except Exception as e:  # malformed rows: note, keep the report alive
+            print(f"_{name}: render failed ({type(e).__name__}: {e})_")
+        print()
 
 
 if __name__ == "__main__":

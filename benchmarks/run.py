@@ -16,6 +16,7 @@ def main() -> None:
     from benchmarks.common import Csv
 
     from benchmarks import (
+        bench_eval,
         bench_serve,
         bench_solver,
         fig2_layer_error,
@@ -28,7 +29,7 @@ def main() -> None:
 
     fast = os.environ.get("BENCH_FAST", "0") == "1"
     modules = [table123_perplexity, fig2_layer_error, table4_outliers,
-               table5_extreme, runtime, bench_solver, bench_serve]
+               table5_extreme, runtime, bench_solver, bench_serve, bench_eval]
     if not fast:
         modules.insert(2, fig3_iterations)
 

@@ -7,10 +7,18 @@ separate RTN/GPTQ/QuantEase cleanly (benchmarks mirror the paper's tables on
 this corpus — DESIGN.md §7).
 
 Determinism & fault tolerance: batch ``i`` is a pure function of
-``(seed, i)`` — the pipeline "state" is just the step counter stored in
-checkpoints, so resume (or elastic re-sharding onto a different data-parallel
-layout) replays exactly.  Per-host sharding slices the batch by
-``jax.process_index()`` in real multi-host runs (single process here).
+``(seed, split, i)`` — the pipeline "state" is just the step counter stored
+in checkpoints, so resume (or elastic re-sharding onto a different
+data-parallel layout) replays exactly.  Per-host sharding slices the batch
+by ``jax.process_index()`` in real multi-host runs (single process here).
+
+Splits: the ``split`` argument keys the per-step RNG with a per-split salt,
+so the ``train`` / ``calib`` / ``eval`` streams are disjoint *by
+construction* — no step of one split ever shares an RNG stream with any
+step of another (distinct ``SeedSequence`` entropy tuples), which is the
+no-calibration-leakage guarantee the eval subsystem depends on
+(tests/test_eval.py pins it).  ``split="train"`` keeps the historical
+``(seed, step)`` keying so existing checkpoints replay identically.
 """
 
 from __future__ import annotations
@@ -21,7 +29,13 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["SyntheticCorpus", "DataConfig", "make_batch_fn"]
+__all__ = ["SyntheticCorpus", "DataConfig", "make_batch_fn", "SPLITS"]
+
+# Per-split RNG salts.  ``train`` is unsalted (historical keying); the other
+# splits fold a large fixed salt into the SeedSequence entropy so their
+# streams never coincide with the train stream — or each other — for any
+# (seed, step) pair.
+SPLITS = {"train": None, "calib": 0xCA11B, "eval": 0xE7A1}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,12 +81,22 @@ def make_batch_fn(
     model_cfg,
     batch: int,
     seq: int,
+    split: str = "train",
 ):
-    """Returns batch(step) → dict of numpy arrays matching the model family."""
+    """Returns batch(step) → dict of numpy arrays matching the model family.
+
+    ``split`` selects one of the disjoint deterministic streams (``train`` /
+    ``calib`` / ``eval`` — see module docstring); all splits share the same
+    underlying Markov chain, only the sampling stream differs.
+    """
+    if split not in SPLITS:
+        raise ValueError(f"unknown split {split!r}; expected one of {sorted(SPLITS)}")
+    salt = SPLITS[split]
     corpus = SyntheticCorpus(data_cfg)
 
     def get(step: int) -> dict:
-        rng = np.random.default_rng((data_cfg.seed, step))
+        key = (data_cfg.seed, step) if salt is None else (data_cfg.seed, salt, step)
+        rng = np.random.default_rng(key)
         out = {"tokens": corpus.sample(rng, batch, seq)}
         if model_cfg.family == "encdec":
             out["frames"] = rng.standard_normal(

@@ -1,0 +1,46 @@
+"""End-to-end quantized-model evaluation (perplexity + synthetic task accuracy).
+
+The paper's headline artifacts are quality tables — perplexity (Tables 1-3,
+5) and zero-shot task accuracy (§5.3) — measured on full models, not layer
+errors.  This package scores any parameter tree the repo can produce (dense
+bf16, fake-quant, or stacked :class:`~repro.quant.QuantizedTensor` serving
+params) end to end on the synthetic Markov corpus:
+
+* :mod:`repro.eval.scorer` — batched teacher-forced log-likelihood, chunked
+  over the sequence so logits never materialize at (B, S, V); plus the
+  prefill-path next-token logits used by the serving parity bridge,
+* :mod:`repro.eval.tasks` — synthetic zero-shot-style tasks (cloze
+  next-token top-k, multi-choice continuation scoring) so both of the
+  paper's metric families exist offline,
+* :mod:`repro.eval.harness` — the method × bits × outlier grid sweep behind
+  ``launch/eval.py`` / ``benchmarks/bench_eval.py`` (``BENCH_eval.json``),
+  schema validation, and the scorer-vs-serving-engine logit parity check.
+
+Eval batches come from ``data/pipeline.py``'s ``split="eval"`` stream,
+disjoint from the ``calib`` stream by construction (no calibration leakage).
+"""
+
+from repro.eval.harness import (
+    EVAL_SCHEMA,
+    engine_parity,
+    eval_model,
+    quantized_parity,
+    run_grid,
+    validate_doc,
+)
+from repro.eval.scorer import make_scorer, next_token_logits, perplexity_on_stream
+from repro.eval.tasks import cloze_accuracy, continuation_choice
+
+__all__ = [
+    "EVAL_SCHEMA",
+    "make_scorer",
+    "next_token_logits",
+    "perplexity_on_stream",
+    "cloze_accuracy",
+    "continuation_choice",
+    "eval_model",
+    "run_grid",
+    "engine_parity",
+    "quantized_parity",
+    "validate_doc",
+]

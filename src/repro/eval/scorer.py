@@ -1,0 +1,177 @@
+"""Batched teacher-forced scorer — full-model log-likelihood, bounded memory.
+
+Scores token streams against any parameter tree the model stack accepts:
+dense bf16, fake-quant (``emit="fake"``), or the serving artifact itself —
+stacked :class:`~repro.quant.QuantizedTensor` leaves from
+``serve.qparams.quantize_params_for_serving`` (the scan in
+``models._run_stack`` slices QT pytrees exactly like dense leaves, and
+``apply_linear`` dispatches them through the dequant GEMM).  Scoring the
+serving artifact rather than a dequantized copy is what ties the quality
+numbers to the bytes serving actually executes.
+
+Memory: the forward keeps the usual (B, S, d) activations; the head is
+evaluated in sequence chunks (mirroring ``models.chunked_cross_entropy``)
+so logits never materialize at (B, S, V) — per-chunk peak is (B, C, V).
+Beyond the gold logprob, each chunk also emits gold-token *ranks* (count of
+strictly-larger logits), from which any top-k accuracy is derived for free.
+
+Scope: token-only decoder stacks (the same gate as paged serving) — encoder-
+decoder and prefix models raise.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.common import apply_norm, softcap
+
+__all__ = [
+    "token_scores",
+    "make_scorer",
+    "next_token_logits",
+    "perplexity_on_stream",
+]
+
+
+def _check_family(cfg):
+    if cfg.family == "encdec" or cfg.n_prefix:
+        raise ValueError("eval scorer supports token-only decoder models only")
+
+
+def _hidden_states(plan, params, tokens: jax.Array) -> jax.Array:
+    """(B, S) int32 → (B, S, d) final-norm hidden states, teacher-forced."""
+    cfg = plan.cfg
+    _check_family(cfg)
+    B, S = tokens.shape
+    x = M._embed_tokens(plan, params, tokens)
+    pos = jnp.arange(S)
+    if cfg.pos == "learned":
+        x = x + jax.lax.dynamic_slice(
+            params["pos_emb"], (0, 0), (S, cfg.d_model)
+        )[None].astype(plan.dtype)
+    x, _, _ = M._run_stack(
+        plan, params["dec"], cfg.pattern, x, mode="train", pos_ids=pos
+    )
+    return apply_norm(params["final_norm"], x, cfg.norm)
+
+
+def token_scores(plan, params, tokens: jax.Array, *, chunk: int = 128):
+    """Per-token teacher-forced scores.
+
+    Returns ``(logprob, rank)``, both (B, S-1) fp32/int32: position ``t``
+    scores token ``t+1`` given the prefix — ``logprob`` is the gold-token
+    log-probability, ``rank`` the number of strictly-larger logits (0 ⇒ the
+    gold token is the greedy argmax; ``rank < k`` ⇒ a top-k hit).
+    """
+    cfg = plan.cfg
+    if tokens.shape[1] < 2:
+        raise ValueError("token_scores needs sequences of at least 2 tokens")
+    x = _hidden_states(plan, params, tokens)
+    B, S, d = x.shape
+    head = M._logit_head(plan, params)
+    labels = tokens[:, 1:]  # (B, S-1)
+    x = x[:, :-1]  # position t predicts token t+1
+    Sm = S - 1
+    chunk = min(chunk, Sm)
+    n = -(-Sm // chunk)
+    pad = n * chunk - Sm
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    xs = x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def step(_, inp):
+        xc, lc = inp
+        logits = M._head_logits(xc, head)  # (B, C, Vp) fp32
+        logits = softcap(logits, cfg.logit_softcap)
+        vp = logits.shape[-1]
+        if vp > cfg.vocab:
+            bias = jnp.where(jnp.arange(vp) < cfg.vocab, 0.0, -jnp.inf)
+            logits = logits + bias
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        rank = (logits > gold[..., None]).sum(-1)
+        return (), (gold - lse, rank.astype(jnp.int32))
+
+    _, (lp, rank) = jax.lax.scan(step, (), (xs, ls))
+    lp = lp.transpose(1, 0, 2).reshape(B, n * chunk)[:, :Sm]
+    rank = rank.transpose(1, 0, 2).reshape(B, n * chunk)[:, :Sm]
+    return lp, rank
+
+
+def make_scorer(plan, *, chunk: int = 128):
+    """Jitted ``(params, tokens) → (logprob, rank)`` closure — one compiled
+    executable reused across the whole eval stream (params are an argument,
+    not a baked constant, so the same scorer serves every grid cell of a
+    given params layout)."""
+    return jax.jit(
+        functools.partial(_token_scores_flat, plan, chunk)
+    )
+
+
+def _token_scores_flat(plan, chunk, params, tokens):
+    return token_scores(plan, params, tokens, chunk=chunk)
+
+
+def next_token_logits(plan, params, prompt: np.ndarray) -> np.ndarray:
+    """Prefill-path logits predicting the token after ``prompt``.
+
+    Runs the model's own :func:`repro.models.prefill` on the *unpadded*
+    prompt (B=1, cache sized to the prompt), so the returned vector is
+    byte-for-byte the prefill path the serving engines execute — the anchor
+    of the parity bridge (:func:`repro.eval.harness.engine_parity`).
+    """
+    _check_family(plan.cfg)
+    n = int(len(prompt))
+    cache = M.init_cache(plan, 1, n)
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, _ = M.prefill(plan, params, {"tokens": toks}, cache)
+    return np.asarray(logits[0].astype(jnp.float32))
+
+
+def perplexity_on_stream(
+    plan,
+    params,
+    batch_fn,
+    *,
+    n_batches: int = 4,
+    step0: int = 0,
+    chunk: int = 128,
+    scorer=None,
+) -> dict:
+    """Mean NLL / perplexity / top-k hits over ``batch_fn(step0 + i)``.
+
+    ``batch_fn`` should come from ``data.pipeline.make_batch_fn(...,
+    split="eval")`` so the stream is disjoint from calibration.  Returns
+    ``{"nll", "ppl", "top1", "top5", "n_tokens"}`` (fp means over all scored
+    positions of all batches).
+    """
+    score = scorer if scorer is not None else make_scorer(plan, chunk=chunk)
+    tot_lp = 0.0
+    tot_t1 = 0
+    tot_t5 = 0
+    n_tok = 0
+    for i in range(n_batches):
+        tokens = jnp.asarray(batch_fn(step0 + i)["tokens"])
+        lp, rank = score(params, tokens)
+        lp = np.asarray(lp, np.float64)
+        rank = np.asarray(rank)
+        tot_lp += lp.sum()
+        tot_t1 += int((rank < 1).sum())
+        tot_t5 += int((rank < 5).sum())
+        n_tok += lp.size
+    nll = -tot_lp / max(n_tok, 1)
+    return {
+        "nll": float(nll),
+        "ppl": float(np.exp(nll)),
+        "top1": tot_t1 / max(n_tok, 1),
+        "top5": tot_t5 / max(n_tok, 1),
+        "n_tokens": n_tok,
+    }

@@ -40,6 +40,38 @@ import json
 import os
 
 
+def load_progress(path: str) -> list:
+    """Parse a ``progress.jsonl`` audit trail, tolerating a truncated tail.
+
+    A run killed mid-write leaves a partial (or empty) last line; resume
+    must report from the last *complete* record rather than crash on the
+    torn one.  Any undecodable line after the last complete record is
+    dropped; an undecodable line *followed by* complete records means real
+    corruption and still raises (same policy as the train CLI's
+    empty-metrics handling: degrade on torn tails, never mask corruption).
+    """
+    if not os.path.exists(path):
+        return []
+    records, bad_at = [], None
+    with open(path) as f:
+        for n, ln in enumerate(f):
+            if not ln.strip():
+                continue
+            try:
+                rec = json.loads(ln)
+            except json.JSONDecodeError:
+                if bad_at is None:
+                    bad_at = n
+                continue
+            if bad_at is not None:
+                raise ValueError(
+                    f"{path}: undecodable record at line {bad_at + 1} "
+                    "followed by later records — corrupt, not truncated"
+                )
+            records.append(rec)
+    return records
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="Whole-model PTQ with the streaming/sharded QuantEase engine."
@@ -58,6 +90,9 @@ def main():
     ap.add_argument("--group-size", type=int, default=0)
     ap.add_argument("--calib-batches", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data-seed", type=int, default=0,
+                    help="corpus seed — must match the TRAINING corpus "
+                         "(launch/train.py TrainerConfig.seed, default 0)")
     ap.add_argument("--shard", action="store_true",
                     help="shard Σ accumulation + CD solve over all local devices")
     ap.add_argument("--stream-calib", type=int, default=0, metavar="N",
@@ -86,9 +121,10 @@ def main():
     import jax
 
     progress_path = os.path.join(args.out_dir, "progress.jsonl")
-    if args.resume and os.path.exists(progress_path):
-        with open(progress_path) as f:
-            lines = [json.loads(ln) for ln in f if ln.strip()]
+    if args.resume:
+        # Tolerant parse: a run killed mid-write leaves an empty file or a
+        # torn last line — resume from the last *complete* record.
+        lines = load_progress(progress_path)
         if lines:
             last = lines[-1]
             print(
@@ -96,6 +132,8 @@ def main():
                 f"({last['stack']}.p{last['period']}.b{last['block']}), "
                 f"mean_err={last['mean_rel_error']:.4g} — restarting from scratch"
             )
+        else:
+            print("previous run: no complete progress records — cold start")
     # Each run owns its progress file: truncate so records never interleave
     # across runs (with or without --resume).
     if os.path.exists(progress_path):
@@ -114,11 +152,18 @@ def main():
         n = len(jax.devices())
         print(f"--shard: {n} device(s)" + (" — single-device fallback" if mesh is None else ""))
 
+    # Dedicated calib split: disjoint from the train stream (and from the
+    # eval split launch/eval.py scores on) by construction — see
+    # data/pipeline.py.  The corpus seed must match the trainer's
+    # (TrainerConfig.seed): DataConfig.seed fixes the Markov chain itself,
+    # and the old default (1234) calibrated against a *different chain*
+    # than the checkpoint was trained on.
     batch_fn, _ = make_batch_fn(
-        DataConfig(vocab=cfg.vocab), cfg, batch=4, seq=args.seq
+        DataConfig(vocab=cfg.vocab, seed=args.data_seed), cfg,
+        batch=4, seq=args.seq, split="calib",
     )
     calib = [
-        {k: jnp.asarray(v) for k, v in batch_fn(50_000 + i).items()}
+        {k: jnp.asarray(v) for k, v in batch_fn(i).items()}
         for i in range(args.calib_batches)
     ]
     pcfg = PTQConfig(

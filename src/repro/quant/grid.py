@@ -89,7 +89,16 @@ class Grid:
 
 
 def _group_reduce(w: jax.Array, group_size: Optional[int], fn) -> jax.Array:
-    """Reduce (q, p) → (q, n_groups) with `fn` over each column group."""
+    """Reduce (q, p) → (q, n_groups) with `fn` over each column group.
+
+    Ragged grids (``p % group_size != 0``): the tail group reduces over its
+    true (narrower) column span — the edge-value padding below is range-
+    neutral for min/max/absmax, and every consumer maps columns to groups
+    by ``col // group_size`` (``Grid.per_column``), never by inferring a
+    uniform ``ceil(p / n_groups)`` width.  The serving side had exactly
+    that ceil-inference bug (fixed in PR 2); the quantization side is
+    audited clean and pinned by tests/test_quant.py::test_ragged_group_*.
+    """
     q, p = w.shape
     g = group_size or p
     n_groups = -(-p // g)

@@ -76,12 +76,15 @@ class ServingEngine:
         max_batch: int = 4,
         max_seq: int = 512,
         prefill_pad: int = 32,
+        record_logits: bool = False,
     ):
         self.plan = plan
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.prefill_pad = prefill_pad
+        self.record_logits = record_logits
+        self.logit_trace: dict[int, list] = {}
 
         self.cache = init_cache(plan, max_batch, max_seq)
         self.slot_req: list[Optional[Request]] = [None] * max_batch
@@ -98,6 +101,18 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        # Same admission contract as the paged engine: every generated token
+        # occupies a cache position, so prompt + max_new must fit the window.
+        # In particular a prompt that exactly fills the window
+        # (len == max_seq) cannot decode even token 0 — its replay decode
+        # would have nowhere left to advance — and is rejected here instead
+        # of silently finishing with an empty output (and a longer prompt
+        # used to crash prefill with an opaque broadcast error).
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.rid} cannot fit: prompt {len(req.prompt)} + "
+                f"max_new {req.max_new_tokens} > max_seq {self.max_seq}"
+            )
         req.output = []
         self.queue.append(req)
 
@@ -152,6 +167,10 @@ class ServingEngine:
         logits = np.asarray(logits.astype(jnp.float32))
         for i in active:
             tok = int(np.argmax(logits[i]))
+            if self.record_logits:
+                self.logit_trace.setdefault(self.slot_req[i].rid, []).append(
+                    logits[i]
+                )
             self._last_tok[i, 0] = tok
             self.slot_req[i].output.append(tok)
             self.slot_pos[i] += 1

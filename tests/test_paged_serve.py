@@ -383,3 +383,70 @@ def test_submit_rejects_oversized_request(served_model):
     eng = PagedServingEngine(plan, params, max_batch=1, max_seq=64, page_size=8)
     with pytest.raises(ValueError):
         eng.submit(Request(rid=0, prompt=np.zeros(60, np.int32), max_new_tokens=16))
+
+
+# ---------------------------------------------------------------------------
+# Window-boundary regressions: prompts that exactly fill (or overflow) the
+# sequence window must be handled identically — and cleanly — by both
+# engines.  A full-window prompt used to finish silently with zero output on
+# the contiguous engine (and an over-long one crashed prefill with an opaque
+# numpy broadcast error mid-run).
+# ---------------------------------------------------------------------------
+
+
+def test_window_filling_prompt_rejected_both_engines(served_model):
+    """len(prompt) == max_seq with max_new > 0: decode of token 0 has no
+    position left to advance into — both engines reject at submit."""
+    plan, params, _ = served_model
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, 250, 64).astype(np.int32)
+    for eng in (
+        ServingEngine(plan, params, max_batch=1, max_seq=64, prefill_pad=8),
+        PagedServingEngine(plan, params, max_batch=1, max_seq=64, page_size=8),
+    ):
+        with pytest.raises(ValueError):
+            eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+
+
+def test_overlong_prompt_rejected_at_submit(served_model):
+    """len(prompt) > max_seq is rejected at submit (contiguous engine used
+    to crash later, inside prefill, with a broadcast error)."""
+    plan, params, _ = served_model
+    eng = ServingEngine(plan, params, max_batch=1, max_seq=64, prefill_pad=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=np.zeros(65, np.int32), max_new_tokens=0))
+
+
+def test_window_filling_prompt_max_new_zero_ok(served_model):
+    """len(prompt) == max_seq with max_new == 0 is valid on both engines:
+    prefill stays in-bounds and the request retires with empty output."""
+    plan, params, _ = served_model
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, 250, 64).astype(np.int32)
+    for eng in (
+        ServingEngine(plan, params, max_batch=1, max_seq=64, prefill_pad=8),
+        PagedServingEngine(plan, params, max_batch=1, max_seq=64, page_size=8),
+    ):
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=0))
+        fin = eng.run()
+        assert [r.output for r in fin] == [[]] and fin[0].done
+
+
+def test_exact_fit_generates_all_tokens_both_engines(served_model):
+    """prompt + max_new == max_seq (== pages_per_seq · page_size for the
+    paged engine) generates every requested token, decode never writes past
+    the table, and the engines stay token-identical."""
+    plan, params, _ = served_model
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, 250, 60).astype(np.int32)  # 60 + 4 == 64 == 8*8
+    outs = []
+    for eng in (
+        ServingEngine(plan, params, max_batch=1, max_seq=64, prefill_pad=8),
+        PagedServingEngine(plan, params, max_batch=1, max_seq=64, page_size=8,
+                           prefill_chunk=16),
+    ):
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+        fin = eng.run()
+        assert len(fin) == 1 and len(fin[0].output) == 4
+        outs.append(fin[0].output)
+    assert outs[0] == outs[1]

@@ -101,3 +101,81 @@ def test_packed_quantized_tensor(rng):
     np.testing.assert_allclose(
         np.asarray(packed.dequantize()), np.asarray(qt.dequantize())
     )
+
+
+# ---------------------------------------------------------------------------
+# Ragged group grids through the quantization-side path (PR-2's serving-side
+# ceil-inference bug had no quantization-side twin — these pin that down).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_ragged_group_roundtrip(bits, rng):
+    """compute_grid → quantize_codes → pack → unpack → dequantize at
+    p=384 / group_size=256 (ragged last group of 128) is bit-exact against
+    the unpacked quantize-dequantize operator, for every code width."""
+    w = jnp.asarray(rng.standard_normal((8, 384)).astype(np.float32))
+    spec = GridSpec(bits=bits, group_size=256)
+    grid = compute_grid(w, spec)
+    assert grid.scale.shape == (8, 2)  # ceil(384 / 256)
+    codes = quantize_codes(w, grid)
+    unpacked = unpack_codes(pack_codes(codes, bits), bits, 384)
+    assert np.array_equal(np.asarray(codes), np.asarray(unpacked))
+    deq = dequantize_codes(unpacked, grid)
+    np.testing.assert_array_equal(
+        np.asarray(deq), np.asarray(quantize_dequantize(w, grid))
+    )
+
+
+def test_ragged_group_scales_match_sliced_reference(rng):
+    """Group (scale, zero) at a ragged boundary equal per-slice grids: the
+    128-wide tail group must use only its own columns (edge-padding in
+    _group_reduce must never widen a range)."""
+    w = np.asarray(rng.standard_normal((8, 384)), np.float32)
+    # Make the global extremes live in the tail group so leakage would show.
+    w[:, 300] = 9.0
+    w[:, 301] = -9.0
+    grid = compute_grid(jnp.asarray(w), GridSpec(bits=4, group_size=256))
+    for g, (lo, hi) in enumerate([(0, 256), (256, 384)]):
+        blk = w[:, lo:hi]
+        wmin = np.minimum(blk.min(1), 0.0)
+        wmax = np.maximum(blk.max(1), 0.0)
+        np.testing.assert_allclose(
+            np.asarray(grid.scale)[:, g], np.maximum((wmax - wmin) / 15, 1e-12),
+            rtol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(grid.zero)[:, g], np.round(-wmin / np.asarray(grid.scale)[:, g]),
+            rtol=0, atol=0,
+        )
+
+
+def test_ragged_group_excluding_outliers(rng):
+    """Outlier-shrunk grids honor ragged group boundaries: a huge outlier in
+    the tail group must not widen either group's range."""
+    w = np.asarray(rng.standard_normal((4, 384)), np.float32)
+    w[:, 380] = 50.0
+    mask = np.zeros((4, 384), bool)
+    mask[:, 380] = True
+    grid = compute_grid_excluding_outliers(
+        jnp.asarray(w), GridSpec(bits=3, group_size=256), jnp.asarray(mask)
+    )
+    kept = np.where(mask, 0.0, w)
+    for g, (lo, hi) in enumerate([(0, 256), (256, 384)]):
+        blk = np.where(mask[:, lo:hi], np.nan, w[:, lo:hi])
+        wmin = np.minimum(np.nanmin(blk, 1), 0.0)
+        wmax = np.maximum(np.nanmax(blk, 1), 0.0)
+        np.testing.assert_allclose(
+            np.asarray(grid.scale)[:, g], np.maximum((wmax - wmin) / 7, 1e-12),
+            rtol=1e-6,
+        )
+    assert bool(np.isfinite(np.asarray(grid.scale)).all())
+
+
+def test_ragged_group_quantized_tensor_dequant(rng):
+    """QuantizedTensor round-trip (incl. packed int4) on a ragged grid
+    dequantizes on the true 256-column boundary, not ceil(p/n_groups)."""
+    w = jnp.asarray(rng.standard_normal((8, 384)).astype(np.float32))
+    qt = quantize_tensor(w, GridSpec(bits=4, group_size=256))
+    ref = quantize_dequantize(w, compute_grid(w, GridSpec(bits=4, group_size=256)))
+    np.testing.assert_array_equal(np.asarray(qt.dequantize()), np.asarray(ref))
