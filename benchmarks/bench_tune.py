@@ -1,0 +1,271 @@
+"""BENCH_tune — auto-tuned mixed precision vs uniform at equal average bits.
+
+The committed trajectory for the accuracy-driven per-layer tuner
+(repro/tune): probe per-layer sensitivity on the shared benchmark model,
+race the greedy budgeted allocations against the uniform baseline at the
+same average-bits budget, and score every candidate on the eval split as
+the restacked **serving** artifact.  The headline claim — the tuned winner
+is never worse than uniform at equal average bits — holds by construction
+(uniform is always candidate 0 and the winner is the perplexity argmin), so
+``--validate`` enforces it on smoke documents too, alongside the budget
+bound and the mixed-precision parity bridge: a genuinely heterogeneous
+artifact (every candidate width in one stack, COO outliers attached to a
+subset of layers) must pass scorer↔engine logit parity within the
+documented 0.05 tolerance with paged ≡ contiguous bitwise.
+
+``--smoke`` runs a seconds-scale random-init subset with the same schema;
+the full run shares bench_eval's trained model cache.  Mirrors the
+bench_solver/bench_serve/bench_eval conventions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+TUNE_SCHEMA = 1
+
+_CAND_KEYS = {"label", "kind", "avg_bits", "ppl", "nll", "mean_layer_err"}
+_PARITY_KEYS = {"max_abs_diff_contiguous", "max_abs_diff_paged",
+                "paged_bitwise_contiguous", "tol"}
+
+
+def _parity_mixed_artifact(plan, params, calib, layer_keys, tcfg, *, frac):
+    """Quantize a deliberately heterogeneous artifact for the parity bridge.
+
+    The greedy winner can legitimately collapse to one width (smoke budgets
+    often do), so the parity claim — mixed-precision serving bytes match the
+    scorer — gets its own construction: candidate widths cycle across layers
+    and every ``1/4``-th layer carries a COO outlier budget.  This is the
+    worst case the harmonized restack must handle: every width in one stack,
+    outlier planes padded across periods.
+    """
+    from repro.core.solver import LayerSpec, PTQConfig, ptq_quantize_model
+    from repro.quant import GridSpec
+    from repro.serve.qparams import quantize_params_for_serving
+
+    bc = tcfg.bits_candidates
+    specs, hist = {}, {}
+    for i, key in enumerate(sorted(layer_keys)):
+        b = bc[i % len(bc)]
+        if i % 4 == 3:
+            specs[key] = LayerSpec(bits=b, outlier_frac=frac, method="qe_outlier")
+        else:
+            specs[key] = LayerSpec(bits=b, method="quantease")
+        hist[b] = hist.get(b, 0) + 1
+    cfg = PTQConfig(
+        method="quantease",
+        spec=GridSpec(bits=bc[-1], group_size=tcfg.group_size),
+        iterations=tcfg.iterations,
+        emit="qt",
+        layer_specs=specs,
+    )
+    qp, _ = ptq_quantize_model(plan, params, calib, cfg)
+    return quantize_params_for_serving(plan, params, qp["dec"]), {
+        str(k): v for k, v in sorted(hist.items())
+    }
+
+
+def collect(smoke: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.data.pipeline import DataConfig, make_batch_fn
+    from repro.eval.harness import engine_parity
+    from repro.tune import TuneConfig, probe_layer_stats, tune_model
+
+    if smoke:
+        import dataclasses as dc
+
+        import benchmarks.common as C
+        from repro.models import init_params, make_plan
+
+        cfg = dc.replace(C.BENCH_CFG, d_model=64, head_dim=16, d_ff=128,
+                         n_periods=2)
+        plan = make_plan(cfg, 1)
+        params = init_params(plan, jax.random.PRNGKey(0))
+        tcfg = TuneConfig(
+            budget_avg_bits=3.0, bits_candidates=(2, 3, 4),
+            outlier_frac_candidates=(0.02,), iterations=2,
+            n_ppl_batches=1, chunk=32, probe_outlier_iterations=2,
+        )
+        seq, n_calib = 64, 1
+    else:
+        from benchmarks.common import trained_model
+
+        # Same longer-trained model as bench_eval (shared /tmp cache): near
+        # the entropy floor, allocation quality differences rise above model
+        # noise.
+        plan, params, _, _ = trained_model(
+            steps=int(os.environ.get("BENCH_EVAL_TRAIN_STEPS", "1600"))
+        )
+        cfg = plan.cfg
+        tcfg = TuneConfig(
+            budget_avg_bits=3.0, bits_candidates=(2, 3, 4, 8),
+            outlier_frac_candidates=(0.02,), iterations=10,
+            n_ppl_batches=12, probe_outlier_iterations=6,
+        )
+        seq, n_calib = 96, 8
+
+    dcfg = DataConfig(vocab=cfg.vocab, seed=0)
+    calib_fn, _ = make_batch_fn(dcfg, cfg, batch=4, seq=seq, split="calib")
+    eval_fn, corpus = make_batch_fn(dcfg, cfg, batch=4, seq=seq, split="eval")
+    calib = [
+        {k: jnp.asarray(v) for k, v in calib_fn(i).items()} for i in range(n_calib)
+    ]
+
+    stats = probe_layer_stats(
+        plan, params, calib,
+        bits_candidates=tcfg.bits_candidates,
+        outlier_cells=tuple(
+            (tcfg.bits_candidates[0], f) for f in tcfg.outlier_frac_candidates
+        ),
+        outlier_iterations=tcfg.probe_outlier_iterations,
+        progress_cb=lambda r: print(f"# {r}", file=sys.stderr),
+    )
+    tuned = tune_model(
+        plan, params, calib, eval_fn, tcfg, stats=stats,
+        progress_cb=lambda r: print(f"# {r}", file=sys.stderr),
+    )
+
+    qp_mixed, hist = _parity_mixed_artifact(
+        plan, params, calib, list(stats), tcfg,
+        frac=(tcfg.outlier_frac_candidates or (0.02,))[0],
+    )
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in (5, 13, 29)]
+    parity = engine_parity(plan, qp_mixed, prompts, max_seq=64, page_size=8,
+                           prefill_chunk=16)
+
+    doc = {
+        "schema": TUNE_SCHEMA,
+        "smoke": smoke,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "arch": cfg.name,
+        "data": {
+            "vocab": cfg.vocab, "seq": seq,
+            "eval_split": "eval", "calib_split": "calib",
+            "entropy_floor_ppl": round(float(np.exp(corpus.entropy_floor())), 4),
+        },
+        "parity": parity,
+        "parity_bits_histogram": hist,
+    }
+    doc.update(tuned)
+    return doc
+
+
+def validate(path: str) -> list:
+    """Schema + invariant problems; empty means well-formed.
+
+    The tuned ≤ uniform and budget invariants hold by construction even on
+    smoke documents, so they are always enforced."""
+    if not os.path.exists(path):
+        return [f"{path}: missing"]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable/not JSON ({e})"]
+    probs = []
+    if doc.get("schema") != TUNE_SCHEMA:
+        probs.append(f"schema != {TUNE_SCHEMA}")
+    cands = doc.get("candidates")
+    if not isinstance(cands, list) or not cands:
+        probs.append("candidates: missing/empty")
+        return probs
+    for i, row in enumerate(cands):
+        missing = _CAND_KEYS - set(row)
+        if missing:
+            probs.append(f"candidates[{i}]: missing keys {sorted(missing)}")
+    uniform, best = doc.get("uniform"), doc.get("best")
+    if not isinstance(uniform, dict) or not isinstance(best, dict):
+        probs.append("uniform/best: missing")
+        return probs
+    if not any(r.get("kind") == "uniform" for r in cands):
+        probs.append("no uniform baseline candidate")
+    budget = doc.get("budget_avg_bits")
+    if best.get("ppl") is None or uniform.get("ppl") is None:
+        probs.append("uniform/best: missing ppl")
+    elif best["ppl"] > uniform["ppl"] + 1e-9:
+        probs.append(
+            f"tuned ppl {best['ppl']} worse than uniform {uniform['ppl']} "
+            "at equal average bits"
+        )
+    for row in cands:
+        if isinstance(budget, (int, float)) and row.get("avg_bits", 0) > budget + 1e-6:
+            probs.append(f"{row.get('label')}: avg_bits {row['avg_bits']} "
+                         f"over budget {budget}")
+    par = doc.get("parity")
+    if not isinstance(par, dict) or _PARITY_KEYS - set(par):
+        probs.append("parity: missing/incomplete")
+    else:
+        if par["max_abs_diff_contiguous"] > par["tol"]:
+            probs.append("parity: contiguous diff exceeds tol")
+        if par["max_abs_diff_paged"] > par["tol"]:
+            probs.append("parity: paged diff exceeds tol")
+        if not par["paged_bitwise_contiguous"]:
+            probs.append("parity: paged != contiguous bitwise")
+    hist = doc.get("parity_bits_histogram")
+    if not isinstance(hist, dict) or len(hist) < 2:
+        probs.append(
+            "parity_bits_histogram: parity artifact not heterogeneous "
+            "(need ≥2 distinct widths in one stack)"
+        )
+    return probs
+
+
+def run(csv):
+    """benchmarks/run.py entry point.  Under BENCH_FAST=1 the smoke subset
+    writes ``BENCH_tune_smoke.json`` — the committed trajectory is only
+    overwritten by full-budget runs."""
+    smoke = os.environ.get("BENCH_FAST", "0") == "1"
+    doc = collect(smoke=smoke)
+    name = "BENCH_tune_smoke.json" if smoke else "BENCH_tune.json"
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", name)
+    with open(os.path.normpath(out), "w") as f:
+        json.dump(doc, f, indent=1)
+    csv.add("tune_uniform", ppl=doc["uniform"]["ppl"],
+            avg_bits=doc["uniform"]["avg_bits"])
+    csv.add("tune_best", ppl=doc["best"]["ppl"], avg_bits=doc["best"]["avg_bits"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="seconds-scale subset")
+    ap.add_argument("--out", default=None,
+                    help="output path (default BENCH_tune.json, or "
+                         "BENCH_tune_smoke.json under --smoke so a smoke run "
+                         "never clobbers the committed trajectory)")
+    ap.add_argument("--validate", metavar="PATH", help="check an existing file")
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = "BENCH_tune_smoke.json" if args.smoke else "BENCH_tune.json"
+    if args.validate:
+        probs = validate(args.validate)
+        for pr in probs:
+            print(f"INVALID: {pr}", file=sys.stderr)
+        print(f"{args.validate}: {'FAIL' if probs else 'ok'}")
+        sys.exit(1 if probs else 0)
+    doc = collect(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    for row in doc["candidates"]:
+        extra = ""
+        if row["kind"] == "mixed":
+            extra = f"  bits={row.get('bits_histogram')}  " \
+                    f"outlier_layers={row.get('n_outlier_layers')}"
+        print(f"{row['label']:>20}: ppl {row['ppl']:.4f}  "
+              f"avg_bits {row['avg_bits']}{extra}")
+    print(f"best: {doc['best']['label']}  (uniform ppl {doc['uniform']['ppl']:.4f})")
+    print(f"parity: {doc['parity']}  mixed artifact widths: "
+          f"{doc['parity_bits_histogram']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    main()

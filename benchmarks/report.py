@@ -122,7 +122,7 @@ def _load_json(path):
 
 
 _KNOWN_SCHEMAS = {"BENCH_solver.json": (1, 2, 3), "BENCH_serve.json": (1,),
-                  "BENCH_eval.json": (1,)}
+                  "BENCH_eval.json": (1,), "BENCH_tune.json": (1,)}
 
 
 def solver_bench_table(doc):
@@ -204,6 +204,41 @@ def eval_bench_table(doc):
     return "\n".join(lines)
 
 
+def tune_bench_table(doc):
+    uniform = doc.get("uniform", {}) or {}
+    lines = [
+        f"### BENCH_tune (schema {doc.get('schema')}, backend {doc.get('backend')})",
+        "",
+        f"budget **{doc.get('budget_avg_bits', '?')} avg bits/weight** "
+        f"over widths {doc.get('bits_candidates', '?')}; "
+        f"uniform baseline ppl {uniform.get('ppl', '?')}",
+        "",
+        "| candidate | kind | avg bits | ppl | bits histogram | outlier layers |",
+        "|---|---|---|---|---|---|",
+    ]
+    best_label = (doc.get("best") or {}).get("label")
+    for row in doc.get("candidates", []):
+        label = row.get("label", "?")
+        if label == best_label:
+            label = f"**{label}**"
+        lines.append(
+            f"| {label} | {row.get('kind', '?')} | {row.get('avg_bits', '?')} "
+            f"| {row.get('ppl', '?')} | {row.get('bits_histogram', '—')} "
+            f"| {row.get('n_outlier_layers', '—')} |"
+        )
+    par = doc.get("parity")
+    if isinstance(par, dict):
+        lines += [
+            "",
+            f"mixed-artifact parity (widths {doc.get('parity_bits_histogram', '?')}): "
+            f"scorer vs contiguous {par.get('max_abs_diff_contiguous', '?')}, "
+            f"vs paged {par.get('max_abs_diff_paged', '?')} "
+            f"(tol {par.get('tol', '?')}); "
+            f"paged bitwise = {par.get('paged_bitwise_contiguous', '?')}",
+        ]
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="benchmarks/dryrun_results")
@@ -222,6 +257,7 @@ def main():
         ("BENCH_solver.json", solver_bench_table),
         ("BENCH_serve.json", serve_bench_table),
         ("BENCH_eval.json", eval_bench_table),
+        ("BENCH_tune.json", tune_bench_table),
     ):
         doc, prob = _load_json(os.path.normpath(os.path.join(args.bench_dir, name)))
         if doc is None:

@@ -19,6 +19,7 @@ def main() -> None:
         bench_eval,
         bench_serve,
         bench_solver,
+        bench_tune,
         fig2_layer_error,
         fig3_iterations,
         runtime,
@@ -29,7 +30,8 @@ def main() -> None:
 
     fast = os.environ.get("BENCH_FAST", "0") == "1"
     modules = [table123_perplexity, fig2_layer_error, table4_outliers,
-               table5_extreme, runtime, bench_solver, bench_serve, bench_eval]
+               table5_extreme, runtime, bench_solver, bench_serve, bench_eval,
+               bench_tune]
     if not fast:
         modules.insert(2, fig3_iterations)
 

@@ -52,7 +52,7 @@ from repro.quant import (
     quantize_dequantize,
 )
 
-__all__ = ["PTQConfig", "ptq_quantize_model", "QUANTIZABLE"]
+__all__ = ["LayerSpec", "PTQConfig", "ptq_quantize_model", "QUANTIZABLE"]
 
 QUANTIZABLE = {
     "wq", "wk", "wv", "wo", "wq_c", "wk_c", "wv_c", "wo_c",
@@ -69,10 +69,33 @@ _MOE_NAMES = {"w_gate", "w_up", "w_down"}
 # fall back to a per-layer loop inside the same grouped interface.
 _BATCHED_METHODS = {"rtn", "gptq", "quantease"}
 
+# Sentinel distinguishing "inherit from the base config" from an explicit
+# ``None`` (per-channel) group_size in a LayerSpec override.
+_INHERIT = "__inherit__"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Per-layer override of the global PTQConfig (mixed-precision PTQ).
+
+    Any field left at its default inherits the base config; ``group_size``
+    uses the ``_INHERIT`` sentinel because ``None`` is itself a meaningful
+    value (one group spanning the whole row).  Keys into
+    ``PTQConfig.layer_specs`` are solver layer paths — ``"dec.p0.b1/wq"`` —
+    or bare leaf names (``"wq"``) as a fallback matched when no exact path
+    entry exists.
+    """
+
+    bits: Optional[int] = None
+    group_size: object = _INHERIT
+    outlier_frac: Optional[float] = None
+    method: Optional[str] = None
+    iterations: Optional[int] = None
+
 
 @dataclasses.dataclass
 class PTQConfig:
-    method: str = "quantease"  # rtn|gptq|awq|quantease|spqr|qe_outlier|qe_outlier_struct
+    method: str = "quantease"  # rtn|gptq|awq|quantease|awq_qe|spqr|qe_outlier|qe_outlier_struct
     spec: GridSpec = dataclasses.field(default_factory=lambda: GridSpec(bits=4))
     iterations: int = 25
     outlier_frac: float = 0.01  # for outlier-aware methods
@@ -95,6 +118,15 @@ class PTQConfig:
     # operands (fp32 accumulation — the β/quantize path stays fp32).
     use_kernel: str = "auto"
     matmul_dtype: str = "float32"
+    # Mixed-precision: per-layer overrides keyed by solver layer path
+    # ("dec.p0.b1/wq") or bare leaf name ("wq").  Same-shape batching splits
+    # groups by the *effective* per-layer config, so layers assigned
+    # different bits never share a vmapped solve.
+    layer_specs: Optional[dict] = None
+    # Auto-tuning sensitivity signal: when True, each progress_cb record
+    # additionally carries per-layer λ_max(Σ) (power iteration — the IHT
+    # step-size spectrum the tuner ranks on) under "lambda_max".
+    collect_sensitivity: bool = False
 
     def qe_config(self) -> "quantease.QuantEaseConfig":
         """The CD-solver config this PTQ run resolves to (wired end-to-end)."""
@@ -103,6 +135,47 @@ class PTQConfig:
             percdamp=self.percdamp,
             use_kernel=self.use_kernel,
             matmul_dtype=self.matmul_dtype,
+        )
+
+    def for_layer(self, key: str) -> "PTQConfig":
+        """Resolve the effective config for one layer path.
+
+        Exact-path entries win over bare-name fallbacks; a layer with no
+        entry uses the base config unchanged.  The returned config has
+        ``layer_specs=None`` — it is fully resolved.
+        """
+        if not self.layer_specs:
+            return self
+        ov = self.layer_specs.get(key)
+        if ov is None:
+            ov = self.layer_specs.get(key.rsplit("/", 1)[-1])
+        if ov is None:
+            return dataclasses.replace(self, layer_specs=None)
+        spec = dataclasses.replace(
+            self.spec,
+            bits=self.spec.bits if ov.bits is None else ov.bits,
+            group_size=self.spec.group_size
+            if ov.group_size is _INHERIT
+            else ov.group_size,
+        )
+        return dataclasses.replace(
+            self,
+            layer_specs=None,
+            spec=spec,
+            method=self.method if ov.method is None else ov.method,
+            outlier_frac=self.outlier_frac
+            if ov.outlier_frac is None
+            else ov.outlier_frac,
+            iterations=self.iterations
+            if ov.iterations is None
+            else ov.iterations,
+        )
+
+    def _group_key(self) -> tuple:
+        """Hashable identity of everything that changes a grouped solve."""
+        return (
+            self.method, self.spec, self.outlier_frac, self.iterations,
+            self.init_from_gptq,
         )
 
 
@@ -136,6 +209,17 @@ def _quantize_one(w2d: jax.Array, sigma: jax.Array, cfg: PTQConfig):
         )
     if cfg.method == "awq":
         return awq.awq_quantize(w2d, sigma, spec), None, None
+    if cfg.method == "awq_qe":
+        # AWQ auto-alpha rescale pre-pass + QuantEase CD on the scaled
+        # problem (paper §6; the tuner's optional pre-pass).  The effective
+        # weight is off any single uniform grid (column j is rescaled by
+        # 1/s_j), so — like awq/spqr — no grid is returned and emit="qt"
+        # falls back to a re-derived (lossy) grid.
+        w_hat = awq.awq_then_quantease(
+            w2d, sigma, spec,
+            iterations=cfg.iterations, percdamp=cfg.percdamp,
+        )
+        return w_hat, None, None
     if cfg.method == "quantease":
         grid = compute_grid(w2d, spec)
         w_init = None
@@ -381,31 +465,48 @@ def _collect_items(p_blk: dict, stats: dict, scope: str) -> list[_Item]:
 
 
 def _quantize_block(
-    p_blk: dict, stats: dict, scope: str, cfg: PTQConfig, report: dict, mesh
+    p_blk: dict, stats: dict, scope: str, cfg: PTQConfig, report: dict, mesh,
+    sens: Optional[dict] = None,
 ) -> dict:
     """Quantize every captured linear of one block (returns a new dict).
 
-    Items are grouped by solver shape (q, p): each group — e.g. wq/wk/wv
-    sharing d_model inputs, or wg/wu, or the E experts of one MoE matrix —
-    is solved by a single batched call.
+    Items are grouped by (solver shape, effective per-layer config): each
+    group — e.g. wq/wk/wv sharing d_model inputs, or wg/wu, or the E
+    experts of one MoE matrix — is solved by a single batched call.
+    ``cfg.layer_specs`` splits otherwise-identical shapes into separate
+    groups whenever their assigned bits/method/outlier budget differ, so
+    mixed-precision never shares a vmapped solve across specs.
+
+    ``sens``: optional dict filled with per-layer λ_max(Σ) (same keys as
+    ``report``) when ``cfg.collect_sensitivity`` is set.
     """
     items = _collect_items(p_blk, stats, scope)
-    groups: dict[tuple, list[_Item]] = {}
+    groups: dict[tuple, tuple[PTQConfig, list[_Item]]] = {}
     for it in items:
-        groups.setdefault(it.w3.shape[1:], []).append(it)
+        eff = cfg.for_layer(it.key)
+        gk = (it.w3.shape[1:], eff._group_key())
+        groups.setdefault(gk, (eff, []))[1].append(it)
 
     new = dict(p_blk)
-    for shape, group in groups.items():
+    for (shape, _), (eff, group) in groups.items():
         w3 = jnp.concatenate([it.w3 for it in group], axis=0)
         sig3 = jnp.concatenate([it.sig3 for it in group], axis=0)
-        w_hat3, hs, grids = _solve_group(w3, sig3, cfg, mesh)
+        w_hat3, hs, grids = _solve_group(w3, sig3, eff, mesh)
         errs = relative_error(w3, _effective(w_hat3, hs), sig3)
+        if cfg.collect_sensitivity and sens is not None:
+            for it in group:
+                lam = jax.vmap(outlier.power_lambda_max)(it.sig3)
+                if it.moe:
+                    for e in range(it.sig3.shape[0]):
+                        sens[f"{it.key}.e{e}"] = float(lam[e])
+                else:
+                    sens[it.key] = float(lam[0])
         off = 0
         for it in group:
             G = it.w3.shape[0]
             sl = slice(off, off + G)
             _scatter_item(
-                it, w_hat3[sl], hs[sl], errs[sl], new, cfg, report, grids[sl]
+                it, w_hat3[sl], hs[sl], errs[sl], new, eff, report, grids[sl]
             )
             off += G
     return new
@@ -588,8 +689,9 @@ def _quantize_stack(
                             mode="train", pos_ids=pos, enc_out=ec,
                         )
             n_before = len(report)
+            sens: dict[str, float] = {}
             new_blk = _quantize_block(
-                p_period[f"b{i}"], stats, scope, cfg, report, mesh
+                p_period[f"b{i}"], stats, scope, cfg, report, mesh, sens=sens
             )
             new_period[f"b{i}"] = new_blk
             # Recompute this block's outputs with quantized weights — chunked
@@ -607,7 +709,7 @@ def _quantize_stack(
             if progress_cb is not None:
                 new_keys = list(report)[n_before:]
                 errs = [report[k] for k in new_keys]
-                progress_cb({
+                rec = {
                     "stack": stack_name,
                     "period": period,
                     "block": i,
@@ -615,8 +717,17 @@ def _quantize_stack(
                     "total_blocks": n_blocks_total,
                     "n_linears": len(new_keys),
                     "mean_rel_error": float(np.mean(errs)) if errs else 0.0,
+                    # Full-resolution per-layer errors, keyed by layer path.
+                    # The auto-tuner ranks layers on these — never on any
+                    # downstream-rounded aggregate (eval/harness.py rounds
+                    # its reported mean to 6 digits; that rounding must not
+                    # reach the sensitivity signal).
+                    "layer_errors": {k: float(report[k]) for k in new_keys},
                     "seconds": round(time.monotonic() - t0, 3),
-                })
+                }
+                if sens:
+                    rec["lambda_max"] = sens
+                progress_cb(rec)
         quantized_periods.append(new_period)
         if cfg.emit == "fake":
             stack_out = _set_period(stack_out, period, new_period)

@@ -82,8 +82,8 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--out-dir", default="/tmp/repro_quant")
     ap.add_argument("--method", default="quantease",
-                    choices=["rtn", "gptq", "awq", "quantease", "spqr",
-                             "qe_outlier", "qe_outlier_struct"])
+                    choices=["rtn", "gptq", "awq", "quantease", "awq_qe",
+                             "spqr", "qe_outlier", "qe_outlier_struct"])
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--iterations", type=int, default=25)
     ap.add_argument("--outlier-frac", type=float, default=0.01)

@@ -29,7 +29,13 @@ from repro.core.solver import QUANTIZABLE, _MOE_NAMES
 from repro.models import model as M
 from repro.quant import QuantizedTensor
 
-__all__ = ["qt_param_shapes", "qt_param_axes", "quantize_params_for_serving", "qt_rules_extra"]
+__all__ = [
+    "qt_param_shapes",
+    "qt_param_axes",
+    "quantize_params_for_serving",
+    "harmonize_qt_stack",
+    "qt_rules_extra",
+]
 
 
 def _linear_meta(plan: M.ModelPlan, name: str):
@@ -154,12 +160,106 @@ def qt_param_axes(plan: M.ModelPlan):
     return out
 
 
+def _qt_static_meta(qt: QuantizedTensor) -> tuple:
+    """Everything that must agree for a plain leaf-for-leaf stack."""
+    return (
+        qt.bits,
+        qt.group_size,
+        qt.packed,
+        None if qt.outlier_values is None else tuple(qt.outlier_values.shape),
+        None if qt.outlier_col_idx is None else tuple(qt.outlier_col_idx.shape),
+    )
+
+
+def harmonize_qt_stack(leaves: list) -> list:
+    """Normalize per-period QuantizedTensors to one common pytree structure.
+
+    A mixed-precision artifact (per-layer bits from the auto-tuner) breaks
+    the naive per-period stack: ``bits``/``packed`` are *static* pytree
+    fields, so QuantizedTensors at different widths have different treedefs,
+    and COO outlier planes come statically padded to per-layer ``s``.  The
+    serving scan only needs shape/treedef uniformity — the dequant map
+    ``(codes − zero)·scale`` is bits-independent once codes are unpacked —
+    so heterogeneous stacks harmonize losslessly:
+
+      * codes unpack to raw uint8 (``packed=False``; packing is a storage
+        format, the scan slab is unpacked either way on the XLA ref path),
+      * ``bits`` is set to the stack maximum (it only drives unpacking and
+        the bits/weight accounting once ``packed`` is False; every period's
+        codes are < 2^bits of *its own* grid, which the per-period
+        scale/zero encode),
+      * COO outlier planes pad to the stack-max ``s`` with (idx 0, value 0)
+        entries — additive no-ops, the same padding contract the solver
+        emits,
+      * ``group_size`` must agree across the stack (per-period scale/zero
+        column counts are shape-bearing); structured column outliers must
+        be structurally identical (their ``.set`` semantics make padding
+        destructive, so silent harmonization would corrupt column 0).
+
+    Homogeneous stacks pass through untouched (packed 4-bit stays packed).
+    """
+    metas = {_qt_static_meta(l) for l in leaves}
+    if len(metas) == 1:
+        return leaves
+    gsz = {l.group_size for l in leaves}
+    if len(gsz) != 1:
+        raise ValueError(
+            f"heterogeneous group_size across stacked layers ({sorted(map(str, gsz))}) "
+            "— per-period scale planes would not stack"
+        )
+    cols = {_qt_static_meta(l)[4] for l in leaves}
+    if len(cols) != 1:
+        raise ValueError(
+            "structured column outliers must be structurally identical across "
+            "a stack (padding a .set-semantics plane would clobber column 0)"
+        )
+    bits = max(l.bits for l in leaves)
+    s_max = max(
+        (0 if l.outlier_values is None else l.outlier_values.shape[-1])
+        for l in leaves
+    )
+    out = []
+    for l in leaves:
+        codes = l.unpacked_codes()
+        vals, idx = l.outlier_values, l.outlier_idx
+        if s_max:
+            if vals is None:
+                lead = codes.shape[:-2]
+                vals = jnp.zeros(lead + (s_max,), jnp.float16)
+                idx = jnp.zeros(lead + (s_max,), jnp.int32)
+            elif vals.shape[-1] < s_max:
+                pad = [(0, 0)] * (vals.ndim - 1) + [(0, s_max - vals.shape[-1])]
+                vals = jnp.pad(vals, pad)
+                idx = jnp.pad(idx, pad)
+        out.append(
+            dataclasses.replace(
+                l,
+                codes=codes,
+                bits=bits,
+                packed=False,
+                outlier_values=vals,
+                outlier_idx=idx,
+            )
+        )
+    return out
+
+
 def quantize_params_for_serving(plan: M.ModelPlan, params, solver_qt_dec: list):
-    """Restack solver emit='qt' per-period block lists into the scan layout."""
+    """Restack solver emit='qt' per-period block lists into the scan layout.
+
+    Heterogeneous-bits stacks (mixed-precision artifacts) are harmonized
+    leaf-position-wise first — see :func:`harmonize_qt_stack`.
+    """
     stacked = {}
     for key in solver_qt_dec[0]:
-        leaves = [p[key] for p in solver_qt_dec]
-        stacked[key] = jax.tree.map(lambda *ls: jnp.stack(ls), *leaves)
+        blocks = [p[key] for p in solver_qt_dec]
+        new_blk = {}
+        for name in blocks[0]:
+            leaves = [b[name] for b in blocks]
+            if isinstance(leaves[0], QuantizedTensor):
+                leaves = harmonize_qt_stack(leaves)
+            new_blk[name] = jax.tree.map(lambda *ls: jnp.stack(ls), *leaves)
+        stacked[key] = new_blk
     out = dict(params)
     out["dec"] = stacked
     return out

@@ -1,0 +1,44 @@
+"""Accuracy-driven per-layer auto-tuning for whole-model quantization.
+
+The production PTQ question the uniform grid harness can't answer: given a
+global storage budget (average bits per weight, COO outliers priced at 48
+bits each), which layers get 2 bits and which get 8?  This package closes
+the loop end to end:
+
+  * :mod:`repro.tune.sensitivity` — per-layer error tables + λ_max(Σ)
+    probes through the whole-model PTQ driver,
+  * :mod:`repro.tune.allocate` — deterministic greedy marginal-error
+    descent under the budget (prefix semantics: never over budget,
+    monotone in the budget),
+  * :mod:`repro.tune.search` — candidate allocations (uniform baseline
+    always included) re-quantized with ``PTQConfig.layer_specs`` and
+    scored by the eval harness on the restacked *serving* artifact bytes.
+
+``launch/tune.py`` is the resumable CLI; ``benchmarks/bench_tune.py``
+commits the BENCH_tune.json trajectory (auto-tuned mixed precision ≤
+uniform perplexity at equal average bits).
+"""
+
+from repro.tune.allocate import AllocConfig, Allocation, allocate, allocation_layer_specs
+from repro.tune.search import (
+    TuneConfig,
+    build_candidates,
+    evaluate_candidate,
+    quantize_candidate,
+    tune_model,
+)
+from repro.tune.sensitivity import LayerStat, probe_layer_stats
+
+__all__ = [
+    "AllocConfig",
+    "Allocation",
+    "allocate",
+    "allocation_layer_specs",
+    "LayerStat",
+    "probe_layer_stats",
+    "TuneConfig",
+    "build_candidates",
+    "evaluate_candidate",
+    "quantize_candidate",
+    "tune_model",
+]

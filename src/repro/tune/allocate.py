@@ -1,0 +1,198 @@
+"""Budgeted per-layer bit/outlier allocation: greedy marginal-error descent.
+
+Given per-layer probe stats (tune/sensitivity.py) and a global budget in
+**average bits per weight**, choose one (bits, outlier_frac) per layer.
+
+Policy (the layer-wise high-impact allocation of arXiv 2511.17801, with
+CDQuant's greedy coordinate-selection flavor applied at layer granularity):
+
+  1. Every layer starts at the *lowest* candidate width.
+  2. Each layer contributes a chain of **upgrades** (2→3→4→8 bits, plus
+     optional "attach an outlier budget" steps).  An upgrade's *gain* is
+     the probed error reduction, weighted by the chosen policy
+     (``error``: raw relative error × layer size; ``sensitivity``:
+     additionally × λ_max(Σ), the activation-spectrum amplification); its
+     *cost* is the extra storage in bits (Δbits·n, or frac·48·n for COO
+     outliers — 16-bit value + 32-bit flat index, the paper's §5.4
+     accounting).
+  3. Upgrades merge into one deterministic **priority sequence** by gain
+     density (gain/cost), heap-ordered so a layer's chain order is
+     respected; ties break on (layer key, step index) so the sequence —
+     and therefore the allocation — is reproducible bit-for-bit.
+  4. The budget is spent as a **prefix** of that sequence: walk it in
+     order and stop at the first upgrade that no longer fits.
+
+Prefix semantics buy the allocator its contract (tests/test_property.py):
+the sequence itself is budget-independent, so a larger budget takes a
+strictly longer prefix — the allocation **never exceeds the budget**, is
+**deterministic**, and total assigned bits is **monotone non-decreasing in
+the budget**.  (First-fit skipping would occasionally pack the budget
+tighter but breaks monotonicity; the slack left behind is at most one
+upgrade step.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+__all__ = ["AllocConfig", "Allocation", "allocate", "allocation_layer_specs"]
+
+OUTLIER_BITS = 16 + 32  # fp16 value + int32 flat index per COO outlier
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocConfig:
+    budget_avg_bits: float = 3.0
+    bits_candidates: tuple = (2, 3, 4, 8)  # ascending
+    outlier_frac_candidates: tuple = ()  # e.g. (0.01,); each an upgrade step
+    policy: str = "sensitivity"  # "sensitivity" | "error"
+
+    def __post_init__(self):
+        if tuple(sorted(self.bits_candidates)) != tuple(self.bits_candidates):
+            raise ValueError("bits_candidates must be ascending")
+        if not self.bits_candidates:
+            raise ValueError("need at least one bits candidate")
+        if self.policy not in ("sensitivity", "error"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+
+
+@dataclasses.dataclass
+class Allocation:
+    """Result: per-layer choices + accounting."""
+
+    bits: dict  # key -> int
+    outlier_frac: dict  # key -> float (only layers with a budget attached)
+    avg_bits: float  # achieved Σ(bits_l + 48·frac_l)·n_l / Σ n_l
+    budget_avg_bits: float
+    n_upgrades: int
+    trace: list  # applied upgrade labels, in order
+    total_bits: float = 0.0  # Σ assigned storage bits (weights + outliers)
+
+
+def _weight(st, policy: str) -> float:
+    w = float(st.n_weights)
+    if policy == "sensitivity":
+        w *= max(st.lambda_max, 0.0)
+    return w
+
+
+def _upgrade_chains(st, cfg: AllocConfig) -> dict:
+    """This layer's ordered upgrade chains: two independent ladders.
+
+    The bits ladder (2→3→4→8) must apply in order, but attaching a COO
+    outlier budget is additive and valid at any assigned width — keeping it
+    behind the full bits ladder in one chain would make cheap high-gain
+    outlier upgrades unreachable until every width upgrade fits.  Each chain
+    entry is (gain, cost_bits, label, target)."""
+    bits_chain, outl_chain = [], []
+    bc = cfg.bits_candidates
+    w = _weight(st, cfg.policy)
+    for lo, hi in zip(bc[:-1], bc[1:]):
+        if lo not in st.err or hi not in st.err:
+            continue
+        gain = max(float(st.err[lo]) - float(st.err[hi]), 0.0) * w
+        cost = float(hi - lo) * st.n_weights
+        bits_chain.append((gain, cost, f"{st.key}:{lo}->{hi}b", ("bits", hi)))
+    for frac in cfg.outlier_frac_candidates:
+        # Probed at the lowest width (where outliers bite hardest, §5.4);
+        # the COO correction is additive, so the upgrade is valid at any
+        # assigned width — the gain estimate is simply most faithful low.
+        key = (bc[0], frac)
+        if key not in st.err or bc[0] not in st.err:
+            continue
+        gain = max(float(st.err[bc[0]]) - float(st.err[key]), 0.0) * w
+        cost = frac * OUTLIER_BITS * st.n_weights
+        outl_chain.append(
+            (gain, cost, f"{st.key}:+outliers@{frac}", ("outlier", frac))
+        )
+    return {"bits": bits_chain, "outlier": outl_chain}
+
+
+def upgrade_sequence(stats: dict, cfg: AllocConfig) -> list:
+    """The budget-independent priority sequence over all layers.
+
+    Heap-ordered by gain density (desc), chain order preserved per layer,
+    ties broken on (key, step idx) — fully deterministic for a given stats
+    dict (iteration order of ``stats`` does not matter: the heap key is
+    value-based).
+    """
+    chains = {
+        (k, kind): chain
+        for k in sorted(stats)
+        for kind, chain in _upgrade_chains(stats[k], cfg).items()
+    }
+    heap = []  # (-density, chain_key, step_idx, gain, cost, label, target)
+
+    def push(ck, idx):
+        chain = chains[ck]
+        if idx >= len(chain):
+            return
+        gain, cost, label, target = chain[idx]
+        density = gain / cost if cost > 0 else 0.0
+        heapq.heappush(heap, (-density, ck, idx, gain, cost, label, target))
+
+    for ck in chains:
+        push(ck, 0)
+    seq = []
+    while heap:
+        _, ck, idx, gain, cost, label, target = heapq.heappop(heap)
+        seq.append({"key": ck[0], "gain": gain, "cost": cost,
+                    "label": label, "target": target})
+        push(ck, idx + 1)
+    return seq
+
+
+def allocate(stats: dict, cfg: AllocConfig) -> Allocation:
+    """Spend ``budget_avg_bits`` across layers; see module docstring."""
+    total_n = sum(st.n_weights for st in stats.values())
+    if total_n <= 0:
+        raise ValueError("no layers to allocate (empty stats)")
+    base = float(cfg.bits_candidates[0])
+    budget_bits = cfg.budget_avg_bits * total_n
+    used = base * total_n
+    if used > budget_bits + 1e-9:
+        raise ValueError(
+            f"budget {cfg.budget_avg_bits} below the floor width "
+            f"{cfg.bits_candidates[0]}"
+        )
+    bits = {k: cfg.bits_candidates[0] for k in stats}
+    outl: dict[str, float] = {}
+    trace = []
+    for up in upgrade_sequence(stats, cfg):
+        if used + up["cost"] > budget_bits + 1e-9:
+            break  # prefix semantics: stop, never skip-and-continue
+        used += up["cost"]
+        kind, val = up["target"]
+        if kind == "bits":
+            bits[up["key"]] = val
+        else:
+            outl[up["key"]] = val
+        trace.append(up["label"])
+    return Allocation(
+        bits=bits,
+        outlier_frac=outl,
+        avg_bits=used / total_n,
+        budget_avg_bits=cfg.budget_avg_bits,
+        n_upgrades=len(trace),
+        trace=trace,
+        total_bits=used,
+    )
+
+
+def allocation_layer_specs(
+    alloc: Allocation, *, base_method: str = "quantease",
+    outlier_method: str = "qe_outlier",
+) -> dict:
+    """Convert an Allocation into ``PTQConfig.layer_specs`` overrides."""
+    from repro.core.solver import LayerSpec
+
+    specs = {}
+    for key, b in alloc.bits.items():
+        frac = alloc.outlier_frac.get(key)
+        if frac:
+            specs[key] = LayerSpec(bits=b, outlier_frac=frac, method=outlier_method)
+        else:
+            specs[key] = LayerSpec(bits=b, method=base_method)
+    return specs

@@ -1,0 +1,235 @@
+"""Accuracy-driven tuning loop: probe → allocate → re-quantize → eval.
+
+``tune_model`` closes the loop the ROADMAP asks for: candidate per-layer
+allocations (tune/allocate.py, fed by tune/sensitivity.py probes) are
+re-quantized through the whole-model PTQ driver with
+``PTQConfig.layer_specs`` overrides, restacked into the **serving** layout
+(``serve/qparams.py`` — the heterogeneous-bits harmonized artifact), and
+scored with the eval harness's scorer on the eval stream.  The *uniform*
+allocation at the budget width is always one of the candidates, so the
+returned winner is never worse than uniform quantization at equal average
+bits — the eval subsystem acting as the optimizer's objective, not a
+report generator.
+
+Candidate evaluation is resumable at candidate granularity: callers pass
+``start`` (how many candidates a previous run already finished) and a
+``result_cb`` that persists each result as it lands (launch/tune.py writes
+progress.jsonl records and wraps the loop in dist/elastic.RetryingRunner).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.tune.allocate import (
+    AllocConfig,
+    Allocation,
+    allocate,
+    allocation_layer_specs,
+)
+from repro.tune.sensitivity import probe_layer_stats
+
+__all__ = [
+    "TuneConfig",
+    "tune_model",
+    "build_candidates",
+    "quantize_candidate",
+    "evaluate_candidate",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    budget_avg_bits: float = 3.0
+    bits_candidates: tuple = (2, 3, 4, 8)
+    outlier_frac_candidates: tuple = ()  # e.g. (0.01,)
+    policies: tuple = ("sensitivity", "error")
+    method: str = "quantease"  # final-quantize CD method
+    iterations: int = 10  # final-quantize CD iterations
+    awq_prepass: bool = False  # auto-alpha rescale via awq_then_quantease
+    group_size: Optional[int] = None
+    percdamp: float = 0.01
+    n_ppl_batches: int = 2  # eval objective budget per candidate
+    chunk: int = 64  # scorer head chunk
+    probe_outlier_iterations: int = 4
+
+    def uniform_bits(self) -> int:
+        """Widest candidate not exceeding the budget — the uniform baseline
+        at equal average bits."""
+        fits = [b for b in self.bits_candidates if b <= self.budget_avg_bits + 1e-9]
+        if not fits:
+            raise ValueError(
+                f"budget {self.budget_avg_bits} below every candidate width"
+            )
+        return max(fits)
+
+
+def build_candidates(stats: dict, tcfg: TuneConfig) -> list:
+    """Deterministic candidate list; index = resume position.
+
+    Candidate 0 is always the uniform-at-budget baseline.
+    """
+    cands = [{
+        "label": f"uniform@{tcfg.uniform_bits()}b",
+        "kind": "uniform",
+        "bits": tcfg.uniform_bits(),
+    }]
+    for policy in tcfg.policies:
+        acfg = AllocConfig(
+            budget_avg_bits=tcfg.budget_avg_bits,
+            bits_candidates=tcfg.bits_candidates,
+            outlier_frac_candidates=tcfg.outlier_frac_candidates,
+            policy=policy,
+        )
+        alloc = allocate(stats, acfg)
+        cands.append({
+            "label": f"greedy-{policy}",
+            "kind": "mixed",
+            "allocation": alloc,
+        })
+    return cands
+
+
+def quantize_candidate(plan, params, calib, cand: dict, tcfg: TuneConfig):
+    """PTQ one candidate → restacked serving params + layer error report."""
+    from repro.core.solver import PTQConfig, ptq_quantize_model
+    from repro.quant import GridSpec
+    from repro.serve.qparams import quantize_params_for_serving
+
+    method = "awq_qe" if tcfg.awq_prepass else tcfg.method
+    if cand["kind"] == "uniform":
+        cfg = PTQConfig(
+            method=method,
+            spec=GridSpec(bits=cand["bits"], group_size=tcfg.group_size),
+            iterations=tcfg.iterations,
+            percdamp=tcfg.percdamp,
+            emit="qt",
+        )
+    else:
+        alloc: Allocation = cand["allocation"]
+        cfg = PTQConfig(
+            method=method,
+            spec=GridSpec(bits=tcfg.uniform_bits(), group_size=tcfg.group_size),
+            iterations=tcfg.iterations,
+            percdamp=tcfg.percdamp,
+            emit="qt",
+            layer_specs=allocation_layer_specs(alloc, base_method=method),
+        )
+    qp, rep = ptq_quantize_model(plan, params, calib, cfg)
+    return quantize_params_for_serving(plan, params, qp["dec"]), rep
+
+
+def _candidate_avg_bits(cand: dict) -> float:
+    if cand["kind"] == "uniform":
+        return float(cand["bits"])
+    return cand["allocation"].avg_bits
+
+
+def evaluate_candidate(
+    plan, params, calib, batch_fn, cand: dict, tcfg: TuneConfig, *, scorer=None
+) -> dict:
+    """Quantize + score one candidate on the eval stream (serving bytes)."""
+    from repro.eval.scorer import make_scorer, perplexity_on_stream
+
+    qp, rep = quantize_candidate(plan, params, calib, cand, tcfg)
+    scorer = scorer if scorer is not None else make_scorer(plan, chunk=tcfg.chunk)
+    out = perplexity_on_stream(
+        plan, qp, batch_fn, n_batches=tcfg.n_ppl_batches, scorer=scorer
+    )
+    res = {
+        "label": cand["label"],
+        "kind": cand["kind"],
+        "avg_bits": round(_candidate_avg_bits(cand), 4),
+        "ppl": float(out["ppl"]),
+        "nll": float(out["nll"]),
+        "mean_layer_err": float(np.mean(list(rep.values()))),
+    }
+    if cand["kind"] == "mixed":
+        alloc: Allocation = cand["allocation"]
+        hist: dict[int, int] = {}
+        for b in alloc.bits.values():
+            hist[b] = hist.get(b, 0) + 1
+        res["bits_histogram"] = {str(k): v for k, v in sorted(hist.items())}
+        res["n_outlier_layers"] = len(alloc.outlier_frac)
+        res["n_upgrades"] = alloc.n_upgrades
+    return res
+
+
+def tune_model(
+    plan,
+    params,
+    calib: list,
+    batch_fn,
+    tcfg: TuneConfig,
+    *,
+    stats: Optional[dict] = None,
+    prior_results: Optional[list] = None,
+    result_cb: Optional[Callable[[dict], None]] = None,
+    runner_factory: Optional[Callable] = None,
+    progress_cb: Optional[Callable[[dict], None]] = None,
+) -> dict:
+    """The full loop; returns the tuning document (see bench_tune schema).
+
+    ``stats``: pre-computed probe stats (skips probing — the resume path).
+    ``prior_results``: per-candidate results already finished by a previous
+    run; evaluation resumes after them.  ``result_cb`` fires once per newly
+    evaluated candidate (persistence hook).  ``runner_factory(step_fn,
+    restore_fn)`` may wrap candidate evaluation in a crash-recovery runner
+    (dist/elastic.RetryingRunner signature); default runs the plain loop.
+    """
+    from repro.eval.scorer import make_scorer
+
+    if stats is None:
+        outlier_cells = tuple(
+            (tcfg.bits_candidates[0], f) for f in tcfg.outlier_frac_candidates
+        )
+        stats = probe_layer_stats(
+            plan, params, calib,
+            bits_candidates=tcfg.bits_candidates,
+            outlier_cells=outlier_cells,
+            outlier_iterations=tcfg.probe_outlier_iterations,
+            progress_cb=progress_cb,
+        )
+    cands = build_candidates(stats, tcfg)
+    results = list(prior_results or [])
+    start = len(results)
+    scorer = make_scorer(plan, chunk=tcfg.chunk)
+
+    def step_fn(state, i):
+        res = evaluate_candidate(
+            plan, params, calib, batch_fn, cands[i], tcfg, scorer=scorer
+        )
+        state.append(res)
+        if result_cb:
+            result_cb(res)
+        if progress_cb:
+            progress_cb({"candidate": res["label"], "ppl": res["ppl"]})
+        return state
+
+    if runner_factory is not None:
+        def restore_fn():
+            # Crash mid-candidate: nothing partial persisted — retry it.
+            return results, len(results)
+
+        runner = runner_factory(step_fn, restore_fn)
+        results, _ = runner.run(results, start, len(cands) - start)
+    else:
+        for i in range(start, len(cands)):
+            results = step_fn(results, i)
+
+    uniform = next(r for r in results if r["kind"] == "uniform")
+    best = min(results, key=lambda r: (r["ppl"], r["label"]))
+    return {
+        "budget_avg_bits": tcfg.budget_avg_bits,
+        "bits_candidates": list(tcfg.bits_candidates),
+        "outlier_frac_candidates": list(tcfg.outlier_frac_candidates),
+        "method": "awq_qe" if tcfg.awq_prepass else tcfg.method,
+        "iterations": tcfg.iterations,
+        "n_layers": len(stats),
+        "candidates": results,
+        "uniform": uniform,
+        "best": best,
+    }

@@ -1,0 +1,151 @@
+"""Per-layer sensitivity probing for the mixed-precision auto-tuner.
+
+The allocator (tune/allocate.py) needs, per quantizable layer:
+
+  * an **error table** — the layer's reconstruction error at each candidate
+    bit-width (and, optionally, with an outlier budget attached), measured
+    on the calibration stream with error propagation across blocks exactly
+    as the production solve will see it,
+  * a **sensitivity weight** — λ_max of the layer's calibration Gram Σ
+    (``core/outlier.py:power_lambda_max``; the top of the activation
+    spectrum, i.e. how strongly this layer's weight error is amplified into
+    activation error — the high-impact signal of arXiv 2511.17801's
+    layer-wise allocation),
+  * its **size** (number of weights) — the budget denominator.
+
+All three come out of cheap probe passes through the whole-model PTQ driver
+itself (``core/solver.py``): one RTN pass per candidate bit-width (RTN needs
+no CD iterations; its per-layer relative error orders layers the same way
+the full solve does, and the driver's quantized-prefix error propagation is
+identical), with λ_max collected on the first pass via
+``PTQConfig.collect_sensitivity``.  Per-layer errors arrive **unrounded**
+through the solver's ``progress_cb`` ``layer_errors`` records — never
+through any downstream-rounded report aggregate.
+
+MoE leaves probe per expert (the solver reports ``…/w_up.e{i}``) but
+allocate per *leaf*: one (bits, outlier) choice per parameter tensor, the
+same granularity ``PTQConfig.layer_specs`` overrides at.  Expert stats
+aggregate by mean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["LayerStat", "probe_layer_stats"]
+
+_EXPERT_RE = re.compile(r"\.e\d+$")
+
+
+@dataclasses.dataclass
+class LayerStat:
+    """Probe summary for one quantizable leaf (solver layer path key)."""
+
+    key: str  # e.g. "dec.p0.b1/wq" — PTQConfig.layer_specs granularity
+    n_weights: int  # q·p (×E for MoE leaves: budget counts every expert)
+    lambda_max: float  # λ_max(Σ), power iteration; MoE: mean over experts
+    err: dict = dataclasses.field(default_factory=dict)
+    # err[bits]          -> relative reconstruction error at that width
+    # err[(bits, frac)]  -> with an outlier budget attached (optional probes)
+
+
+def _leaf_key(report_key: str) -> str:
+    """Collapse per-expert report keys onto their leaf path."""
+    return _EXPERT_RE.sub("", report_key)
+
+
+def _leaf_sizes(plan, params) -> dict:
+    """n_weights per quantizable leaf path, from the dense param tree."""
+    from repro.core.solver import QUANTIZABLE
+
+    cfg = plan.cfg
+    sizes: dict[str, int] = {}
+
+    def walk(stack, pattern, n_periods, stack_name):
+        for i, _b in enumerate(pattern):
+            blk = stack[f"b{i}"]
+            for name, leaf in blk.items():
+                if name not in QUANTIZABLE or not hasattr(leaf, "shape"):
+                    continue
+                # stacked leading period axis
+                per_period = int(np.prod(leaf.shape)) // n_periods
+                for period in range(n_periods):
+                    sizes[f"{stack_name}.p{period}.b{i}/{name}"] = per_period
+
+    walk(params["dec"], cfg.pattern, cfg.n_periods, "dec")
+    if "enc" in params and getattr(cfg, "n_enc_periods", 0):
+        walk(params["enc"], cfg.enc_pattern, cfg.n_enc_periods, "enc")
+    return sizes
+
+
+def probe_layer_stats(
+    plan,
+    params,
+    calib: list,
+    *,
+    bits_candidates: tuple = (2, 3, 4, 8),
+    outlier_cells: tuple = (),  # ((bits, frac), ...) optional extra probes
+    outlier_iterations: int = 4,
+    progress_cb=None,
+) -> dict:
+    """Run the probe passes; returns ``{leaf_key: LayerStat}``.
+
+    ``outlier_cells`` adds qe_outlier probes (these do run CD iterations —
+    keep the list short; the default allocator only needs them when outlier
+    upgrades are enabled).
+    """
+    from repro.core.solver import PTQConfig, ptq_quantize_model
+    from repro.quant import GridSpec
+
+    stats: dict[str, LayerStat] = {}
+    sizes = _leaf_sizes(plan, params)
+
+    def fold(records: list, label):
+        errs: dict[str, list] = {}
+        lams: dict[str, list] = {}
+        for rec in records:
+            for k, v in rec.get("layer_errors", {}).items():
+                errs.setdefault(_leaf_key(k), []).append(v)
+            for k, v in rec.get("lambda_max", {}).items():
+                lams.setdefault(_leaf_key(k), []).append(v)
+        for k, vs in errs.items():
+            st = stats.get(k)
+            if st is None:
+                st = stats[k] = LayerStat(
+                    key=k, n_weights=sizes.get(k, 0), lambda_max=0.0
+                )
+            st.err[label] = float(np.mean(vs))
+        for k, vs in lams.items():
+            if k in stats:
+                stats[k].lambda_max = float(np.mean(vs))
+
+    for j, bits in enumerate(bits_candidates):
+        records: list = []
+        cfg = PTQConfig(
+            method="rtn",
+            spec=GridSpec(bits=bits),
+            collect_sensitivity=(j == 0),  # λ_max is bits-independent
+        )
+        ptq_quantize_model(plan, params, calib, cfg, progress_cb=records.append)
+        fold(records, bits)
+        if progress_cb:
+            progress_cb({"probe": f"rtn@{bits}", "layers": len(stats)})
+
+    for bits, frac in outlier_cells:
+        records = []
+        cfg = PTQConfig(
+            method="qe_outlier",
+            spec=GridSpec(bits=bits),
+            outlier_frac=frac,
+            iterations=outlier_iterations,
+        )
+        ptq_quantize_model(plan, params, calib, cfg, progress_cb=records.append)
+        fold(records, (bits, frac))
+        if progress_cb:
+            progress_cb({"probe": f"qe_outlier@{bits}/f{frac}", "layers": len(stats)})
+
+    return stats

@@ -321,7 +321,7 @@ def _run_report(bench_dir):
 def test_report_survives_missing_artifacts(tmp_path):
     r = _run_report(tmp_path)
     assert r.returncode == 0, r.stderr
-    assert r.stdout.count("missing — regenerate") == 3
+    assert r.stdout.count("missing — regenerate") == 4
 
 
 def test_report_survives_unknown_schema_and_garbage(tmp_path):
@@ -333,8 +333,14 @@ def test_report_survives_unknown_schema_and_garbage(tmp_path):
         {"schema": 1, "backend": "cpu", "dense": {"ppl": 1.0},
          "grid": [{"method": "rtn", "bits": 4}], "parity": None}
     ))
+    (tmp_path / "BENCH_tune.json").write_text(json.dumps(
+        {"schema": 1, "backend": "cpu", "budget_avg_bits": 3.0,
+         "candidates": [{"label": "uniform@3b", "kind": "uniform"}],
+         "best": {"label": "uniform@3b"}, "parity": None}
+    ))
     r = _run_report(tmp_path)
     assert r.returncode == 0, r.stderr
     assert "unknown schema 42" in r.stdout      # renders best-effort
     assert "unreadable/not JSON" in r.stdout    # garbage noted, not fatal
     assert "| rtn | 4 |" in r.stdout            # partial eval doc renders
+    assert "| **uniform@3b** | uniform |" in r.stdout  # partial tune doc renders

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.solver import PTQConfig, ptq_quantize_model
+from repro.core.solver import LayerSpec, PTQConfig, ptq_quantize_model
 from repro.models import init_cache, init_params, make_plan, prefill, train_loss
 from repro.quant import GridSpec
 from repro.serve.engine import Request, ServingEngine
@@ -70,6 +70,23 @@ def test_moe_per_expert_quantization():
     )
     expert_keys = [k for k in rep if ".e" in k]
     assert len(expert_keys) >= cfg.n_experts  # per-expert entries exist
+    assert bool(jnp.isfinite(train_loss(plan, qp, calib[0])))
+
+
+def test_mixed_precision_fake_quant_end_to_end(small_model):
+    """Bare-name layer_specs: every wq solves at 2 bits, every wd at 8 —
+    the fake-quant model still runs and the split shows in the error report
+    (2-bit wq strictly worse than the 8-bit wd on average)."""
+    plan, params, calib = small_model
+    qp, rep = ptq_quantize_model(
+        plan, params, calib,
+        PTQConfig(method="quantease", spec=GridSpec(bits=4), iterations=4,
+                  layer_specs={"wq": LayerSpec(bits=2),
+                               "wd": LayerSpec(bits=8)}),
+    )
+    wq_err = np.mean([v for k, v in rep.items() if k.endswith("/wq")])
+    wd_err = np.mean([v for k, v in rep.items() if k.endswith("/wd")])
+    assert wq_err > wd_err
     assert bool(jnp.isfinite(train_loss(plan, qp, calib[0])))
 
 

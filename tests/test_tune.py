@@ -1,0 +1,425 @@
+"""Mixed-precision auto-tuning tests: the heterogeneous-bits round-trip
+battery (per-layer QT stacks → harmonized restack → both serving engines),
+solver ``layer_specs`` resolution, the raw per-layer sensitivity signal, and
+the budgeted allocator."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.solver import LayerSpec, PTQConfig, ptq_quantize_model
+from repro.models import init_params, make_plan
+from repro.quant import GridSpec, QuantizedTensor, quantize_tensor
+from repro.quant.pack import pack_codes
+from repro.serve.engine import PagedServingEngine, Request, ServingEngine
+from repro.serve.qparams import harmonize_qt_stack, quantize_params_for_serving
+from repro.tune import (
+    AllocConfig,
+    LayerStat,
+    TuneConfig,
+    allocate,
+    allocation_layer_specs,
+    build_candidates,
+    probe_layer_stats,
+    tune_model,
+)
+from tests.conftest import reduce_cfg
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduce_cfg(get_config("stablelm_12b"), d_model=96, head_dim=24,
+                     d_ff=192, n_periods=3)
+    plan = make_plan(cfg, 1)
+    params = init_params(plan, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    calib = [
+        {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 96)).astype(np.int32))}
+    ]
+    return plan, params, calib
+
+
+# ---------------------------------------------------------------------------
+# harmonize_qt_stack: heterogeneous QT stacks → one treedef, same weights
+# ---------------------------------------------------------------------------
+
+
+def _qt(w, bits, *, outliers=0, group_size=None, packed=False, seed=0):
+    qt = quantize_tensor(jnp.asarray(w), GridSpec(bits=bits, group_size=group_size))
+    if packed:
+        qt = dataclasses.replace(
+            qt, codes=pack_codes(qt.codes, bits), packed=True
+        )
+    if outliers:
+        rng = np.random.default_rng(seed)
+        q, p = w.shape
+        idx = rng.choice(q * p, size=outliers, replace=False).astype(np.int32)
+        vals = rng.standard_normal(outliers).astype(np.float16)
+        qt = dataclasses.replace(
+            qt,
+            outlier_values=jnp.asarray(vals),
+            outlier_idx=jnp.asarray(np.sort(idx)),
+        )
+    return qt
+
+
+def test_harmonize_homogeneous_passthrough():
+    w = np.random.default_rng(1).standard_normal((8, 16)).astype(np.float32)
+    leaves = [_qt(w, 4, packed=True), _qt(w + 1, 4, packed=True)]
+    out = harmonize_qt_stack(leaves)
+    assert out is leaves  # untouched: packed 4-bit stays packed
+
+
+def test_harmonize_mixed_bits_preserves_dequant():
+    rng = np.random.default_rng(2)
+    ws = [rng.standard_normal((8, 16)).astype(np.float32) for _ in range(4)]
+    leaves = [
+        _qt(ws[0], 2),
+        _qt(ws[1], 3, outliers=5, seed=3),
+        _qt(ws[2], 4, packed=True),
+        _qt(ws[3], 8, outliers=2, seed=4),
+    ]
+    before = [np.asarray(l.dequantize()) for l in leaves]
+    out = harmonize_qt_stack(leaves)
+    metas = {(l.bits, l.packed, l.group_size) for l in out}
+    assert metas == {(8, False, None)}  # one treedef: max bits, unpacked
+    s = {l.outlier_values.shape[-1] for l in out}
+    assert s == {5}  # COO planes padded to the stack max
+    for l, b in zip(out, before):
+        np.testing.assert_array_equal(np.asarray(l.dequantize()), b)
+    # and the stack itself now works leaf-for-leaf
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *out)
+    assert stacked.codes.shape == (4, 8, 16)
+
+
+def test_harmonize_rejects_heterogeneous_group_size():
+    w = np.random.default_rng(5).standard_normal((8, 16)).astype(np.float32)
+    with pytest.raises(ValueError, match="group_size"):
+        harmonize_qt_stack([_qt(w, 2, group_size=8), _qt(w, 4)])
+
+
+def test_harmonize_rejects_mismatched_column_outliers():
+    w = np.random.default_rng(6).standard_normal((8, 16)).astype(np.float32)
+    a = _qt(w, 2)
+    b = dataclasses.replace(
+        _qt(w, 4),
+        outlier_col_idx=jnp.asarray([3], jnp.int32),
+        outlier_col_vals=jnp.asarray(w[:, 3:4]),
+    )
+    with pytest.raises(ValueError, match="column outliers"):
+        harmonize_qt_stack([a, b])
+
+
+# ---------------------------------------------------------------------------
+# Round-trip battery: mixed bits through the driver → restack → both engines
+# ---------------------------------------------------------------------------
+
+
+def _mixed_specs(report_keys):
+    """Exact-path specs cycling every candidate width across layers, COO
+    outliers on every fourth — per-period heterogeneity for the same leaf
+    name, the case the naive stack cannot represent."""
+    widths = (2, 3, 4, 8)
+    specs = {}
+    for i, key in enumerate(sorted(report_keys)):
+        b = widths[i % 4]
+        if i % 4 == 3:
+            specs[key] = LayerSpec(bits=b, outlier_frac=0.02, method="qe_outlier")
+        else:
+            specs[key] = LayerSpec(bits=b)
+    return specs
+
+
+@pytest.fixture(scope="module")
+def mixed_artifact(small_model):
+    plan, params, calib = small_model
+    _, probe_rep = ptq_quantize_model(
+        plan, params, calib, PTQConfig(method="rtn", spec=GridSpec(bits=4))
+    )
+    specs = _mixed_specs(probe_rep)
+    qp, rep = ptq_quantize_model(
+        plan, params, calib,
+        PTQConfig(method="quantease", spec=GridSpec(bits=8), iterations=3,
+                  emit="qt", layer_specs=specs),
+    )
+    return plan, params, qp, rep, specs
+
+
+def test_mixed_emit_respects_layer_specs(mixed_artifact):
+    plan, params, qp, rep, specs = mixed_artifact
+    seen_bits = set()
+    for period, blocks in enumerate(qp["dec"]):
+        for bkey, blk in blocks.items():
+            for name, leaf in blk.items():
+                if not isinstance(leaf, QuantizedTensor):
+                    continue
+                key = f"dec.p{period}.{bkey}/{name}"
+                assert leaf.bits == specs[key].bits, key
+                if specs[key].outlier_frac:
+                    assert leaf.outlier_values is not None, key
+                seen_bits.add(leaf.bits)
+    assert seen_bits == {2, 3, 4, 8}
+
+
+def test_mixed_restack_token_identity_and_parity(mixed_artifact):
+    from repro.eval.harness import engine_parity
+
+    plan, params, qp, _, _ = mixed_artifact
+    serving = quantize_params_for_serving(plan, params, qp["dec"])
+
+    # every width lives in one stacked artifact
+    wq = serving["dec"]["b0"]["wq"]
+    assert wq.codes.shape[0] == plan.cfg.n_periods and not wq.packed
+
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, plan.cfg.vocab, n).astype(np.int32)
+               for n in (5, 11, 23)]
+
+    def generate(engine_cls, **kw):
+        eng = engine_cls(plan, serving, max_batch=2, max_seq=96, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=8))
+        return [r.output for r in sorted(eng.run(), key=lambda r: r.rid)]
+
+    contig = generate(ServingEngine, prefill_pad=8)
+    paged = generate(PagedServingEngine, page_size=8, prefill_chunk=16)
+    assert contig == paged  # token identity across engines
+
+    parity = engine_parity(plan, serving, prompts, max_seq=64, page_size=8,
+                           prefill_chunk=16)
+    assert parity["max_abs_diff_contiguous"] <= parity["tol"] == 0.05
+    assert parity["max_abs_diff_paged"] <= parity["tol"]
+    assert parity["paged_bitwise_contiguous"]
+
+
+# ---------------------------------------------------------------------------
+# Solver layer_specs resolution + grouped-solve splitting
+# ---------------------------------------------------------------------------
+
+
+def test_for_layer_resolution_order():
+    base = PTQConfig(
+        method="quantease", spec=GridSpec(bits=4, group_size=16),
+        layer_specs={
+            "dec.p0.b0/wq": LayerSpec(bits=2),
+            "wq": LayerSpec(bits=3, method="rtn"),
+        },
+    )
+    exact = base.for_layer("dec.p0.b0/wq")
+    assert exact.spec.bits == 2 and exact.method == "quantease"
+    assert exact.spec.group_size == 16  # inherited, not clobbered
+    bare = base.for_layer("dec.p2.b0/wq")
+    assert bare.spec.bits == 3 and bare.method == "rtn"
+    none = base.for_layer("dec.p0.b0/wk")
+    assert none.spec.bits == 4 and none.layer_specs is None
+
+
+def test_for_layer_explicit_none_group_size():
+    base = PTQConfig(spec=GridSpec(bits=4, group_size=16),
+                     layer_specs={"wq": LayerSpec(group_size=None)})
+    assert base.for_layer("dec.p0.b0/wq").spec.group_size is None
+
+
+def test_group_key_splits_mixed_groups():
+    a = PTQConfig(spec=GridSpec(bits=4), layer_specs={"wq": LayerSpec(bits=2)})
+    assert (a.for_layer("x/wq")._group_key()
+            != a.for_layer("x/wk")._group_key())
+    assert (a.for_layer("x/wk")._group_key()
+            == a.for_layer("x/wv")._group_key())
+
+
+# ---------------------------------------------------------------------------
+# Raw sensitivity signal: progress layer_errors are never rounded
+# ---------------------------------------------------------------------------
+
+
+def test_progress_layer_errors_full_precision(small_model):
+    plan, params, calib = small_model
+    records = []
+    _, rep = ptq_quantize_model(
+        plan, params, calib,
+        PTQConfig(method="rtn", spec=GridSpec(bits=3)),
+        progress_cb=records.append,
+    )
+    errs = {}
+    for rec in records:
+        errs.update(rec["layer_errors"])
+    assert set(errs) == set(rep)
+    for k, v in errs.items():
+        assert v == float(rep[k])  # bit-exact, straight from the solve
+    # the regression this pins: eval/harness's *display* aggregate rounds to
+    # 6 digits; the tuner's signal must not go through that path
+    assert any(v != round(v, 6) for v in errs.values())
+
+
+def test_collect_sensitivity_lambda_max(small_model):
+    plan, params, calib = small_model
+    records = []
+    ptq_quantize_model(
+        plan, params, calib,
+        PTQConfig(method="rtn", spec=GridSpec(bits=4), collect_sensitivity=True),
+        progress_cb=records.append,
+    )
+    lams = {}
+    for rec in records:
+        lams.update(rec.get("lambda_max", {}))
+    assert lams and all(v > 0 for v in lams.values())
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+
+def _stats(rows):
+    """rows: (key, n, lam, {bits_or_cell: err})"""
+    return {k: LayerStat(key=k, n_weights=n, lambda_max=lam, err=dict(errs))
+            for k, n, lam, errs in rows}
+
+
+def test_allocate_prefers_high_gain_density():
+    # A's 2→3 upgrade removes 10× the error of B's at the same cost.
+    stats = _stats([
+        ("A", 100, 1.0, {2: 1.0, 3: 0.0, 4: 0.0}),
+        ("B", 100, 1.0, {2: 0.1, 3: 0.0, 4: 0.0}),
+    ])
+    cfg = AllocConfig(budget_avg_bits=2.5, bits_candidates=(2, 3, 4),
+                      policy="error")
+    alloc = allocate(stats, cfg)
+    assert alloc.bits == {"A": 3, "B": 2}
+    assert alloc.avg_bits == 2.5
+
+
+def test_allocate_never_exceeds_floor_or_budget():
+    stats = _stats([("A", 64, 1.0, {2: 1.0, 3: 0.5, 4: 0.1})])
+    with pytest.raises(ValueError, match="floor"):
+        allocate(stats, AllocConfig(budget_avg_bits=1.5, bits_candidates=(2, 3, 4)))
+    alloc = allocate(stats, AllocConfig(budget_avg_bits=3.7,
+                                        bits_candidates=(2, 3, 4)))
+    assert alloc.bits == {"A": 3}  # 4 would cost 4.0 avg — over budget
+    assert alloc.avg_bits <= 3.7
+
+
+def test_allocate_outlier_pricing():
+    # One layer, outliers at 1% remove all remaining error: cost is
+    # 0.01·48 = 0.48 avg bits on top of the floor width.
+    stats = _stats([("A", 1000, 1.0,
+                     {2: 1.0, 3: 0.9, (2, 0.01): 0.0})])
+    cfg = AllocConfig(budget_avg_bits=2.5, bits_candidates=(2, 3),
+                      outlier_frac_candidates=(0.01,), policy="error")
+    alloc = allocate(stats, cfg)
+    assert alloc.outlier_frac == {"A": 0.01}
+    assert alloc.avg_bits == pytest.approx(2.48)
+
+
+def test_allocation_layer_specs_mapping():
+    stats = _stats([
+        ("dec.p0.b0/wq", 64, 1.0, {2: 1.0, 3: 0.0, (2, 0.01): 0.2}),
+        ("dec.p0.b0/wk", 64, 1.0, {2: 0.5, 3: 0.4, (2, 0.01): 0.0}),
+    ])
+    cfg = AllocConfig(budget_avg_bits=3.0, bits_candidates=(2, 3),
+                      outlier_frac_candidates=(0.01,), policy="error")
+    specs = allocation_layer_specs(allocate(stats, cfg))
+    assert set(specs) == set(stats)
+    for sp in specs.values():
+        assert (sp.method == "qe_outlier") == (sp.outlier_frac is not None)
+
+
+def test_sensitivity_policy_uses_lambda_max():
+    # Identical error tables; only λ_max separates the layers.  Budget fits
+    # exactly one upgrade: the sensitivity policy must take the hot layer.
+    rows = {2: 1.0, 3: 0.0}
+    stats = _stats([("cold", 100, 0.1, rows), ("hot", 100, 5.0, rows)])
+    cfg = AllocConfig(budget_avg_bits=2.5, bits_candidates=(2, 3),
+                      policy="sensitivity")
+    assert allocate(stats, cfg).bits == {"cold": 2, "hot": 3}
+
+
+# ---------------------------------------------------------------------------
+# Probe + search loop on a real (tiny) model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_probe(small_model):
+    plan, params, calib = small_model
+    stats = probe_layer_stats(plan, params, calib, bits_candidates=(2, 4))
+    return plan, params, calib, stats
+
+
+def test_probe_layer_stats_shape(tiny_probe):
+    plan, _, _, stats = tiny_probe
+    assert len(stats) == 21  # 7 linears × 3 periods
+    for st in stats.values():
+        assert st.n_weights > 0 and st.lambda_max > 0
+        assert st.err[2] >= st.err[4]  # wider grid never probes worse here
+
+
+def test_tune_model_uniform_bound_and_resume(tiny_probe):
+    plan, params, calib, stats = tiny_probe
+    rng = np.random.default_rng(9)
+    cfg = plan.cfg
+
+    def batch_fn(i):
+        r = np.random.default_rng(100 + i)
+        return {"tokens": r.integers(0, cfg.vocab, (2, 64)).astype(np.int32)}
+
+    tcfg = TuneConfig(budget_avg_bits=3.0, bits_candidates=(2, 4),
+                      policies=("error",), method="rtn", n_ppl_batches=1,
+                      chunk=32)
+    doc = tune_model(plan, params, calib, batch_fn, tcfg, stats=stats)
+    labels = [c["label"] for c in doc["candidates"]]
+    assert labels[0].startswith("uniform@2b")  # widest ≤ budget is 2 here
+    assert doc["best"]["ppl"] <= doc["uniform"]["ppl"]
+    assert all(c["avg_bits"] <= tcfg.budget_avg_bits + 1e-6
+               for c in doc["candidates"])
+
+    # resume: feed the first result back, only the remainder re-evaluates
+    evaluated = []
+    doc2 = tune_model(plan, params, calib, batch_fn, tcfg, stats=stats,
+                      prior_results=doc["candidates"][:1],
+                      result_cb=lambda r: evaluated.append(r["label"]))
+    assert evaluated == labels[1:]
+    assert [c["label"] for c in doc2["candidates"]] == labels
+
+
+def test_tune_model_retries_through_runner(tiny_probe):
+    from repro.dist.elastic import RetryingRunner
+
+    plan, params, calib, stats = tiny_probe
+    cfg = plan.cfg
+
+    def batch_fn(i):
+        r = np.random.default_rng(200 + i)
+        return {"tokens": r.integers(0, cfg.vocab, (2, 64)).astype(np.int32)}
+
+    tcfg = TuneConfig(budget_avg_bits=2.0, bits_candidates=(2, 4),
+                      policies=("error",), method="rtn", n_ppl_batches=1,
+                      chunk=32)
+    boom = {"armed": True}
+
+    def fault(step):
+        if step == 1 and boom.pop("armed", False):
+            raise RuntimeError("simulated preemption")
+
+    doc = tune_model(
+        plan, params, calib, batch_fn, tcfg, stats=stats,
+        runner_factory=lambda s, r: RetryingRunner(s, r, fault_hook=fault),
+    )
+    assert len(doc["candidates"]) == 2  # crash recovered, loop completed
+
+
+def test_build_candidates_uniform_first():
+    stats = _stats([("A", 64, 1.0, {2: 1.0, 3: 0.5, 4: 0.2})])
+    tcfg = TuneConfig(budget_avg_bits=3.0, bits_candidates=(2, 3, 4),
+                      policies=("error", "sensitivity"))
+    cands = build_candidates(stats, tcfg)
+    assert cands[0]["kind"] == "uniform" and cands[0]["bits"] == 3
+    assert [c["label"] for c in cands[1:]] == ["greedy-error",
+                                               "greedy-sensitivity"]
+    with pytest.raises(ValueError, match="below every candidate"):
+        TuneConfig(budget_avg_bits=1.0).uniform_bits()
