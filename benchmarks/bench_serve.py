@@ -2,29 +2,42 @@
 
 Serves batches of greedy-decode requests on a small random-init decoder
 (serving perf is weight-value independent) and measures, per (scenario,
-engine, kv-dtype) cell:
+engine, kv-dtype, weights) cell:
 
   * **tokens/s** — generated tokens over wall-clock from first submit to
     batch completion (prefill + decode + scheduling, everything included),
   * **TTFT** — per-request time-to-first-token (mean + p90), which is where
     chunked prefill and wider paged admission show up,
   * engine counters: prefill chunks/tokens, prefix-cache hit tokens,
-    preemptions.
+    preemptions,
+  * **bytes/token** — roofline-*predicted* decode KV traffic
+    (roofline/analysis.paged_kv_bytes_per_token at the workload's mean
+    context) next to the *measured* value from the engine's page-read
+    counter (engine.kv_read_bytes), the schema-2 packed-decode story.
 
-The paged and contiguous engines get the **same KV token budget**; the
-contiguous engine spends it on ``budget / max_seq`` whole-sequence slots
-while the paged engine spends it on pages — more concurrent lanes for the
-same memory, which is the paged throughput story (plus prefix-cache prefill
-savings in the shared-prefix scenario).
+Every engine gets the **same KV byte budget** (serve/kv_cache.page_nbytes):
+the contiguous engine spends it on whole-sequence slots; paged engines get
+per-dtype page counts — int8 pages cost less than bf16 and packed int4
+pages cost less again, so the sub-4-bit cells hold more pages, admit wider,
+and preempt less at identical memory.  That is the headline
+``mixed/paged/int4 + q3-outlier weights`` vs ``mixed/paged/bf16 dense``
+comparison: the whole sub-4-bit artifact (3-bit outlier-aware weights,
+int4-packed KV pages) against the bf16 baseline at equal bytes.
 
-Scenarios: ``mixed`` (uniform random prompt lengths — the acceptance
-workload: paged ≥ 1.5× contiguous tokens/s), ``shared_prefix`` (a common
-system prompt + unique tails) and a ``mixed`` int8-KV variant.
+Weights cells: ``dense`` bf16; ``q3_outlier`` — 3-bit RTN with a COO
+outlier correction (the QuantEase Algorithm-3 artifact *layout*; serving
+perf is weight-value independent so RTN stands in for the solver);
+``q4`` — packed 4-bit, run through the roofline weight-layout decision
+(serve/qparams.prepack_params_for_serving; the chosen label is recorded
+per cell).
 
 Emits ``BENCH_serve.json``; ``--smoke`` runs a seconds-scale subset with
 the same schema (CI guards the file shape, not the numbers);
 ``--validate`` checks an existing file and exits non-zero on
-malformed/missing.  Mirrors benchmarks/bench_solver.py conventions.
+malformed/missing — on full (non-smoke) documents it also enforces the
+acceptance ordering: the int4+quantized-weights cell beats the bf16 paged
+baseline on tokens/s with TTFT no worse (5% jitter allowance).
+Mirrors benchmarks/bench_solver.py conventions.
 """
 
 from __future__ import annotations
@@ -35,11 +48,13 @@ import os
 import sys
 import time
 
-SCHEMA = 1
+SCHEMA = 2
 _SERVE_KEYS = {
-    "scenario", "engine", "kv", "max_batch", "kv_budget_tokens", "n_requests",
+    "scenario", "engine", "kv", "weights", "weight_layout", "max_batch",
+    "kv_budget_tokens", "kv_budget_bytes", "n_pages", "n_requests",
     "new_tokens", "wall_s", "tokens_per_s", "ttft_mean_ms", "ttft_p90_ms",
     "prefill_tokens", "prefix_hit_tokens", "preemptions",
+    "kv_bytes_per_token_pred", "kv_bytes_per_token_meas",
 }
 
 
@@ -58,9 +73,71 @@ def _bench_model(smoke: bool):
     plans = {
         "bf16": make_plan(cfg, 1),
         "int8": make_plan(cfg, 1, kv_cache_dtype="int8"),
+        "int4": make_plan(cfg, 1, kv_cache_dtype="int4"),
     }
     params = init_params(plans["bf16"], jax.random.PRNGKey(0))
     return cfg, plans, params
+
+
+def _quantize_weights(plan, params, *, bits, outlier_frac=0.0):
+    """RTN-quantize every QUANTIZABLE dec leaf into the serving QT layout.
+
+    Serving perf is weight-value independent: the bench needs the artifact's
+    *byte layout* — codes (packed two-per-byte at 4 bits), fp32 scale/zero
+    grid, optional COO outlier planes (QuantEase Algorithm-3 structure:
+    fp16 values + flat int32 indices) — not solver quality, so direct
+    per-channel RTN stands in for the PTQ solver.  4-bit artifacts are then
+    run through the roofline weight-layout decision
+    (serve/qparams.prepack_params_for_serving); returns
+    ``(params, layout_label)``.
+    """
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.solver import QUANTIZABLE
+    from repro.quant import GridSpec, quantize_tensor
+    from repro.quant.pack import pack_codes
+    from repro.serve.qparams import _linear_meta, prepack_params_for_serving
+
+    def qt_of(name, leaf):
+        # Dense stacked leaves are (n_periods, in_dims..., out_dims...) with
+        # fused head/ff axes; flatten through the same (out_f, d_in) meta the
+        # serving QT layout uses (qparams._linear_meta / core.solver._to_2d).
+        n_p = leaf.shape[0]
+        out_f, d_in = _linear_meta(plan, name)[:2]
+        w = np.asarray(leaf, np.float32).reshape(n_p, d_in, out_f)
+        w = w.transpose(0, 2, 1)  # (n_periods, out_f, d_in) — serving layout
+        qts = []
+        for i in range(n_p):
+            qt = quantize_tensor(jnp.asarray(w[i]), GridSpec(bits=bits))
+            if outlier_frac:
+                resid = w[i] - np.asarray(qt.dequantize())
+                s = max(1, int(outlier_frac * resid.size))
+                idx = np.argsort(np.abs(resid).ravel())[-s:].astype(np.int32)
+                qt = dc.replace(
+                    qt,
+                    outlier_values=jnp.asarray(resid.ravel()[idx], jnp.float16),
+                    outlier_idx=jnp.asarray(idx),
+                )
+            if bits == 4 and qt.codes.shape[-1] % 2 == 0:
+                qt = dc.replace(qt, codes=pack_codes(qt.codes, 4), packed=True)
+            qts.append(qt)
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *qts)
+
+    out = dict(params)
+    out["dec"] = {
+        key: {
+            name: qt_of(name, leaf) if name in QUANTIZABLE else leaf
+            for name, leaf in blk.items()
+        }
+        for key, blk in params["dec"].items()
+    }
+    out, decisions = prepack_params_for_serving(plan, out)
+    labels = sorted(set(decisions.values())) or ["linear"]
+    return out, "+".join(labels)
 
 
 def _requests(cfg, scenario: str, n: int, max_prompt: int, max_new: int):
@@ -107,16 +184,24 @@ def _lanes(eng):
     return getattr(eng, "lanes", None) or getattr(eng, "slot_req")
 
 
-def _row(scenario, engine_name, kv, eng, reqs, wall, ttfts, budget):
+def _row(scenario, engine_name, kv, weights, layout, eng, reqs, wall, ttfts,
+         budget, budget_bytes, kv_pred):
     import numpy as np
 
     new_tokens = sum(len(r.output) for r in reqs)
+    meas = None
+    if hasattr(eng, "kv_read_bytes") and new_tokens:
+        meas = round(eng.kv_read_bytes() / new_tokens, 1)
     return {
         "scenario": scenario,
         "engine": engine_name,
         "kv": kv,
+        "weights": weights,
+        "weight_layout": layout,
         "max_batch": eng.max_batch,
         "kv_budget_tokens": budget,
+        "kv_budget_bytes": budget_bytes,
+        "n_pages": getattr(eng, "n_pages", 0),
         "n_requests": len(reqs),
         "new_tokens": new_tokens,
         "wall_s": round(wall, 4),
@@ -126,13 +211,17 @@ def _row(scenario, engine_name, kv, eng, reqs, wall, ttfts, budget):
         "prefill_tokens": getattr(eng, "n_prefill_tokens", 0),
         "prefix_hit_tokens": getattr(eng, "n_prefix_hit_tokens", 0),
         "preemptions": getattr(eng, "n_preemptions", 0),
+        "kv_bytes_per_token_pred": kv_pred,
+        "kv_bytes_per_token_meas": meas,
     }
 
 
 def collect(smoke: bool) -> dict:
     import jax
 
+    from repro.roofline.analysis import paged_kv_bytes_per_token
     from repro.serve.engine import PagedServingEngine, ServingEngine
+    from repro.serve.kv_cache import page_nbytes
 
     cfg, plans, params = _bench_model(smoke)
     if smoke:
@@ -140,39 +229,70 @@ def collect(smoke: bool) -> dict:
         contig_batch, paged_batch = 2, 4
         n_req, max_prompt, max_new = 4, 24, 4
     else:
+        # contig_batch=2 sets the shared byte budget at 512 KV tokens — about
+        # 30% of the 16-lane paged working set (~116 bf16-equivalent pages),
+        # so the bf16 pool visibly thrashes while the int4 pool (~3x the
+        # pages at equal bytes) holds nearly the whole workload: the
+        # memory-capacity story the sub-4-bit cells exist for.
         max_seq, page_size, chunk = 256, 16, 64
-        contig_batch, paged_batch = 4, 16
+        contig_batch, paged_batch = 2, 16
         n_req, max_prompt, max_new = 32, 160, 32
-    budget = contig_batch * max_seq  # KV tokens both engines may hold
-    n_pages = 1 + budget // page_size
+    hp = plans["bf16"].heads
+    budget = contig_batch * max_seq  # KV tokens the bf16 baseline may hold
+    # Equal-BYTE budget across kv dtypes: the bf16 pool's allocatable bytes,
+    # re-divided by each dtype's true page cost (serve/kv_cache.page_nbytes)
+    # — cheaper pages ⇒ more pages at identical memory, which is the entire
+    # sub-4-bit serving story.
+    budget_bytes = (budget // page_size) * page_nbytes(
+        page_size, hp.kv_pad, hp.head_dim, cfg.n_periods, "bf16"
+    )
+    n_pages = {
+        kv: 1 + budget_bytes // page_nbytes(
+            page_size, hp.kv_pad, hp.head_dim, cfg.n_periods, kv
+        )
+        for kv in ("bf16", "int8", "int4")
+    }
 
-    def contiguous(plan):
+    q3_params, q3_layout = _quantize_weights(
+        plans["bf16"], params, bits=3, outlier_frac=0.01
+    )
+    q4_params, q4_layout = _quantize_weights(plans["bf16"], params, bits=4)
+    weight_sets = {
+        "dense": (params, "dense"),
+        "q3_outlier": (q3_params, q3_layout),
+        "q4": (q4_params, q4_layout),
+    }
+
+    def contiguous(kv, weights):
         return ServingEngine(
-            plan, params, max_batch=contig_batch, max_seq=max_seq,
-            prefill_pad=chunk,
+            plans[kv], weight_sets[weights][0], max_batch=contig_batch,
+            max_seq=max_seq, prefill_pad=chunk,
         )
 
-    def paged(plan, prefix_cache=True):
+    def paged(kv, weights):
         return PagedServingEngine(
-            plan, params, max_batch=paged_batch, max_seq=max_seq,
-            page_size=page_size, n_pages=n_pages, prefill_chunk=chunk,
-            prefix_cache=prefix_cache,
+            plans[kv], weight_sets[weights][0], max_batch=paged_batch,
+            max_seq=max_seq, page_size=page_size, n_pages=n_pages[kv],
+            prefill_chunk=chunk,
         )
 
     cells = [
-        ("mixed", "contiguous", "bf16", lambda: contiguous(plans["bf16"])),
-        ("mixed", "paged", "bf16", lambda: paged(plans["bf16"])),
-        ("mixed", "paged", "int8", lambda: paged(plans["int8"])),
-        ("shared_prefix", "contiguous", "bf16", lambda: contiguous(plans["bf16"])),
-        ("shared_prefix", "paged", "bf16", lambda: paged(plans["bf16"])),
+        ("mixed", "contiguous", "bf16", "dense"),
+        ("mixed", "paged", "bf16", "dense"),
+        ("mixed", "paged", "int8", "dense"),
+        ("mixed", "paged", "int4", "dense"),
+        ("mixed", "paged", "int4", "q3_outlier"),  # the sub-4-bit headline
+        ("mixed", "paged", "bf16", "q4"),  # roofline-selected weight layout
+        ("shared_prefix", "contiguous", "bf16", "dense"),
+        ("shared_prefix", "paged", "bf16", "dense"),
     ]
     rows = []
-    for scenario, name, kv, mk in cells:
+    for scenario, name, kv, weights in cells:
         import numpy as np
 
         from repro.serve.engine import Request
 
-        eng = mk()
+        eng = contiguous(kv, weights) if name == "contiguous" else paged(kv, weights)
         # Warm every executable on the SAME instance (jit caches live on the
         # engine's jitted closures): prompts long enough to cross chunk and
         # page boundaries, then drain so the engine returns to idle.  Warmup
@@ -190,16 +310,25 @@ def collect(smoke: bool) -> dict:
         eng.finished.clear()
         for attr in ("n_decode_steps", "n_prefills", "n_prefill_chunks",
                      "n_prefill_tokens", "n_prefix_hit_tokens", "n_cow_hits",
-                     "n_guard_copies", "n_preemptions"):
+                     "n_guard_copies", "n_preemptions", "n_kv_page_reads"):
             if hasattr(eng, attr):
                 setattr(eng, attr, 0)
         reqs = _requests(cfg, scenario, n_req, max_prompt, max_new)
+        # Roofline prediction at the workload's mean decode context: prompt
+        # plus half the generation, in pages (the gather reads whole pages).
+        ctx = float(np.mean([len(r.prompt) + max_new / 2 for r in reqs]))
+        kv_pred = round(paged_kv_bytes_per_token(
+            page_size, hp.kv_pad, hp.head_dim, cfg.n_periods,
+            kv_dtype=kv, context_pages=-(-ctx // page_size),
+        ), 1) if name == "paged" else None
         wall, ttfts = _drive(eng, reqs)
-        rows.append(_row(scenario, name, kv, eng, reqs, wall, ttfts, budget))
-    by = {(r["scenario"], r["engine"], r["kv"]): r for r in rows}
+        rows.append(_row(scenario, name, kv, weights,
+                         weight_sets[weights][1], eng, reqs, wall, ttfts,
+                         budget, budget_bytes, kv_pred))
+    by = {(r["scenario"], r["engine"], r["kv"], r["weights"]): r for r in rows}
     for r in rows:
         if r["engine"] == "paged":
-            base = by.get((r["scenario"], "contiguous", "bf16"))
+            base = by.get((r["scenario"], "contiguous", "bf16", "dense"))
             if base:
                 r["speedup_vs_contiguous"] = round(
                     r["tokens_per_s"] / base["tokens_per_s"], 2
@@ -236,6 +365,32 @@ def validate(path: str) -> list[str]:
     engines = {r.get("engine") for r in rows}
     if not {"contiguous", "paged"} <= engines:
         probs.append("serve: needs both contiguous and paged rows")
+    by = {(r.get("scenario"), r.get("engine"), r.get("kv"), r.get("weights")): r
+          for r in rows}
+    if not any(r.get("kv") == "int4" for r in rows):
+        probs.append("serve: missing int4-KV cell")
+    if not any(r.get("weights") not in (None, "dense") for r in rows):
+        probs.append("serve: missing packed-weight cell")
+    if not doc.get("smoke"):
+        # Acceptance ordering on the committed full trajectory: the whole
+        # sub-4-bit artifact beats the bf16 paged baseline on tokens/s at
+        # equal KV bytes, with TTFT no worse (5% timer-jitter allowance).
+        base = by.get(("mixed", "paged", "bf16", "dense"))
+        head = by.get(("mixed", "paged", "int4", "q3_outlier"))
+        if base is None or head is None:
+            probs.append("serve: missing mixed/paged bf16-dense or "
+                         "int4-q3_outlier cell")
+        else:
+            if head["tokens_per_s"] < base["tokens_per_s"]:
+                probs.append(
+                    f"int4+q3_outlier tokens/s ({head['tokens_per_s']}) below "
+                    f"bf16 paged baseline ({base['tokens_per_s']})"
+                )
+            if head["ttft_mean_ms"] > 1.05 * base["ttft_mean_ms"]:
+                probs.append(
+                    f"int4+q3_outlier ttft ({head['ttft_mean_ms']}ms) worse "
+                    f"than bf16 baseline ({base['ttft_mean_ms']}ms)"
+                )
     return probs
 
 
@@ -283,11 +438,18 @@ def main():
             if "speedup_vs_contiguous" in row
             else ""
         )
+        bpt = (
+            f", kv B/tok {row['kv_bytes_per_token_pred']} pred"
+            f" / {row['kv_bytes_per_token_meas']} meas"
+            if row["kv_bytes_per_token_pred"] is not None
+            else ""
+        )
         print(
-            f"{row['scenario']:>14} {row['engine']:>10} {row['kv']}: "
+            f"{row['scenario']:>14} {row['engine']:>10} {row['kv']}"
+            f"/{row['weights']}[{row['weight_layout']}]: "
             f"{row['tokens_per_s']} tok/s, ttft {row['ttft_mean_ms']}ms "
             f"(p90 {row['ttft_p90_ms']}ms), prefill {row['prefill_tokens']} tok, "
-            f"prefix-hit {row['prefix_hit_tokens']}{extra}"
+            f"prefix-hit {row['prefix_hit_tokens']}{bpt}{extra}"
         )
     print(f"wrote {args.out}")
 

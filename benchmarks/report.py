@@ -121,7 +121,7 @@ def _load_json(path):
         return None, f"unreadable/not JSON ({e})"
 
 
-_KNOWN_SCHEMAS = {"BENCH_solver.json": (1, 2, 3), "BENCH_serve.json": (1,),
+_KNOWN_SCHEMAS = {"BENCH_solver.json": (1, 2, 3), "BENCH_serve.json": (1, 2),
                   "BENCH_eval.json": (1,), "BENCH_tune.json": (1,)}
 
 
@@ -153,20 +153,40 @@ def solver_bench_table(doc):
 
 
 def serve_bench_table(doc):
+    schema = doc.get("schema")
     lines = [
-        f"### BENCH_serve (schema {doc.get('schema')}, backend {doc.get('backend')})",
+        f"### BENCH_serve (schema {schema}, backend {doc.get('backend')})",
         "",
-        "| scenario | engine | kv | batch | tok/s | speedup | ttft mean | ttft p90 | prefix-hit tok | preempt |",
-        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    if schema == 1:
+        # Pre-upgrade artifact: no weights/layout dimension, no KV-traffic
+        # columns — render the old shape and say why the new ones are absent.
+        lines.append(
+            "_schema-1 artifact (pre packed-decode upgrade): no weights/"
+            "layout cells or bytes/token columns — regenerate with "
+            "benchmarks/bench_serve.py for the full table_"
+        )
+        lines.append("")
+    lines += [
+        "| scenario | engine | kv | weights | layout | batch | tok/s | speedup "
+        "| ttft mean | ttft p90 | kv B/tok pred | kv B/tok meas | prefix-hit tok | preempt |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for row in doc.get("serve", []):
         sp = row.get("speedup_vs_contiguous")
+        fmt = lambda v: "—" if v is None else v
         lines.append(
-            "| {sc} | {en} | {kv} | {mb} | {t} | {sp} | {tm}ms | {tp}ms | {ph} | {pe} |".format(
+            "| {sc} | {en} | {kv} | {w} | {ly} | {mb} | {t} | {sp} | {tm}ms | {tp}ms "
+            "| {bp} | {bm} | {ph} | {pe} |".format(
                 sc=row.get("scenario"), en=row.get("engine"), kv=row.get("kv"),
+                w=row.get("weights", "dense"),
+                ly=row.get("weight_layout", "—"),
                 mb=row.get("max_batch"), t=row.get("tokens_per_s", "?"),
                 sp=f"{sp}x" if sp else "—", tm=row.get("ttft_mean_ms", "?"),
-                tp=row.get("ttft_p90_ms", "?"), ph=row.get("prefix_hit_tokens", "?"),
+                tp=row.get("ttft_p90_ms", "?"),
+                bp=fmt(row.get("kv_bytes_per_token_pred")),
+                bm=fmt(row.get("kv_bytes_per_token_meas")),
+                ph=row.get("prefix_hit_tokens", "?"),
                 pe=row.get("preemptions", "?"),
             )
         )

@@ -225,16 +225,32 @@ def engine_parity(
 
 
 def quantized_parity(
-    plan, params, calib, prompts, *, cell=None, iterations: int = 6, **kw
+    plan, params, calib, prompts, *, cell=None, iterations: int = 6,
+    prepack_backend=None, **kw
 ) -> dict:
     """Quantize one grid cell (default: quantease 4-bit, ``emit="qt"``) and
     run :func:`engine_parity` on the resulting serving artifact — the
     issue-level claim is parity on the *quantized* checkpoint, i.e. that
-    the quality numbers describe the bytes serving executes."""
+    the quality numbers describe the bytes serving executes.
+
+    ``prepack_backend`` additionally pushes the artifact through the
+    roofline weight-layout decision (serve/qparams.
+    prepack_params_for_serving) for that backend before serving, so the
+    parity bridge holds on the *packed* bytes — pass ``"tpu"`` to force the
+    tile-native reorder even when the test host serves through the XLA ref
+    path (which un-permutes exactly; DESIGN.md §Packed-serving)."""
     cell = cell or {"method": "quantease", "bits": 4}
     qp, _ = _quantize_cell(plan, params, calib, cell, iterations=iterations,
                            emit="qt")
-    out = engine_parity(plan, qp, prompts, **kw)
+    out = {}
+    if prepack_backend is not None:
+        from repro.serve.qparams import prepack_params_for_serving
+
+        qp, decisions = prepack_params_for_serving(
+            plan, qp, backend=prepack_backend
+        )
+        out["pack_layouts"] = sorted(set(decisions.values()))
+    out.update(engine_parity(plan, qp, prompts, **kw))
     out["cell"] = f"{cell['method']}@{cell['bits']}"
     return out
 

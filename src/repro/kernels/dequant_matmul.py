@@ -37,7 +37,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dequant_matmul_pallas"]
+__all__ = ["dequant_matmul_pallas", "select_tile_k"]
+
+
+def select_tile_k(p: int, group_size=None, tk: int = 512):
+    """The k-tile the kernel will run for a (·, p) GEMM — the same snapping
+    :func:`dequant_matmul_pallas` applies, exposed so the pack-time layout
+    decision (serve/qparams.py + roofline/analysis.py) can prepack codes
+    into exactly the tile the kernel reads."""
+    tk = min(tk, p)
+    gsz = group_size if group_size else p
+    if group_size and p // gsz > 1:
+        if tk >= gsz:
+            tk = (tk // gsz) * gsz
+        elif gsz % tk:
+            tk = gsz
+    return tk
 
 
 def _dequant_matmul_kernel(
@@ -49,6 +64,7 @@ def _dequant_matmul_kernel(
     *,
     n_k: int,
     packed4: bool,
+    tile_native: bool,
     expand: int,
 ):
     @pl.when(pl.program_id(2) == 0)
@@ -59,8 +75,15 @@ def _dequant_matmul_kernel(
     if packed4:
         lo = codes & 0xF
         hi = codes >> 4
-        # Interleave back to (TQ, TK): packed byte b holds codes (2b, 2b+1).
-        codes = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0], -1)
+        if tile_native:
+            # Prepacked plane-wise tile (pack.prepack_codes): lo nibbles are
+            # the tile's first TK/2 columns, hi nibbles the rest — natural
+            # column order falls out of a concat, no lane interleave.
+            codes = jnp.concatenate([lo, hi], axis=-1)
+        else:
+            # Linear layout: packed byte b holds codes (2b, 2b+1) —
+            # interleave back to (TQ, TK).
+            codes = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0], -1)
     scale = scale_ref[...]
     zero = zero_ref[...]
     if expand > 1:
@@ -74,7 +97,8 @@ def _dequant_matmul_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("tm", "tq", "tk", "packed4", "out_dtype", "interpret"),
+    static_argnames=("tm", "tq", "tk", "packed4", "pack_layout", "out_dtype",
+                     "interpret"),
 )
 def dequant_matmul_pallas(
     x: jax.Array,  # (m, p)
@@ -86,6 +110,7 @@ def dequant_matmul_pallas(
     tq: int = 128,
     tk: int = 512,
     packed4: bool = False,
+    pack_layout: str = "linear",
     out_dtype=jnp.float32,
     interpret: bool = True,
 ) -> jax.Array:
@@ -100,13 +125,26 @@ def dequant_matmul_pallas(
         raise ValueError("grouped Pallas GEMM requires uniform groups")
     tm = min(tm, m)
     tq = min(tq, q)
-    tk = min(tk, p)
-    if n_groups > 1:
-        # Snap tk so each k-tile covers whole groups or sits inside one.
-        if tk >= gsz:
-            tk = (tk // gsz) * gsz
-        elif gsz % tk:
-            tk = gsz
+    tile_native = pack_layout == "tile"
+    if tile_native:
+        # Prepacked codes are committed to the caller's k-tile: consuming
+        # them at any other tk would permute columns mid-tile.  The pack
+        # decision (select_tile_k) guarantees divisibility and group fit.
+        if not packed4:
+            raise ValueError("pack_layout='tile' requires packed4 codes")
+        if p % tk or (tk % gsz and gsz % tk):
+            raise ValueError(
+                f"tile-native layout needs p % tk == 0 and group-compatible "
+                f"tk (p={p}, tk={tk}, group_size={gsz})"
+            )
+    else:
+        tk = min(tk, p)
+        if n_groups > 1:
+            # Snap tk so each k-tile covers whole groups or sits inside one.
+            if tk >= gsz:
+                tk = (tk // gsz) * gsz
+            elif gsz % tk:
+                tk = gsz
 
     pad_m, pad_q, pad_k = (-m) % tm, (-q) % tq, (-p) % tk
     if pad_m or pad_k:
@@ -139,7 +177,8 @@ def dequant_matmul_pallas(
         expand = tk
 
     kernel = functools.partial(
-        _dequant_matmul_kernel, n_k=n_k, packed4=packed4, expand=expand
+        _dequant_matmul_kernel, n_k=n_k, packed4=packed4,
+        tile_native=tile_native, expand=expand,
     )
     out = pl.pallas_call(
         kernel,

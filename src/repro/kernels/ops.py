@@ -246,18 +246,20 @@ def quantease_outlier_iteration_t(
 
 def paged_attention_fits_vmem(
     page_size: int, kvp: int, g: int, hd: int, *,
-    kv_bytes: int = 2, quantized: bool = False,
+    kv_bytes: float = 2, quantized: bool = False,
 ) -> bool:
     """VMEM fit gate for the paged-attention kernel.
 
     Resident per program: the double-buffered k/v page blocks (the only
     term that scales with ``page_size``), their fp32 scale planes when the
-    pages are int8, and the fixed per-sequence set (query tile, fp32
-    softmax accumulators, output tile).  Same 12 MB budget/headroom policy
-    as :func:`fused_iteration_tq`; a non-fit must take the XLA gather
+    pages are quantized, and the fixed per-sequence set (query tile, fp32
+    softmax accumulators, output tile).  ``kv_bytes`` is per *element*:
+    2 for bf16, 1 for int8, 0.5 for packed int4 (two codes per stored
+    byte).  Same 12 MB budget/headroom policy as
+    :func:`fused_iteration_tq`; a non-fit must take the XLA gather
     fallback — there is no smaller tile to retry, pages are the tile.
     """
-    pages = 2 * 2 * page_size * kvp * hd * kv_bytes  # k+v, double-buffered
+    pages = int(2 * 2 * page_size * kvp * hd * kv_bytes)  # k+v, double-buffered
     if quantized:
         pages += 2 * 2 * page_size * kvp * 4
     fixed = kvp * g * hd * 4 * 3 + kvp * g * 4 * 2  # q + acc + out, m + l
@@ -278,16 +280,24 @@ def paged_attention(
     for kernel tests (``interpret=True``) and never reaches lowered
     production graphs.
 
-    int8 pages **must** arrive with both scale planes — they are either
-    folded in-kernel or consumed explicitly by the reference; raw int8
+    Quantized pages **must** arrive with both scale planes — they are
+    either folded in-kernel or consumed explicitly by the reference; raw
     codes are never forwarded un-decoded (the grouped-dispatch audit that
-    fixed ``dequant_matmul`` applies here from day one).
+    fixed ``dequant_matmul`` applies here from day one).  int8 pages carry
+    one code per element; **uint8 pages are int4-packed** (two signed
+    codes per byte, fold-in-half layout — quant/pack.kv_pack_int4), halving
+    page HBM traffic again.
     """
     quantized = k_scale_pages is not None
     if (v_scale_pages is None) != (k_scale_pages is None):
         raise ValueError("k_scale_pages and v_scale_pages must be passed together")
     if k_pages.dtype == jnp.int8 and not quantized:
         raise ValueError("int8 KV pages require scale planes (dequant-in-kernel)")
+    kv_packed4 = k_pages.dtype == jnp.uint8
+    if kv_packed4 and not quantized:
+        raise ValueError(
+            "int4-packed KV pages require scale planes (dequant-in-kernel)"
+        )
 
     def reference():
         return ref.paged_attention_ref(
@@ -303,7 +313,9 @@ def paged_attention(
     psz = k_pages.shape[1]
     _, kvp, g, hd = q.shape
     if not paged_attention_fits_vmem(
-        psz, kvp, g, hd, kv_bytes=k_pages.dtype.itemsize, quantized=quantized
+        psz, kvp, g, hd,
+        kv_bytes=0.5 if kv_packed4 else k_pages.dtype.itemsize,
+        quantized=quantized,
     ):
         return reference()
     return paged_attention_pallas(
@@ -314,17 +326,20 @@ def paged_attention(
     )
 
 
-def _unpacked(codes, packed4):
+def _unpacked(codes, packed4, pack_layout="linear", pack_tile=None):
     if not packed4:
         return codes
-    from repro.quant import unpack_codes
+    from repro.quant import unpack_codes, unprepack_codes
 
-    return unpack_codes(codes, 4, codes.shape[-1] * 2)
+    p = codes.shape[-1] * 2
+    if pack_layout == "tile":
+        return unprepack_codes(codes, 4, p, pack_tile)
+    return unpack_codes(codes, 4, p)
 
 
 def dequant_matmul(
     x, codes, scale, zero, *, packed4=False, out_dtype=jnp.bfloat16,
-    interpret=None, group_size=None,
+    interpret=None, group_size=None, pack_layout="linear", pack_tile=None,
 ):
     """Serving GEMM.
 
@@ -342,15 +357,23 @@ def dequant_matmul(
     (QuantizedTensor carries it) whenever the grid was built with one:
     without it a ragged layout is indistinguishable from a uniform
     ceil(p/n_groups) layout and would dequantize with wrong boundaries.
+
+    ``pack_layout="tile"`` marks codes prepacked into the kernel's
+    tile-native order at pack time (quant/pack.prepack_codes with k-tile
+    ``pack_tile``, chosen by the roofline decision in serve/qparams.py):
+    the kernel consumes them at exactly that tk with a contiguous
+    concat-unpack; every fallback path (non-TPU, ragged groups) un-prepacks
+    first, so the layout is transparent to semantics.
     """
     n_groups = scale.shape[1] if scale.ndim > 1 else 1
     p = codes.shape[-1] * (2 if packed4 else 1)
     gsz = group_size if group_size else (-(-p // n_groups) if n_groups > 1 else p)
     uniform = n_groups == 1 or (p % gsz == 0 and p // gsz == n_groups)
+    tiled = packed4 and pack_layout == "tile"
 
     def reference():
         return ref.dequant_matmul_ref(
-            x, _unpacked(codes, packed4), scale, zero,
+            x, _unpacked(codes, packed4, pack_layout, pack_tile), scale, zero,
             out_dtype=out_dtype, group_size=group_size,
         )
 
@@ -358,15 +381,15 @@ def dequant_matmul(
         if not on_tpu():
             return reference()
         interpret = False
+    kw = dict(packed4=packed4, out_dtype=out_dtype, interpret=interpret)
+    if tiled:
+        if p % pack_tile:  # prepack left the ragged tail linear — ref only
+            return reference()
+        kw.update(pack_layout="tile", tk=pack_tile)
     if n_groups > 1:
         if not uniform:  # ragged last group — reference path only
             return reference()
-        return dequant_matmul_pallas(
-            x, codes, scale, zero,
-            packed4=packed4, out_dtype=out_dtype, interpret=interpret,
-        )
+        return dequant_matmul_pallas(x, codes, scale, zero, **kw)
     s = scale.reshape(-1)
     z = zero.reshape(-1)
-    return dequant_matmul_pallas(
-        x, codes, s, z, packed4=packed4, out_dtype=out_dtype, interpret=interpret
-    )
+    return dequant_matmul_pallas(x, codes, s, z, **kw)

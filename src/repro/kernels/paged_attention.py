@@ -15,11 +15,15 @@ against that layout — no contiguous (B, S, ...) cache is ever materialized:
   * online-softmax accumulators (running max / sum / weighted value) live
     in VMEM scratch across the page steps of one sequence; the output is
     written once, at the last page step,
-  * pages may be **bf16 or int8**.  int8 pages carry per-(token, head)
-    fp32 scale planes; the scales fold algebraically after the dot —
-    ``q·(s·k₈) = s·(q·k₈)`` and ``Σ p·(s·v₈) = Σ (p·s)·v₈`` — so the
-    dequantized bf16 page is never materialized and HBM reads stay
-    1 byte/element (dequant-in-kernel),
+  * pages may be **bf16, int8, or int4-packed uint8**.  Quantized pages
+    carry per-(token, head) fp32 scale planes; the scales fold
+    algebraically after the dot — ``q·(s·k₈) = s·(q·k₈)`` and
+    ``Σ p·(s·v₈) = Σ (p·s)·v₈`` — so the dequantized bf16 page is never
+    materialized and HBM reads stay 1 byte/element for int8 and **0.5**
+    for int4.  int4 pages are fold-in-half packed (quant/pack.kv_pack_int4:
+    byte d of a slot holds head-dim elements d and d + hd/2 in its lo/hi
+    nibbles), so the in-kernel unpack is two shift/mask sign-extends and a
+    concatenate along the head dim — no lane interleave,
   * all score/softmax math accumulates in fp32 (`preferred_element_type`);
     only the final output casts back to the query dtype.
 
@@ -57,7 +61,14 @@ def _paged_attn_kernel(
     window: Optional[int],
     attn_softcap: Optional[float],
     quantized: bool,
+    kv_packed4: bool,
 ):
+    def _unpack(page):  # (psz, KVp, hd/2) uint8 → (psz, KVp, hd) f32
+        b32 = page.astype(jnp.int32)
+        lo = ((b32 & 0xF) ^ 8) - 8  # sign-extend 4-bit two's complement
+        hi = ((b32 >> 4) ^ 8) - 8
+        return jnp.concatenate([lo, hi], axis=-1).astype(jnp.float32)
+
     if quantized:
         ks_ref, vs_ref, o_ref, m_s, l_s, acc_s = rest
     else:
@@ -81,7 +92,7 @@ def _paged_attn_kernel(
     @pl.when(j * psz < length)
     def _():
         qv = q_ref[0].astype(jnp.float32)  # (KVp, G, hd)
-        kb = k_ref[0].astype(jnp.float32)  # (psz, KVp, hd)
+        kb = _unpack(k_ref[0]) if kv_packed4 else k_ref[0].astype(jnp.float32)
         s = jnp.einsum(
             "kgd,tkd->kgt", qv, kb, preferred_element_type=jnp.float32
         )  # (KVp, G, psz)
@@ -100,7 +111,7 @@ def _paged_attn_kernel(
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m_s[...] - m_new)
         l_s[...] = l_s[...] * corr + p.sum(-1)
-        vb = v_ref[0].astype(jnp.float32)
+        vb = _unpack(v_ref[0]) if kv_packed4 else v_ref[0].astype(jnp.float32)
         if vs_ref is not None:
             vs = vs_ref[0][:, :, 0]  # (psz, KVp)
             p = p * vs.T[:, None, :]
@@ -118,7 +129,8 @@ def _paged_attn_kernel(
 
 def paged_attention_pallas(
     q: jax.Array,  # (B, KVp, G, hd) — one decode token per sequence
-    k_pages: jax.Array,  # (n_pages, psz, KVp, hd) bf16/f32 or int8
+    k_pages: jax.Array,  # (n_pages, psz, KVp, hd) bf16/f32/int8, or
+    #                      (n_pages, psz, KVp, hd//2) uint8 int4-packed
     v_pages: jax.Array,
     page_table: jax.Array,  # (B, n_pgs) int32 — padded entries → null page
     lengths: jax.Array,  # (B,) int32 — valid tokens per sequence
@@ -134,13 +146,15 @@ def paged_attention_pallas(
     psz = k_pages.shape[1]
     n_pgs = page_table.shape[1]
     quantized = k_scale_pages is not None
+    kv_packed4 = k_pages.dtype == jnp.uint8  # fold-in-half int4 pages
+    page_hd = hd // 2 if kv_packed4 else hd
 
     # Mirror decode_attention's cast discipline: the 1/sqrt(hd) pre-scale is
     # applied in the query dtype, scores accumulate fp32.
     qs = (q * (1.0 / math.sqrt(hd))).astype(q.dtype)
 
     page_spec = pl.BlockSpec(
-        (1, psz, KVp, hd), lambda b, j, pt, ln: (pt[b, j], 0, 0, 0)
+        (1, psz, KVp, page_hd), lambda b, j, pt, ln: (pt[b, j], 0, 0, 0)
     )
     in_specs = [
         pl.BlockSpec((1, KVp, G, hd), lambda b, j, pt, ln: (b, 0, 0, 0)),
@@ -173,6 +187,7 @@ def paged_attention_pallas(
         window=window,
         attn_softcap=attn_softcap,
         quantized=quantized,
+        kv_packed4=kv_packed4,
     )
     return pl.pallas_call(
         kernel,

@@ -130,7 +130,8 @@ def dequant_matmul_ref(
 
 def paged_attention_ref(
     q: jax.Array,  # (B, KVp, G, hd) — one decode token per sequence
-    k_pages: jax.Array,  # (n_pages, psz, KVp, hd) bf16/f32 or int8
+    k_pages: jax.Array,  # (n_pages, psz, KVp, hd) bf16/f32/int8, or
+    #                      (n_pages, psz, KVp, hd//2) uint8 int4-packed
     v_pages: jax.Array,
     page_table: jax.Array,  # (B, n_pgs) int32 — padded entries → null page
     lengths: jax.Array,  # (B,) int32 — valid tokens per sequence
@@ -148,15 +149,24 @@ def paged_attention_ref(
     read over the same KV values is bit-identical to the contiguous read
     *by construction*, which is what makes the engine-level token-identity
     contract hold.  int8 pages are consumed with their scale planes; raw
-    codes never enter the dots un-decoded.
+    codes never enter the dots un-decoded.  uint8 pages are fold-in-half
+    int4-packed (quant/pack.kv_pack_int4, last dim hd/2): unpacked to int8
+    codes after the gather, then consumed exactly like int8 pages.
     """
     from repro.models.common import decode_attention  # the shared semantics
 
     B, KVp, G, hd = q.shape
     psz = k_pages.shape[1]
     S = page_table.shape[1] * psz
-    k = k_pages[page_table].reshape(B, S, KVp, hd)
-    v = v_pages[page_table].reshape(B, S, KVp, hd)
+    k = k_pages[page_table]
+    v = v_pages[page_table]
+    if k_pages.dtype == jnp.uint8:  # int4-packed pages
+        from repro.quant.pack import kv_unpack_int4
+
+        k = kv_unpack_int4(k)
+        v = kv_unpack_int4(v)
+    k = k.reshape(B, S, KVp, hd)
+    v = v.reshape(B, S, KVp, hd)
     ks = vs = None
     if k_scale_pages is not None:
         ks = k_scale_pages[page_table].reshape(B, S, KVp, 1)

@@ -28,7 +28,9 @@ def main():
     ap.add_argument("--n-pages", type=int, default=0,
                     help="KV pool size in pages (0 = ample: no preemption)")
     ap.add_argument("--prefill-chunk", type=int, default=64)
-    ap.add_argument("--kv-dtype", choices=["bf16", "int8"], default="bf16")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8", "int4"], default="bf16",
+                    help="KV cache storage; int4 packs two codes/byte and is "
+                         "paged-engine only")
     args = ap.parse_args()
 
     import jax
@@ -56,6 +58,26 @@ def main():
         print("no checkpoint found — serving random init (demo)")
         params = init_params(plan, jax.random.PRNGKey(0))
 
+    # Roofline-selected weight layout (serve/qparams.py): packed-4-bit
+    # QuantizedTensor leaves may re-permute into the GEMM kernel's
+    # tile-native order.  Dense/bf16 checkpoints pass through untouched.
+    from repro.serve.qparams import prepack_params_for_serving
+
+    params, layout_decisions = prepack_params_for_serving(plan, params)
+    if layout_decisions:
+        labels = sorted(set(layout_decisions.values()))
+        print(f"weight pack layout ({jax.default_backend()}): "
+              + ", ".join(f"{lb} ×{sum(1 for v in layout_decisions.values() if v == lb)}"
+                          for lb in labels))
+    else:
+        print("weight pack layout: linear (no packed 4-bit weight leaves)")
+
+    if args.kv_dtype == "int4" and args.engine != "paged":
+        raise SystemExit(
+            "--kv-dtype int4 requires --engine paged: int4 KV lives in packed "
+            "pages (quant/pack.kv_pack_int4); the contiguous engine supports "
+            "bf16/int8 only"
+        )
     rng = np.random.default_rng(0)
     if args.engine == "paged":
         try:  # probe arch support only — config errors must still surface
@@ -63,6 +85,12 @@ def main():
 
             paged_cache_shapes(plan, 2, args.page_size)
         except ValueError as e:  # enc-dec / SSM-hybrid / prefix archs
+            if args.kv_dtype == "int4":
+                # No silent downgrade: the contiguous fallback cannot hold
+                # int4 pages, so the request is unsatisfiable as stated.
+                raise SystemExit(
+                    f"--kv-dtype int4 unavailable for {args.arch}: {e}"
+                )
             print(f"paged engine unavailable for {args.arch} ({e}); "
                   "falling back to the contiguous engine")
             args.engine = "contiguous"

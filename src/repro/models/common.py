@@ -235,6 +235,7 @@ def apply_linear(w, x: jax.Array, out_shape: tuple = (), name: str = None) -> ja
         y2 = kops.dequant_matmul(
             x2, w.codes, w.scale, w.zero, packed4=w.packed and w.bits == 4,
             out_dtype=x.dtype, interpret=None, group_size=w.group_size,
+            pack_layout=w.pack_layout, pack_tile=w.pack_tile,
         )
         if w.outlier_values is not None:
             # Rank-s unstructured COO correction (fp16 values, flat int32

@@ -73,7 +73,10 @@ class ModelPlan:
     axis_n: int  # model-axis size (1 on CPU)
     heads: HeadPlan
     vocab_pad: int
-    kv_cache_dtype: str = "bf16"  # "bf16" | "int8" (§Perf H1 lever)
+    # "bf16" | "int8" | "int4" (§Perf H1 lever).  int4 is paged-engine only:
+    # pages store two codes/byte (quant/pack.kv_pack_int4 fold-in-half) and
+    # the contiguous cache path rejects it.
+    kv_cache_dtype: str = "bf16"
     dispatch_groups: int = 1  # MoE data-local dispatch groups (§Perf H2)
     # Optional per-period param transform (e.g. int8-quantized FSDP gather,
     # dist/qgather.py — §Perf H3); applied inside the scan body so gathered
@@ -335,6 +338,18 @@ def _kv_quantize(x: jax.Array):
     return codes, scale
 
 
+def _kv_quantize4(x: jax.Array):
+    """Per-(token, head) symmetric int4, fold-in-half packed: (…, hd) →
+    packed uint8 (…, hd/2), scale fp32 (…, 1).  Codes live in [-7, 7] so the
+    4-bit two's-complement range is symmetric (−8 unused)."""
+    from repro.quant.pack import kv_pack_int4
+
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), -1, keepdims=True) / 7.0 + 1e-12
+    codes = jnp.clip(jnp.round(x32 / scale), -7, 7).astype(jnp.int8)
+    return kv_pack_int4(codes), scale
+
+
 def _attn_sublayer(
     cfg,
     hp,
@@ -381,9 +396,10 @@ def _attn_sublayer(
             B = q.shape[0]
             pos_b = jnp.broadcast_to(jnp.asarray(decode_pos, jnp.int32), (B,))
             slot = pos_b % psz
-            if kv_dtype == "int8":
-                k8, ks_new = _kv_quantize(k[:, 0])
-                v8, vs_new = _kv_quantize(v[:, 0])
+            if kv_dtype in ("int8", "int4"):
+                quantize = _kv_quantize4 if kv_dtype == "int4" else _kv_quantize
+                k8, ks_new = quantize(k[:, 0])
+                v8, vs_new = quantize(v[:, 0])
                 kc = kc.at[page_write, slot].set(k8)
                 vc = vc.at[page_write, slot].set(v8)
                 ksc = cache["ks"].at[page_write, slot].set(ks_new)
@@ -412,9 +428,10 @@ def _attn_sublayer(
                 pg < row.shape[0], row[jnp.minimum(pg, row.shape[0] - 1)], 0
             )
             slot = pos % psz
-            if kv_dtype == "int8":
-                k8, ks_new = _kv_quantize(k[0])
-                v8, vs_new = _kv_quantize(v[0])
+            if kv_dtype in ("int8", "int4"):
+                quantize = _kv_quantize4 if kv_dtype == "int4" else _kv_quantize
+                k8, ks_new = quantize(k[0])
+                v8, vs_new = quantize(v[0])
                 kc = kc.at[pidx, slot].set(k8)
                 vc = vc.at[pidx, slot].set(v8)
                 ksc = cache["ks"].at[pidx, slot].set(ks_new)
@@ -427,7 +444,12 @@ def _attn_sublayer(
             n_ctx = row.shape[0] * psz
             kctx = kc[row].reshape(1, n_ctx, *kc.shape[2:])
             vctx = vc[row].reshape(1, n_ctx, *vc.shape[2:])
-            if kv_dtype == "int8":
+            if kv_dtype == "int4":
+                from repro.quant.pack import kv_unpack_int4
+
+                kctx = kv_unpack_int4(kctx)
+                vctx = kv_unpack_int4(vctx)
+            if kv_dtype in ("int8", "int4"):
                 ksg = new_cache["ks"][row].reshape(1, n_ctx, -1, 1)
                 vsg = new_cache["vs"][row].reshape(1, n_ctx, -1, 1)
                 kctx = (kctx.astype(jnp.float32) * ksg).astype(q.dtype)
@@ -810,6 +832,12 @@ def _block_cache_shape(plan: ModelPlan, b: BlockDef, B: int, cap: int):
     cfg, hp = plan.cfg, plan.heads
     if b.kind == "attn":
         c = min(cap, b.window) if b.window is not None else cap
+        if plan.kv_cache_dtype == "int4":
+            raise ValueError(
+                "kv_cache_dtype='int4' is paged-engine only (packed pages, "
+                "quant/pack.kv_pack_int4); the contiguous cache supports "
+                "bf16 and int8 — use --engine paged or drop to int8"
+            )
         if plan.kv_cache_dtype == "int8":
             sh = {
                 "k": jax.ShapeDtypeStruct((B, c, hp.kv_pad, hp.head_dim), jnp.int8),
@@ -898,7 +926,9 @@ def paged_cache_shapes(plan: ModelPlan, n_pages: int, page_size: int):
     """ShapeDtypeStruct pytree of the block-paged decode cache.
 
     Per attention layer: ``k``/``v`` pages ``(n_pages, page_size, KVp, hd)``
-    (int8 adds fp32 ``ks``/``vs`` scale planes) with a leading period axis,
+    (int8 adds fp32 ``ks``/``vs`` scale planes; int4 packs two codes/byte —
+    uint8 pages of width ``hd/2`` plus the same scale planes) with a leading
+    period axis,
     exactly like :func:`cache_shapes` — page id ``p`` addresses slot ``p``
     of every layer's array, so page accounting is in shared token slots.
     There is no batch axis: the pool is shared by all sequences; ownership
@@ -915,12 +945,21 @@ def paged_cache_shapes(plan: ModelPlan, n_pages: int, page_size: int):
             )
     if cfg.family == "encdec" or cfg.n_prefix:
         raise ValueError("paged KV serving: decoder-only models only")
-    kdt = jnp.int8 if plan.kv_cache_dtype == "int8" else jnp.bfloat16
-    page = jax.ShapeDtypeStruct(
-        (n_pages, page_size, hp.kv_pad, hp.head_dim), kdt
-    )
+    kv_dt = plan.kv_cache_dtype
+    if kv_dt == "int4":
+        if hp.head_dim % 2:
+            raise ValueError(
+                f"int4 KV pages need an even head dim (fold-in-half packing), "
+                f"got hd={hp.head_dim}"
+            )
+        kdt, page_hd = jnp.uint8, hp.head_dim // 2
+    elif kv_dt == "int8":
+        kdt, page_hd = jnp.int8, hp.head_dim
+    else:
+        kdt, page_hd = jnp.bfloat16, hp.head_dim
+    page = jax.ShapeDtypeStruct((n_pages, page_size, hp.kv_pad, page_hd), kdt)
     sh = {"k": page, "v": page}
-    if plan.kv_cache_dtype == "int8":
+    if kv_dt in ("int8", "int4"):
         sp = jax.ShapeDtypeStruct((n_pages, page_size, hp.kv_pad, 1), jnp.float32)
         sh["ks"] = sp
         sh["vs"] = sp

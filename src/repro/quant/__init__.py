@@ -14,7 +14,16 @@ from repro.quant.grid import (
     dequantize_codes,
     quantize_dequantize,
 )
-from repro.quant.pack import pack_codes, unpack_codes, packed_words_per_row
+from repro.quant.pack import (
+    pack_codes,
+    unpack_codes,
+    packed_words_per_row,
+    tile_native_perm,
+    prepack_codes,
+    unprepack_codes,
+    kv_pack_int4,
+    kv_unpack_int4,
+)
 from repro.quant.qtensor import QuantizedTensor, quantize_tensor, dequantize_tensor
 
 __all__ = [
@@ -28,6 +37,11 @@ __all__ = [
     "pack_codes",
     "unpack_codes",
     "packed_words_per_row",
+    "tile_native_perm",
+    "prepack_codes",
+    "unprepack_codes",
+    "kv_pack_int4",
+    "kv_unpack_int4",
     "QuantizedTensor",
     "quantize_tensor",
     "dequantize_tensor",

@@ -7,14 +7,37 @@ last axis into ``ceil(p * bits / 8)`` bytes, little-endian within each byte
 are handled by the generic bit-blit path (packed 3-bit is a *storage /
 checkpoint* format — the serving kernels consume 2/4/8-bit packed planes or
 raw uint8 codes; see DESIGN.md §3).
+
+Two serving-oriented layouts ride on top of the linear format
+(DESIGN.md §Packed-serving):
+
+* **Tile-native prepack** (:func:`prepack_codes`): within each k-tile of
+  ``tile_k`` columns, the columns are reordered *plane-wise* before packing
+  — byte ``i`` of a 4-bit tile holds columns ``(i, i + tile_k/2)`` in its
+  (lo, hi) nibbles — so the dequant-matmul kernel reconstructs the tile
+  with two shifts and a **concatenate** (contiguous words) instead of the
+  lane-scattering stack/reshape interleave the linear layout forces.  Any
+  ragged tail (``p % tile_k``) stays linear; the transform is a pure column
+  permutation, so dequantization is bit-exact vs the linear layout.
+
+* **Fold-in-half int4 KV packing** (:func:`kv_pack_int4`): the paged KV
+  pages store two signed int4 codes per byte with the *first half* of the
+  head dim in low nibbles and the second half in high nibbles — the same
+  concat-not-interleave property for the paged-attention kernel's unpack.
 """
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pack_codes", "unpack_codes", "packed_words_per_row"]
+__all__ = [
+    "pack_codes", "unpack_codes", "packed_words_per_row",
+    "tile_native_perm", "prepack_codes", "unprepack_codes",
+    "kv_pack_int4", "kv_unpack_int4",
+]
 
 
 def packed_words_per_row(p: int, bits: int) -> int:
@@ -77,3 +100,74 @@ def unpack_codes(packed: jax.Array, bits: int, p: int) -> jax.Array:
         codes = (tri << jnp.arange(3, dtype=jnp.uint32)).sum(axis=-1, dtype=jnp.uint32)
         return codes.astype(jnp.uint8)
     raise ValueError(f"unsupported bits={bits}")
+
+
+# ---------------------------------------------------------------------------
+# Tile-native (plane-wise) layout for the serving GEMM
+# ---------------------------------------------------------------------------
+
+# Codes per byte-aligned packing word: how many columns one storage byte
+# interleaves in the linear layout (3-bit codes straddle bytes; their word
+# is the 3-byte / 8-code block).
+_PLANES = {2: 4, 3: 8, 4: 2, 8: 1}
+
+
+def tile_native_perm(p: int, bits: int, tile_k: int) -> np.ndarray:
+    """Column permutation putting each full k-tile in plane-wise order.
+
+    With ``n = _PLANES[bits]`` planes, tile column ``j`` moves so that
+    storage word ``i`` of the tile packs columns ``(i, i + tile_k/n, …,
+    i + (n-1)·tile_k/n)`` — one column per plane.  Unpacking a tile is then
+    ``concatenate([plane_0, …, plane_{n-1}], axis=-1)``, already in natural
+    column order.  The ragged tail past the last full tile keeps the linear
+    order (the kernel never sees it — the pack decision requires
+    ``p % tile_k == 0`` for the Pallas path; refs un-permute exactly).
+    """
+    n = _PLANES[bits]
+    cols = np.arange(p, dtype=np.int64)
+    n_full = p // tile_k
+    if n == 1 or tile_k % n or n_full == 0:
+        return cols
+    head = cols[: n_full * tile_k].reshape(n_full, n, tile_k // n)
+    head = head.transpose(0, 2, 1).reshape(-1)
+    return np.concatenate([head, cols[n_full * tile_k:]])
+
+
+def prepack_codes(codes: jax.Array, bits: int, tile_k: int) -> jax.Array:
+    """(…, p) uint8 linear codes → packed bytes in tile-native order."""
+    perm = tile_native_perm(codes.shape[-1], bits, tile_k)
+    return pack_codes(codes[..., perm], bits)
+
+
+def unprepack_codes(packed: jax.Array, bits: int, p: int, tile_k: int) -> jax.Array:
+    """Inverse of :func:`prepack_codes` — (…, p) uint8 codes, linear order."""
+    perm = tile_native_perm(p, bits, tile_k)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(p, dtype=np.int64)
+    return unpack_codes(packed, bits, p)[..., inv]
+
+
+# ---------------------------------------------------------------------------
+# int4 KV page packing (paged serving)
+# ---------------------------------------------------------------------------
+
+
+def kv_pack_int4(codes: jax.Array) -> jax.Array:
+    """(…, hd) signed int codes in [-7, 7] → (…, hd/2) uint8, fold-in-half:
+    byte d carries element d in its low nibble (two's complement) and
+    element d + hd/2 in its high nibble."""
+    hd = codes.shape[-1]
+    if hd % 2:
+        raise ValueError(f"int4 KV packing requires an even head dim, got {hd}")
+    c = codes.astype(jnp.int32)
+    lo = c[..., : hd // 2] & 0xF
+    hi = c[..., hd // 2 :] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def kv_unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`kv_pack_int4` — (…, hd) int8 codes in [-8, 7]."""
+    b = packed.astype(jnp.int32)
+    lo = ((b & 0xF) ^ 8) - 8  # sign-extend the 4-bit two's complement
+    hi = ((b >> 4) ^ 8) - 8
+    return jnp.concatenate([lo, hi], axis=-1).astype(jnp.int8)

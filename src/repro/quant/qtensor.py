@@ -45,6 +45,14 @@ class QuantizedTensor:
         metadata=dict(static=True), default=None
     )
     packed: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    # Serving storage layout of `codes` (DESIGN.md §Packed-serving):
+    # "linear" — pack.py's little-endian column order; "tile" — tile-native
+    # plane-wise prepack (pack.prepack_codes with k-tile `pack_tile`), the
+    # layout the Pallas dequant GEMM reads as contiguous words per tile.
+    pack_layout: str = dataclasses.field(metadata=dict(static=True), default="linear")
+    pack_tile: Optional[int] = dataclasses.field(
+        metadata=dict(static=True), default=None
+    )
     # Unstructured outliers (COO, statically padded): fp16 values + flat
     # row-major int32 indices into the (q, p) weight.
     outlier_values: Optional[jax.Array] = None  # (s,) fp16
@@ -62,9 +70,11 @@ class QuantizedTensor:
     def unpacked_codes(self) -> jax.Array:
         if not self.packed:
             return self.codes
-        from repro.quant.pack import unpack_codes
+        from repro.quant.pack import unpack_codes, unprepack_codes
 
         p = self.codes.shape[-1] * (8 // self.bits)
+        if self.pack_layout == "tile":
+            return unprepack_codes(self.codes, self.bits, p, self.pack_tile)
         return unpack_codes(self.codes, self.bits, p)
 
     @property

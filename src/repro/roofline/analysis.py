@@ -24,7 +24,11 @@ import json
 import re
 from typing import Optional
 
-__all__ = ["HW", "RooflineReport", "analyze_compiled", "collective_bytes"]
+__all__ = [
+    "HW", "RooflineReport", "analyze_compiled", "collective_bytes",
+    "WeightLayoutDecision", "choose_weight_layout", "weight_bytes",
+    "paged_kv_bytes_per_token",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,8 +38,11 @@ class HW:
     ici_bw: float = 50e9  # per link (one direction)
 
 
+# s4/u4 are *packed* two-per-byte in HBM (quant/pack.py, the paged int4 KV
+# pages): 0.5 bytes/element, not 1 — at 1 the memory term of every packed
+# layout came out 2× too high and the roofline could never prefer it.
 _DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
     "f64": 8, "c64": 8, "c128": 16,
 }
@@ -59,7 +66,9 @@ def _shape_bytes(shape_str: str) -> int:
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
+        # Integer half-byte units so packed sub-byte dtypes round *up*: a
+        # ragged s4 row still occupies its last half-filled byte.
+        total += -(-n * int(2 * _DTYPE_BYTES[dtype]) // 2)
     return total
 
 
@@ -117,6 +126,113 @@ def collective_bytes(hlo_text: str, n_devices: int) -> dict:
         counts[kind] += 1
     out["counts"] = counts
     return out
+
+
+# ---------------------------------------------------------------------------
+# Pack-time layout decisions (serving GEMM / paged KV)
+# ---------------------------------------------------------------------------
+#
+# The serving GEMM (kernels/dequant_matmul.py) can consume weight codes in
+# three storage layouts; decode is memory-bound (m ≈ batch tokens, tiny), so
+# the pack decision is a pure roofline call: minimize the memory term,
+# modelling the *effective* bandwidth of each unpack pattern.
+#
+#   linear-unpacked : 1 B/elem, contiguous reads            (any bits)
+#   linear-packed   : 0.5 B/elem, in-kernel nibble interleave — the
+#                     stack([lo, hi]).reshape shuffle reads contiguous words
+#                     but scatters them across lanes; modelled as a gather
+#                     at `_INTERLEAVE_DERATE` of peak HBM bw (bits == 4)
+#   tile-native     : 0.5 B/elem, codes pre-reordered so each k-tile's low
+#                     nibbles are its first tk/2 columns and the high
+#                     nibbles the rest — unpack is two shifts + a concat,
+#                     contiguous words per tile, full bandwidth (bits == 4,
+#                     p divisible by the kernel tile)
+
+_INTERLEAVE_DERATE = 0.5  # effective-bw factor for the in-kernel interleave
+
+
+def weight_bytes(q: int, p: int, *, bits: int, n_groups: int = 1,
+                 packed: bool = False) -> float:
+    """HBM bytes one decode step reads for a (q, p) quantized weight:
+    codes (via _DTYPE_BYTES — 0.5 B/elem when packed int4) + the fp32
+    scale/zero planes."""
+    per_elem = _DTYPE_BYTES["u4"] if (packed and bits == 4) else _DTYPE_BYTES["u8"]
+    return q * p * per_elem + q * n_groups * 8.0
+
+
+def paged_kv_bytes_per_token(page_size: int, kvp: int, hd: int, n_periods: int,
+                             *, kv_dtype: str, context_pages: float = 1.0) -> float:
+    """Roofline-predicted KV-read bytes per decoded token: ``context_pages``
+    pages × (k+v) × per-slot bytes × layers.  int8 stores 1 B/elem + an 8 B
+    fp32 (k, v) scale pair per (token, head); int4 packs 2 elems/byte with
+    the same scale planes."""
+    elem = {"bf16": 2.0, "int8": 1.0, "int4": 0.5}[kv_dtype]
+    per_slot = kvp * hd * elem + (kvp * 4.0 if kv_dtype != "bf16" else 0.0)
+    return 2.0 * per_slot * page_size * n_periods * context_pages
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightLayoutDecision:
+    kind: str  # "linear" | "tile"
+    packed: bool  # codes stored two-per-byte
+    tile_k: Optional[int]  # prepack k-tile (kind == "tile")
+    tiling: str  # "whole-groups" | "tile-in-group" | "per-channel"
+    bytes_per_step: float  # weight HBM bytes per decode step (memory term)
+    memory_s: float  # bytes / effective bw — the decided-on quantity
+    compute_s: float  # 2·m·q·p / peak — context only, decode never trips it
+
+    @property
+    def label(self) -> str:
+        if self.kind == "tile":
+            return f"tile{self.tile_k}/{self.tiling}"
+        return "linear-packed" if self.packed else "linear"
+
+
+def choose_weight_layout(
+    q: int, p: int, *, bits: int, group_size: Optional[int] = None,
+    tile_k: Optional[int] = None, backend: str = "tpu", m: int = 1,
+    hw: HW = HW(),
+) -> WeightLayoutDecision:
+    """Pick the serving storage layout for one (q, p) quantized linear.
+
+    ``tile_k`` is the Pallas kernel's snapped k-tile for this shape
+    (kernels.dequant_matmul.select_tile_k) — pass None when the kernel
+    cannot consume a tile-native plane for it (ragged groups, odd p, p not
+    a tile multiple).  Non-TPU backends serve through the XLA reference,
+    which un-prepacks; tile-native buys nothing there, so the decision
+    degrades to the best linear layout.
+    """
+    gsz = group_size if group_size else p
+    n_groups = -(-p // gsz)
+    compute_s = 2.0 * m * q * p / hw.peak_flops
+
+    def mem_s(packed, derate=1.0):
+        return weight_bytes(q, p, bits=bits, n_groups=n_groups, packed=packed) / (
+            hw.hbm_bw * derate
+        )
+
+    # Packed candidates lead so exact ties (the derate can cancel the byte
+    # halving) resolve to the layout the artifact actually stores — serving
+    # never unpacks checkpoint codes back into HBM.
+    cands = []
+    if bits == 4 and p % 2 == 0:
+        cands.append(("linear", True, None, mem_s(True, _INTERLEAVE_DERATE)))
+        if backend == "tpu" and tile_k is not None and p % tile_k == 0:
+            cands.append(("tile", True, tile_k, mem_s(True)))
+    cands.append(("linear", False, None, mem_s(False)))
+    kind, packed, tk, memory_s = min(cands, key=lambda c: c[3])
+    if kind == "tile":
+        tiling = "whole-groups" if group_size and tk % gsz == 0 else (
+            "tile-in-group" if group_size else "per-channel"
+        )
+    else:
+        tiling = "per-channel" if not group_size else "whole-groups"
+        tk = None
+    return WeightLayoutDecision(
+        kind=kind, packed=packed, tile_k=tk, tiling=tiling,
+        bytes_per_step=weight_bytes(q, p, bits=bits, n_groups=n_groups, packed=packed),
+        memory_s=memory_s, compute_s=compute_s,
+    )
 
 
 @dataclasses.dataclass

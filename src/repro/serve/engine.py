@@ -44,7 +44,7 @@ from repro.models import (
     prefill,
 )
 from repro.models.model import ModelPlan
-from repro.serve.kv_cache import NULL_PAGE, PagePool
+from repro.serve.kv_cache import NULL_PAGE, PagePool, page_nbytes
 
 __all__ = ["Request", "ServingEngine", "PagedServingEngine"]
 
@@ -268,6 +268,23 @@ class PagedServingEngine:
         self.n_cow_hits = 0
         self.n_guard_copies = 0  # replay-target copies off registered pages
         self.n_preemptions = 0
+        # KV pages streamed by decode attention: Σ over decode steps and
+        # active lanes of ceil(context/page_size) — the roofline's
+        # context_pages term, measured.  Periods are folded in by
+        # :meth:`kv_read_bytes` (every page id spans all layers).
+        self.n_kv_page_reads = 0
+
+    def kv_read_bytes(self) -> int:
+        """Decode-attention KV bytes implied by the page-read counter, in
+        the same units as roofline.paged_kv_bytes_per_token — measured
+        counterpart of the predicted bytes/token (benchmarks/report.py
+        renders them side by side)."""
+        hp = self.plan.heads
+        per_page = page_nbytes(
+            self.page_size, hp.kv_pad, hp.head_dim,
+            self.plan.cfg.n_periods, self.plan.kv_cache_dtype,
+        )
+        return self.n_kv_page_reads * per_page
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -473,6 +490,7 @@ class PagedServingEngine:
             seq = self.lanes[i]
             pos[i] = self.slot_pos[i]
             write_page[i] = seq.pages[int(self.slot_pos[i]) // self.page_size]
+            self.n_kv_page_reads += -(-(int(self.slot_pos[i]) + 1) // self.page_size)
         logits, self.cache = self._decode(
             self.params, jnp.asarray(self._last_tok), self.cache,
             jnp.asarray(pos), self._dev_table_now(), jnp.asarray(write_page),

@@ -39,9 +39,25 @@ from __future__ import annotations
 
 from typing import Optional
 
-__all__ = ["NULL_PAGE", "PagePool"]
+__all__ = ["NULL_PAGE", "PagePool", "page_nbytes"]
 
 NULL_PAGE = 0
+
+_KV_ELEM_BYTES = {"bf16": 2.0, "int8": 1.0, "int4": 0.5}
+
+
+def page_nbytes(
+    page_size: int, kvp: int, hd: int, n_periods: int, kv_dtype: str = "bf16"
+) -> int:
+    """Device bytes one page id costs across all layers: k + v codes at the
+    dtype's element width (0.5 B for packed int4) plus the fp32
+    per-(slot, head) scale planes quantized dtypes carry.  This is the unit
+    for equal-**byte** KV budgets: at a fixed budget, int4 pools hold
+    ~3.5× the pages of bf16 (benchmarks/bench_serve.py sizes pools with
+    exactly this function)."""
+    elem = _KV_ELEM_BYTES[kv_dtype]
+    per_slot = kvp * hd * elem + (kvp * 4.0 if kv_dtype != "bf16" else 0.0)
+    return int(2 * per_slot * page_size * n_periods)
 
 
 class PagePool:

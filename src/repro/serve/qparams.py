@@ -33,6 +33,7 @@ __all__ = [
     "qt_param_shapes",
     "qt_param_axes",
     "quantize_params_for_serving",
+    "prepack_params_for_serving",
     "harmonize_qt_stack",
     "qt_rules_extra",
 ]
@@ -166,6 +167,8 @@ def _qt_static_meta(qt: QuantizedTensor) -> tuple:
         qt.bits,
         qt.group_size,
         qt.packed,
+        qt.pack_layout,
+        qt.pack_tile,
         None if qt.outlier_values is None else tuple(qt.outlier_values.shape),
         None if qt.outlier_col_idx is None else tuple(qt.outlier_col_idx.shape),
     )
@@ -207,7 +210,7 @@ def harmonize_qt_stack(leaves: list) -> list:
             f"heterogeneous group_size across stacked layers ({sorted(map(str, gsz))}) "
             "— per-period scale planes would not stack"
         )
-    cols = {_qt_static_meta(l)[4] for l in leaves}
+    cols = {_qt_static_meta(l)[6] for l in leaves}
     if len(cols) != 1:
         raise ValueError(
             "structured column outliers must be structurally identical across "
@@ -237,6 +240,8 @@ def harmonize_qt_stack(leaves: list) -> list:
                 codes=codes,
                 bits=bits,
                 packed=False,
+                pack_layout="linear",
+                pack_tile=None,
                 outlier_values=vals,
                 outlier_idx=idx,
             )
@@ -263,3 +268,69 @@ def quantize_params_for_serving(plan: M.ModelPlan, params, solver_qt_dec: list):
     out = dict(params)
     out["dec"] = stacked
     return out
+
+
+def prepack_params_for_serving(plan: M.ModelPlan, params, *, backend=None):
+    """Roofline-selected weight-layout prepack (DESIGN.md §Packed-serving).
+
+    Walks the serving param tree and, for every packed-4-bit
+    QuantizedTensor still in the linear layout, asks
+    :func:`repro.roofline.analysis.choose_weight_layout` whether the
+    tile-native prepack (quant/pack.prepack_codes at the kernel's
+    :func:`~repro.kernels.dequant_matmul.select_tile_k` k-tile) wins on the
+    memory roofline for this backend.  Winning leaves are re-permuted
+    **once, at pack time** — a pure column permutation, bit-exact under
+    dequant — and tagged ``pack_layout="tile"`` / ``pack_tile=tk`` so the
+    Pallas GEMM reads contiguous words per tile instead of interleaving.
+    Off-TPU backends keep every leaf linear (the XLA ref path gains nothing
+    from the reorder).
+
+    Returns ``(params, decisions)`` where ``decisions`` maps
+    ``"<block>.<name>"`` → the chosen
+    :class:`~repro.roofline.analysis.WeightLayoutDecision` label (one entry
+    per distinct leaf position; launch/serve.py prints them as the layout
+    banner).
+    """
+    from repro.kernels.dequant_matmul import select_tile_k
+    from repro.roofline.analysis import choose_weight_layout
+
+    if backend is None:
+        backend = jax.default_backend()
+    decisions: dict[str, str] = {}
+
+    def prepack_leaf(path: str, leaf):
+        if not isinstance(leaf, QuantizedTensor):
+            return leaf
+        if not (leaf.packed and leaf.bits == 4 and leaf.pack_layout == "linear"):
+            return leaf
+        q, p = leaf.shape[-2], leaf.shape[-1]
+        tk = select_tile_k(p, leaf.group_size)
+        dec = choose_weight_layout(
+            q, p, bits=4, group_size=leaf.group_size, tile_k=tk, backend=backend
+        )
+        if dec.kind != "tile":
+            # The prepack never unpacks checkpoint codes back into HBM, so a
+            # "linear (unpacked)" roofline pick still serves linear-packed —
+            # record the layout the leaf actually keeps.
+            decisions[path] = "linear-packed"
+            return leaf
+        decisions[path] = dec.label
+        from repro.quant.pack import prepack_codes, unpack_codes
+
+        codes = prepack_codes(unpack_codes(leaf.codes, 4, p), 4, tk)
+        return dataclasses.replace(
+            leaf, codes=codes, pack_layout="tile", pack_tile=tk
+        )
+
+    out = dict(params)
+    for stack_key in ("dec", "enc"):
+        if stack_key not in params:
+            continue
+        stacked = {}
+        for key, blk in params[stack_key].items():
+            stacked[key] = {
+                name: prepack_leaf(f"{key}.{name}", leaf)
+                for name, leaf in blk.items()
+            }
+        out[stack_key] = stacked
+    return out, decisions

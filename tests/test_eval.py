@@ -344,3 +344,31 @@ def test_report_survives_unknown_schema_and_garbage(tmp_path):
     assert "unreadable/not JSON" in r.stdout    # garbage noted, not fatal
     assert "| rtn | 4 |" in r.stdout            # partial eval doc renders
     assert "| **uniform@3b** | uniform |" in r.stdout  # partial tune doc renders
+
+
+def test_scorer_parity_with_engines_prepacked(eval_model_fixture):
+    """Parity bridge on the *packed* artifact (DESIGN.md §Packed-serving):
+    the tile-native weight reorder is a pure column permutation, so the
+    scorer-vs-engine tolerance and paged-vs-contiguous bitwise claims must
+    survive prepacking unchanged.  backend="tpu" forces the tile decision
+    even though this host serves through the XLA ref path."""
+    from repro.serve.qparams import prepack_params_for_serving
+
+    plan, params, calib, _, _ = eval_model_fixture
+    qp, _ = ptq_quantize_model(
+        plan, params, calib,
+        PTQConfig(method="quantease", spec=GridSpec(bits=4), iterations=3,
+                  emit="qt"),
+    )
+    qt_params = quantize_params_for_serving(plan, params, qp["dec"])
+    qt_params, decisions = prepack_params_for_serving(
+        plan, qt_params, backend="tpu"
+    )
+    assert decisions and any(v.startswith("tile") for v in decisions.values())
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 250, n).astype(np.int32) for n in (7, 19)]
+    par = engine_parity(plan, qt_params, prompts, max_seq=64, page_size=8,
+                        prefill_chunk=8)
+    assert par["max_abs_diff_contiguous"] <= par["tol"]
+    assert par["max_abs_diff_paged"] <= par["tol"]
+    assert par["paged_bitwise_contiguous"]

@@ -111,3 +111,54 @@ def test_quantease_kernel_path_equals_xla(layer_problem):
         w, sigma, GridSpec(bits=4), iterations=3, block_size=32, use_kernel="pallas"
     )
     np.testing.assert_allclose(np.asarray(wx), np.asarray(wp), atol=1e-5)
+
+
+def test_dequant_matmul_tile_layout_bit_exact(rng):
+    """The tile-native prepacked GEMM returns bit-identical results to the
+    linear-packed dispatch — the reorder is a pure column permutation the
+    kernel (or the un-prepacking ref) undoes exactly."""
+    from repro.kernels.dequant_matmul import select_tile_k
+    from repro.quant.pack import prepack_codes
+
+    m, p, q = 4, 1024, 64
+    codes = rng.integers(0, 16, (q, p)).astype(np.uint8)
+    scale = jnp.asarray((rng.random((q, 1)) * 0.1 + 0.01).astype(np.float32))
+    zero = jnp.asarray(rng.integers(0, 16, (q, 1)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((m, p)).astype(np.float32))
+    y_lin = ops.dequant_matmul(
+        x, pack_codes(jnp.asarray(codes), 4), scale, zero,
+        packed4=True, out_dtype=jnp.float32, interpret=True,
+    )
+    tk = select_tile_k(p, None)
+    pre = prepack_codes(jnp.asarray(codes), 4, tk)
+    y_tile = ops.dequant_matmul(
+        x, pre, scale, zero, packed4=True, pack_layout="tile", pack_tile=tk,
+        out_dtype=jnp.float32, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(y_lin), np.asarray(y_tile))
+
+
+def test_dequant_matmul_tile_layout_grouped(rng):
+    """Tile layout under a grouped grid (whole-groups tiling: tk snaps to a
+    group multiple) still matches the linear dispatch bit-for-bit."""
+    from repro.kernels.dequant_matmul import select_tile_k
+    from repro.quant.pack import prepack_codes
+
+    m, p, q, gsz = 3, 1024, 32, 256
+    n_groups = p // gsz
+    codes = rng.integers(0, 16, (q, p)).astype(np.uint8)
+    scale = jnp.asarray((rng.random((q, n_groups)) * 0.1 + 0.01).astype(np.float32))
+    zero = jnp.asarray(rng.integers(0, 16, (q, n_groups)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((m, p)).astype(np.float32))
+    y_lin = ops.dequant_matmul(
+        x, pack_codes(jnp.asarray(codes), 4), scale, zero,
+        packed4=True, group_size=gsz, out_dtype=jnp.float32, interpret=True,
+    )
+    tk = select_tile_k(p, gsz)
+    assert tk % gsz == 0  # whole-groups tiling for this shape
+    pre = prepack_codes(jnp.asarray(codes), 4, tk)
+    y_tile = ops.dequant_matmul(
+        x, pre, scale, zero, packed4=True, group_size=gsz,
+        pack_layout="tile", pack_tile=tk, out_dtype=jnp.float32, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(y_lin), np.asarray(y_tile))

@@ -179,3 +179,78 @@ def test_ragged_group_quantized_tensor_dequant(rng):
     qt = quantize_tensor(w, GridSpec(bits=4, group_size=256))
     ref = quantize_dequantize(w, compute_grid(w, GridSpec(bits=4, group_size=256)))
     np.testing.assert_array_equal(np.asarray(qt.dequantize()), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Tile-native prepack + int4 KV packing (DESIGN.md §Packed-serving)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("p,tile_k", [(1024, 512), (640, 128), (384, 128),
+                                      (300, 128), (128, 128), (96, 128)])
+def test_prepack_roundtrip(bits, p, tile_k, rng):
+    """prepack → unprepack is the identity for every code width, including
+    ragged tails past the last full tile and p < tile_k (no full tile)."""
+    from repro.quant.pack import prepack_codes, unprepack_codes
+
+    codes = jnp.asarray(
+        rng.integers(0, 2 ** bits, (5, p)).astype(np.uint8)
+    )
+    pre = prepack_codes(codes, bits, tile_k)
+    assert pre.shape[-1] == -(-p * bits // 8)
+    out = unprepack_codes(pre, bits, p, tile_k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+def test_prepack_is_pure_permutation(rng):
+    """The tile-native transform only reorders columns: byte i of a 4-bit
+    full tile holds columns (i, i + tile_k/2) in its (lo, hi) nibbles."""
+    from repro.quant.pack import tile_native_perm
+
+    p, tk = 256, 128
+    perm = tile_native_perm(p, 4, tk)
+    assert sorted(perm.tolist()) == list(range(p))
+    # first storage byte of tile 0 packs columns (0, tk//2)
+    assert perm[0] == 0 and perm[1] == tk // 2
+    # ragged tail (p=300) keeps linear order past the last full tile
+    tail = tile_native_perm(300, 4, 128)[256:]
+    np.testing.assert_array_equal(tail, np.arange(256, 300))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_prepacked_qt_dequant_bit_exact(bits, rng):
+    """Dequantizing through the tile-native layout is bit-exact vs linear
+    (it is a pure column permutation of the same codes)."""
+    from repro.quant.pack import prepack_codes, unprepack_codes
+
+    w = jnp.asarray(rng.standard_normal((8, 384)).astype(np.float32))
+    qt = quantize_tensor(w, GridSpec(bits=bits, group_size=128))
+    pre = prepack_codes(qt.codes, bits, 128)
+    back = unprepack_codes(pre, bits, 384, 128)
+    import dataclasses as dc
+
+    deq = dc.replace(qt, codes=back).dequantize()
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(qt.dequantize()))
+
+
+@pytest.mark.parametrize("shape", [(3, 7, 2, 16), (1, 5, 30), (4, 64)])
+def test_kv_pack_int4_roundtrip(shape, rng):
+    """Fold-in-half int4 KV packing round-trips signed codes in [-7, 7]
+    at odd page/slot counts; packed plane is half the head dim."""
+    from repro.quant.pack import kv_pack_int4, kv_unpack_int4
+
+    codes = jnp.asarray(rng.integers(-7, 8, shape).astype(np.int8))
+    packed = kv_pack_int4(codes)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == shape[:-1] + (shape[-1] // 2,)
+    np.testing.assert_array_equal(
+        np.asarray(kv_unpack_int4(packed)), np.asarray(codes)
+    )
+
+
+def test_kv_pack_int4_rejects_odd_head_dim(rng):
+    from repro.quant.pack import kv_pack_int4
+
+    with pytest.raises(ValueError, match="even head dim"):
+        kv_pack_int4(jnp.zeros((2, 15), jnp.int8))

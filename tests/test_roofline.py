@@ -1,6 +1,12 @@
-"""Roofline HLO collective parser unit tests."""
+"""Roofline HLO collective parser + pack-decision unit tests."""
 
-from repro.roofline.analysis import collective_bytes, _shape_bytes
+from repro.roofline.analysis import (
+    choose_weight_layout,
+    collective_bytes,
+    paged_kv_bytes_per_token,
+    weight_bytes,
+    _shape_bytes,
+)
 
 
 HLO = """
@@ -17,6 +23,53 @@ def test_shape_bytes():
     assert _shape_bytes("bf16[16,4096]") == 16 * 4096 * 2
     assert _shape_bytes("(f32[8,16])") == 8 * 16 * 4
     assert _shape_bytes("u8[3]") == 3
+
+
+def test_shape_bytes_packed_sub_byte():
+    """s4/u4 are packed 2/byte in HBM: 0.5 B/elem, ragged rows round up.
+    (The pre-fix 1 B/elem made every packed memory term 2× too high.)"""
+    assert _shape_bytes("s4[128,256]") == 128 * 256 // 2
+    assert _shape_bytes("u4[128,256]") == 128 * 256 // 2
+    assert _shape_bytes("u4[7]") == 4  # last half-filled byte still occupied
+    assert _shape_bytes("s8[128,256]") == 128 * 256  # int8 untouched
+
+
+def test_weight_bytes_packed_halves_codes():
+    dense = weight_bytes(128, 512, bits=4, n_groups=4, packed=False)
+    packed = weight_bytes(128, 512, bits=4, n_groups=4, packed=True)
+    assert dense - packed == 128 * 512 * 0.5  # codes halve, metadata constant
+
+
+def test_choose_weight_layout_prefers_tile_native_on_tpu():
+    d = choose_weight_layout(256, 1024, bits=4, group_size=256, tile_k=512,
+                             backend="tpu")
+    assert d.kind == "tile" and d.packed and d.tile_k == 512
+    assert d.tiling == "whole-groups"
+    # tile-native reads the packed bytes at full bandwidth; the interleaved
+    # linear-packed layout reads the same bytes slower, linear-unpacked
+    # reads twice the bytes — both lose on the memory term.
+    assert d.memory_s < choose_weight_layout(
+        256, 1024, bits=4, group_size=256, tile_k=None, backend="tpu"
+    ).memory_s
+
+
+def test_choose_weight_layout_degrades_off_tpu_and_off_4bit():
+    assert choose_weight_layout(256, 1024, bits=3, tile_k=512).kind == "linear"
+    d = choose_weight_layout(256, 1024, bits=4, tile_k=512, backend="cpu")
+    assert d.kind == "linear"  # XLA ref un-prepacks: tile buys nothing
+    # odd p cannot pack at all
+    assert not choose_weight_layout(256, 1023, bits=4, tile_k=None).packed
+
+
+def test_paged_kv_bytes_per_token_ordering():
+    kw = dict(page_size=16, kvp=4, hd=64, n_periods=2, context_pages=3.0)
+    b16 = paged_kv_bytes_per_token(kv_dtype="bf16", **kw)
+    i8 = paged_kv_bytes_per_token(kv_dtype="int8", **kw)
+    i4 = paged_kv_bytes_per_token(kv_dtype="int4", **kw)
+    assert b16 > i8 > i4
+    # int4 codes alone are 4× smaller than bf16; with scale planes the
+    # total still lands well under half of bf16 at hd=64.
+    assert i4 < 0.5 * b16
 
 
 def test_collective_bytes_kinds():
