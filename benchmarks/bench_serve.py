@@ -31,13 +31,26 @@ perf is weight-value independent so RTN stands in for the solver);
 (serve/qparams.prepack_params_for_serving; the chosen label is recorded
 per cell).
 
+Schema 3 adds the **bursty SLO trace** section (``doc["bursty"]``): a
+seeded trace of Poisson-burst arrivals with long-tail (lognormal) prompt
+lengths, per-request deadlines calibrated against the engine's own
+measured step costs, and mixed priorities, driven through the paged engine
+under real pool pressure once per scheduler (``fifo`` — the legacy
+arrival-order/preempt-newest baseline — and ``slo``).  Each row records
+p50/p99 TTFT (from the engine's own request timestamps) and the
+**deadline-miss rate**: the fraction of requests that did not deliver
+their full output within deadline, counting shed / expired requests and
+late completions alike, so the two schedulers are scored by the identical
+rule.
+
 Emits ``BENCH_serve.json``; ``--smoke`` runs a seconds-scale subset with
 the same schema (CI guards the file shape, not the numbers);
 ``--validate`` checks an existing file and exits non-zero on
 malformed/missing — on full (non-smoke) documents it also enforces the
-acceptance ordering: the int4+quantized-weights cell beats the bf16 paged
-baseline on tokens/s with TTFT no worse (5% jitter allowance).
-Mirrors benchmarks/bench_solver.py conventions.
+acceptance orderings: the int4+quantized-weights cell beats the bf16
+paged baseline on tokens/s with TTFT no worse (5% jitter allowance), and
+the SLO scheduler's deadline-miss rate is no worse than FIFO's on the
+same trace.  Mirrors benchmarks/bench_solver.py conventions.
 """
 
 from __future__ import annotations
@@ -48,13 +61,19 @@ import os
 import sys
 import time
 
-SCHEMA = 2
+SCHEMA = 3
 _SERVE_KEYS = {
     "scenario", "engine", "kv", "weights", "weight_layout", "max_batch",
     "kv_budget_tokens", "kv_budget_bytes", "n_pages", "n_requests",
     "new_tokens", "wall_s", "tokens_per_s", "ttft_mean_ms", "ttft_p90_ms",
     "prefill_tokens", "prefix_hit_tokens", "preemptions",
     "kv_bytes_per_token_pred", "kv_bytes_per_token_meas",
+}
+_BURSTY_KEYS = {
+    "scenario", "engine", "kv", "weights", "scheduler", "max_batch",
+    "n_pages", "n_requests", "new_tokens", "wall_s", "tokens_per_s",
+    "ttft_p50_ms", "ttft_p99_ms", "deadline_miss_rate", "n_completed",
+    "n_preempted_resumed", "n_shed", "n_deadline_missed", "n_preemptions",
 }
 
 
@@ -184,6 +203,118 @@ def _lanes(eng):
     return getattr(eng, "lanes", None) or getattr(eng, "slot_req")
 
 
+def _bursty_trace(cfg, n, max_prompt, max_new, chunk, costs, seed=11):
+    """Seeded bursty SLO trace: ``[(arrival_s, request_kwargs), ...]``.
+
+    Arrival process: exponential inter-burst gaps with geometric burst
+    sizes (Poisson bursts); prompt lengths are lognormal (long-tail,
+    clipped to the engine bounds).  Deadlines are *calibrated*: each
+    request's optimistic service estimate (its own prefill chunks + decode
+    steps at the warmed engine's measured per-step costs ``costs =
+    (chunk_s, decode_s)``) is multiplied by a sampled tightness factor —
+    the tight tail is infeasible under queueing, the loose tail is safe —
+    so the trace stresses the scheduler identically on any host speed.
+    Returns kwargs (not Request objects): each scheduler run materializes
+    its own fresh requests from the same trace.
+    """
+    import numpy as np
+
+    chunk_s, decode_s = costs
+    rng = np.random.default_rng(seed)
+    trace = []
+    t, i = 0.0, 0
+    # Mean inter-burst gap ≈ half a typical request's service time: bursts
+    # overlap enough to contend for the pool without unbounded backlog.
+    typical = max(2, 16 // chunk + 1) * chunk_s + max_new * decode_s
+    while i < n:
+        t += float(rng.exponential(typical * 0.5))
+        burst = 1 + int(rng.geometric(0.45))
+        for _ in range(min(burst, n - i)):
+            ln = int(np.clip(rng.lognormal(np.log(16.0), 0.9), 4, max_prompt))
+            est = (-(-ln // chunk)) * chunk_s + max_new * decode_s
+            tightness = float(rng.choice([1.2, 2.5, 6.0, 15.0],
+                                         p=[0.2, 0.35, 0.3, 0.15]))
+            trace.append((t, dict(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab, ln).astype(np.int32),
+                max_new_tokens=max_new,
+                deadline_ms=est * tightness * 1e3,
+                priority=int(rng.choice([0, 0, 0, 1, 2])),
+            )))
+            i += 1
+    return trace
+
+
+def _drive_trace(eng, trace, max_steps=200_000):
+    """Submit requests at their trace arrival instants (engine wall clock)
+    and step to completion.  Returns ``(wall_s, requests)``; per-request
+    latency comes from the engine's own submit/first-token/finish
+    timestamps, not from this loop."""
+    from repro.serve.engine import Request
+
+    reqs = [Request(**kw) for _, kw in trace]
+    pending = list(zip([a for a, _ in trace], reqs))
+    t0 = time.perf_counter()
+    steps = 0
+    while pending or eng.queue or any(s is not None for s in _lanes(eng)):
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            eng.submit(pending.pop(0)[1])
+        if not (eng.queue or any(s is not None for s in _lanes(eng))):
+            time.sleep(max(0.0, pending[0][0] - now))
+            continue
+        eng.step()
+        steps += 1
+        if steps >= max_steps:
+            break
+    return time.perf_counter() - t0, reqs
+
+
+def _bursty_row(scheduler, eng, reqs, wall):
+    """Score one scheduler run.  A request *missed* its deadline when it
+    did not deliver its full output in time — shed and expired requests
+    by definition, plus any completion that landed after the deadline —
+    the same rule for both schedulers (FIFO ignores deadlines at run
+    time, so all its misses are late/unfinished completions)."""
+    import numpy as np
+
+    ttfts = [r.first_token_t - r.submit_t for r in reqs
+             if r.first_token_t is not None and r.submit_t is not None]
+    missed = 0
+    for r in reqs:
+        if r.status in ("shed", "deadline_missed"):
+            missed += 1
+        elif r.deadline_ms is not None and (
+            r.finish_t is None
+            or r.finish_t - r.submit_t > r.deadline_ms / 1e3
+        ):
+            missed += 1
+    new_tokens = sum(len(r.output or []) for r in reqs)
+    return {
+        "scenario": "bursty",
+        "engine": "paged",
+        "kv": "bf16",
+        "weights": "dense",
+        "scheduler": scheduler,
+        "max_batch": eng.max_batch,
+        "n_pages": eng.n_pages,
+        "n_requests": len(reqs),
+        "new_tokens": new_tokens,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(new_tokens / wall, 1),
+        "ttft_p50_ms": round(float(np.percentile(ttfts, 50)) * 1e3, 1)
+        if ttfts else None,
+        "ttft_p99_ms": round(float(np.percentile(ttfts, 99)) * 1e3, 1)
+        if ttfts else None,
+        "deadline_miss_rate": round(missed / len(reqs), 4),
+        "n_completed": sum(r.status == "completed" for r in reqs),
+        "n_preempted_resumed": sum(r.status == "preempted_resumed" for r in reqs),
+        "n_shed": sum(r.status == "shed" for r in reqs),
+        "n_deadline_missed": sum(r.status == "deadline_missed" for r in reqs),
+        "n_preemptions": eng.n_preemptions,
+    }
+
+
 def _row(scenario, engine_name, kv, weights, layout, eng, reqs, wall, ttfts,
          budget, budget_bytes, kv_pred):
     import numpy as np
@@ -286,18 +417,16 @@ def collect(smoke: bool) -> dict:
         ("shared_prefix", "contiguous", "bf16", "dense"),
         ("shared_prefix", "paged", "bf16", "dense"),
     ]
-    rows = []
-    for scenario, name, kv, weights in cells:
-        import numpy as np
-
-        from repro.serve.engine import Request
-
-        eng = contiguous(kv, weights) if name == "contiguous" else paged(kv, weights)
+    def warm_engine(eng):
         # Warm every executable on the SAME instance (jit caches live on the
         # engine's jitted closures): prompts long enough to cross chunk and
         # page boundaries, then drain so the engine returns to idle.  Warmup
         # prompts are drawn from a disjoint seed so they never seed the
         # prefix cache for the measured workload.
+        import numpy as np
+
+        from repro.serve.engine import Request
+
         wrng = np.random.default_rng(10_001)
         warm = [
             Request(rid=-1 - i,
@@ -310,9 +439,17 @@ def collect(smoke: bool) -> dict:
         eng.finished.clear()
         for attr in ("n_decode_steps", "n_prefills", "n_prefill_chunks",
                      "n_prefill_tokens", "n_prefix_hit_tokens", "n_cow_hits",
-                     "n_guard_copies", "n_preemptions", "n_kv_page_reads"):
+                     "n_guard_copies", "n_preemptions", "n_kv_page_reads",
+                     "n_shed", "n_deadline_missed"):
             if hasattr(eng, attr):
                 setattr(eng, attr, 0)
+
+    rows = []
+    for scenario, name, kv, weights in cells:
+        import numpy as np
+
+        eng = contiguous(kv, weights) if name == "contiguous" else paged(kv, weights)
+        warm_engine(eng)
         reqs = _requests(cfg, scenario, n_req, max_prompt, max_new)
         # Roofline prediction at the workload's mean decode context: prompt
         # plus half the generation, in pages (the gather reads whole pages).
@@ -333,12 +470,38 @@ def collect(smoke: bool) -> dict:
                 r["speedup_vs_contiguous"] = round(
                     r["tokens_per_s"] / base["tokens_per_s"], 2
                 )
+
+    # Bursty SLO trace: the identical seeded trace driven once per
+    # scheduler through a deliberately tight pool (bursts contend for
+    # pages, so preemption/shedding policy decides who makes the deadline).
+    if smoke:
+        b_req, b_new, b_batch, b_pages = 6, 4, 4, 1 + 8
+    else:
+        b_req, b_new, b_batch, b_pages = 40, 24, 8, 1 + 28
+    bursty_rows = []
+    trace = None
+    for scheduler in ("fifo", "slo"):
+        eng = PagedServingEngine(
+            plans["bf16"], params, max_batch=b_batch, max_seq=max_seq,
+            page_size=page_size, n_pages=b_pages, prefill_chunk=chunk,
+            scheduler=scheduler,
+        )
+        warm_engine(eng)
+        if trace is None:
+            # Deadlines calibrated against this host's measured step costs
+            # (populated by the warm run) — identical trace for both rows.
+            costs = (eng._min_chunk_s or 1e-4, eng._min_decode_s or 1e-4)
+            trace = _bursty_trace(cfg, b_req, max_prompt, b_new, chunk, costs)
+        wall, treqs = _drive_trace(eng, trace)
+        bursty_rows.append(_bursty_row(scheduler, eng, treqs, wall))
+
     return {
         "schema": SCHEMA,
         "smoke": smoke,
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "serve": rows,
+        "bursty": bursty_rows,
     }
 
 
@@ -371,6 +534,17 @@ def validate(path: str) -> list[str]:
         probs.append("serve: missing int4-KV cell")
     if not any(r.get("weights") not in (None, "dense") for r in rows):
         probs.append("serve: missing packed-weight cell")
+    bursty = doc.get("bursty")
+    if not isinstance(bursty, list) or not bursty:
+        probs.append("bursty: missing/empty")
+        bursty = []
+    for i, row in enumerate(bursty):
+        missing = _BURSTY_KEYS - set(row)
+        if missing:
+            probs.append(f"bursty[{i}]: missing keys {sorted(missing)}")
+    scheds = {r.get("scheduler") for r in bursty}
+    if bursty and not {"fifo", "slo"} <= scheds:
+        probs.append("bursty: needs both fifo and slo scheduler rows")
     if not doc.get("smoke"):
         # Acceptance ordering on the committed full trajectory: the whole
         # sub-4-bit artifact beats the bf16 paged baseline on tokens/s at
@@ -391,6 +565,17 @@ def validate(path: str) -> list[str]:
                     f"int4+q3_outlier ttft ({head['ttft_mean_ms']}ms) worse "
                     f"than bf16 baseline ({base['ttft_mean_ms']}ms)"
                 )
+        # SLO acceptance: on the identical bursty trace, the SLO scheduler
+        # must not miss more deadlines than the FIFO baseline.
+        b_by = {r.get("scheduler"): r for r in bursty}
+        fifo, slo = b_by.get("fifo"), b_by.get("slo")
+        if fifo is None or slo is None:
+            probs.append("bursty: missing fifo or slo row")
+        elif slo["deadline_miss_rate"] > fifo["deadline_miss_rate"]:
+            probs.append(
+                f"slo deadline-miss rate ({slo['deadline_miss_rate']}) worse "
+                f"than fifo baseline ({fifo['deadline_miss_rate']})"
+            )
     return probs
 
 
@@ -414,6 +599,14 @@ def run(csv):
             us=round(1e6 / max(row["tokens_per_s"], 1e-9), 1),
             tokens_per_s=row["tokens_per_s"],
             ttft_ms=row["ttft_mean_ms"],
+        )
+    for row in doc["bursty"]:
+        csv.add(
+            f"serve_bursty_{row['scheduler']}",
+            us=round(1e6 / max(row["tokens_per_s"], 1e-9), 1),
+            tokens_per_s=row["tokens_per_s"],
+            ttft_ms=row["ttft_p50_ms"],
+            miss_rate=row["deadline_miss_rate"],
         )
 
 
@@ -450,6 +643,16 @@ def main():
             f"{row['tokens_per_s']} tok/s, ttft {row['ttft_mean_ms']}ms "
             f"(p90 {row['ttft_p90_ms']}ms), prefill {row['prefill_tokens']} tok, "
             f"prefix-hit {row['prefix_hit_tokens']}{bpt}{extra}"
+        )
+    for row in doc["bursty"]:
+        print(
+            f"{'bursty':>14} {'paged':>10} [{row['scheduler']:>4}]: "
+            f"{row['tokens_per_s']} tok/s, ttft p50 {row['ttft_p50_ms']}ms "
+            f"p99 {row['ttft_p99_ms']}ms, miss-rate "
+            f"{row['deadline_miss_rate']} ({row['n_completed']} completed, "
+            f"{row['n_preempted_resumed']} resumed, {row['n_shed']} shed, "
+            f"{row['n_deadline_missed']} expired, "
+            f"{row['n_preemptions']} preemptions)"
         )
     print(f"wrote {args.out}")
 

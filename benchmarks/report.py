@@ -121,7 +121,7 @@ def _load_json(path):
         return None, f"unreadable/not JSON ({e})"
 
 
-_KNOWN_SCHEMAS = {"BENCH_solver.json": (1, 2, 3), "BENCH_serve.json": (1, 2),
+_KNOWN_SCHEMAS = {"BENCH_solver.json": (1, 2, 3), "BENCH_serve.json": (1, 2, 3),
                   "BENCH_eval.json": (1,), "BENCH_tune.json": (1,)}
 
 
@@ -190,6 +190,37 @@ def serve_bench_table(doc):
                 pe=row.get("preemptions", "?"),
             )
         )
+    bursty = doc.get("bursty", [])
+    if bursty:
+        lines += [
+            "",
+            "**Bursty trace (Poisson-burst arrivals, long-tail prompts, "
+            "per-request deadlines — identical seeded trace per scheduler):**",
+            "",
+            "| scheduler | req | tok/s | ttft p50 | ttft p99 | miss rate "
+            "| completed | resumed | shed | missed |",
+            "|---|---|---|---|---|---|---|---|---|---|",
+        ]
+        for row in bursty:
+            lines.append(
+                "| {s} | {n} | {t} | {p50}ms | {p99}ms | {mr} | {c} | {r} "
+                "| {sh} | {dm} |".format(
+                    s=row.get("scheduler"), n=row.get("n_requests"),
+                    t=row.get("tokens_per_s", "?"),
+                    p50=row.get("ttft_p50_ms", "?"),
+                    p99=row.get("ttft_p99_ms", "?"),
+                    mr=row.get("deadline_miss_rate", "?"),
+                    c=row.get("n_completed", "?"),
+                    r=row.get("n_preempted_resumed", "?"),
+                    sh=row.get("n_shed", "?"), dm=row.get("n_deadline_missed", "?"),
+                )
+            )
+    elif schema == 2:
+        lines += [
+            "",
+            "_schema-2 artifact (pre SLO upgrade): no bursty-trace / "
+            "deadline-miss cells — regenerate with benchmarks/bench_serve.py_",
+        ]
     return "\n".join(lines)
 
 

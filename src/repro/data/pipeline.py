@@ -29,6 +29,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.faults import fault_point
+
 __all__ = ["SyntheticCorpus", "DataConfig", "make_batch_fn", "SPLITS"]
 
 # Per-split RNG salts.  ``train`` is unsalted (historical keying); the other
@@ -95,6 +97,11 @@ def make_batch_fn(
     corpus = SyntheticCorpus(data_cfg)
 
     def get(step: int) -> dict:
+        # Injection point "data.fetch" (DESIGN.md §Resilience): a transient
+        # fault here models a flaky storage read; because batch ``step`` is
+        # a pure function of (seed, split, step), a retry after the fault
+        # reproduces the batch bit-identically — retries never skew data.
+        fault_point("data.fetch")
         key = (data_cfg.seed, step) if salt is None else (data_cfg.seed, salt, step)
         rng = np.random.default_rng(key)
         out = {"tokens": corpus.sample(rng, batch, seq)}

@@ -6,9 +6,14 @@ Submodules:
   rules engine with divisibility fallbacks; the ambient ``axis_rules``
   context that makes ``logical_constraint`` calls in model code resolve.
 * :mod:`repro.dist.checkpoint` — atomic step-directory checkpoints
-  (``step_N.tmp`` → rename), dtype-exact round-trips including bf16.
+  (``step_N.tmp`` → rename), dtype-exact round-trips including bf16,
+  per-leaf CRC-32 content checksums (corrupted shards raise
+  ``CheckpointCorrupt``), and ``load_last_good`` degradation to the
+  newest step that verifies.
 * :mod:`repro.dist.elastic` — ``RetryingRunner`` restart-from-checkpoint
-  loop and degraded-capacity mesh rebuilding.
+  loop (jittered exponential backoff, total retry budget,
+  permanent-error classification — ``repro.faults.PermanentFault`` is
+  never retried) and degraded-capacity mesh rebuilding.
 * :mod:`repro.dist.qgather` — int8-quantized FSDP gather transform
   (§Perf H3; kept out of default configs, see launch/specs.py).
 """

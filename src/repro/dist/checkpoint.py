@@ -1,14 +1,29 @@
-"""Atomic step-directory checkpoints with dtype-exact round-trips.
+"""Atomic step-directory checkpoints with dtype-exact, checksummed round-trips.
 
 Layout: ``<dir>/step_<N>/`` holding one raw-bytes blob per pytree leaf (in
-flatten order) plus ``manifest.json`` (step, user meta, per-leaf shape and
-dtype).  Writes go to ``step_<N>.tmp`` and are renamed into place only after
-the manifest lands, so a crashed half-write can never be mistaken for a
-checkpoint — :func:`cleanup_tmp` sweeps orphaned ``.tmp`` dirs at restart.
+flatten order) plus ``manifest.json`` (step, user meta, per-leaf shape,
+dtype, and CRC-32 content checksum).  Writes go to ``step_<N>.tmp`` and are
+renamed into place only after the manifest lands, so a crashed half-write
+can never be mistaken for a checkpoint — :func:`cleanup_tmp` sweeps
+orphaned ``.tmp`` dirs at restart.
+
+Corruption detection: every leaf's CRC-32 is computed over the bytes the
+writer *intended* (before any injected corruption) and verified on read —
+a flipped bit anywhere in a shard raises :class:`CheckpointCorrupt` instead
+of silently restoring garbage weights.  :func:`load_last_good` walks the
+step directories newest-first, skipping corrupt/unreadable steps, so a
+damaged latest checkpoint degrades to the last good one rather than
+wedging a resume (manifests written before checksums existed load
+unverified — there is nothing to verify against).
 
 Leaves are stored as raw buffers (``tobytes``), not ``np.save``: numpy can't
 round-trip ml_dtypes extension dtypes (bf16) through ``.npy`` without
 pickling, while ``np.frombuffer(..., np.dtype("bfloat16"))`` is exact.
+
+Fault injection (DESIGN.md §Resilience): each shard write consults
+``fault_point("ckpt.write")`` (``corrupt`` → one seeded byte of the
+on-disk shard is flipped; transient/permanent raise) and each shard read
+consults ``fault_point("ckpt.read")``.
 """
 
 from __future__ import annotations
@@ -16,6 +31,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -23,14 +39,24 @@ import jax.numpy as jnp
 import ml_dtypes  # noqa: F401 — registers bfloat16 & friends with np.dtype
 import numpy as np
 
+from repro.faults import active_plan, corrupt_bytes, fault_point
+
 __all__ = [
+    "CheckpointCorrupt",
     "save_checkpoint",
     "load_checkpoint",
+    "load_last_good",
     "latest_step",
+    "list_steps",
     "cleanup_tmp",
 ]
 
 _MANIFEST = "manifest.json"
+
+
+class CheckpointCorrupt(Exception):
+    """A shard's bytes do not match its manifest checksum (or the step is
+    otherwise unreadable in a way that indicates damage, not absence)."""
 
 
 def _step_dir(ckpt_dir: str, step: int) -> str:
@@ -48,9 +74,15 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = 
     records = []
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
+        data = np.ascontiguousarray(arr).tobytes()
+        # Checksum the intended bytes BEFORE any injected corruption: the
+        # read side must be able to prove what landed on disk is wrong.
+        crc = zlib.crc32(data)
+        if fault_point("ckpt.write") == "corrupt":
+            data = corrupt_bytes(active_plan(), data)
         with open(os.path.join(tmp, f"leaf_{i}.bin"), "wb") as f:
-            f.write(np.ascontiguousarray(arr).tobytes())
-        records.append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+            f.write(data)
+        records.append({"shape": list(arr.shape), "dtype": str(arr.dtype), "crc32": crc})
     manifest = {"step": step, "meta": meta or {}, "leaves": records}
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
@@ -72,7 +104,9 @@ def load_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None):
 
     ``like`` supplies the tree structure; leaf dtypes/shapes come from the
     manifest (and are checked against ``like`` where it carries them).
-    Returns ``(tree, manifest)``.
+    Shard bytes are verified against the manifest CRC-32 when present;
+    mismatches raise :class:`CheckpointCorrupt`.  Returns
+    ``(tree, manifest)``.
     """
     if step is None:
         step = latest_step(ckpt_dir)
@@ -100,26 +134,65 @@ def load_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None):
                 f"leaf {i}: checkpoint dtype {rec['dtype']} != template "
                 f"dtype {np.dtype(like_leaf.dtype)}"
             )
+        fault_point("ckpt.read")
         with open(os.path.join(d, f"leaf_{i}.bin"), "rb") as f:
             raw = f.read()
+        if "crc32" in rec and zlib.crc32(raw) != rec["crc32"]:
+            raise CheckpointCorrupt(
+                f"{d}/leaf_{i}.bin: content checksum mismatch "
+                f"(crc32 {zlib.crc32(raw)} != manifest {rec['crc32']}) — "
+                "shard corrupted on disk"
+            )
         arr = np.frombuffer(raw, dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
         out.append(jnp.asarray(arr))
     return jax.tree.unflatten(tdef, out), manifest
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
-    """Highest complete checkpoint step under ``ckpt_dir`` (None if none)."""
+def load_last_good(ckpt_dir: str, like: Any):
+    """Restore the newest checkpoint that verifies, skipping damaged steps.
+
+    Walks steps newest-first; corrupt or unreadable steps (checksum
+    mismatch, missing shard, undecodable manifest, template mismatch) are
+    recorded and skipped.  Returns ``(tree, manifest, skipped)`` where
+    ``skipped`` is ``[(step, reason), ...]``.  Raises
+    :class:`FileNotFoundError` when no step exists at all, and
+    :class:`CheckpointCorrupt` when steps exist but none verifies.
+    """
+    steps = list_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    skipped: list[tuple] = []
+    for step in reversed(steps):
+        try:
+            tree, manifest = load_checkpoint(ckpt_dir, like, step=step)
+            return tree, manifest, skipped
+        except (CheckpointCorrupt, ValueError, OSError, json.JSONDecodeError) as e:
+            skipped.append((step, f"{type(e).__name__}: {e}"))
+    raise CheckpointCorrupt(
+        f"{ckpt_dir}: no loadable checkpoint — all {len(steps)} step(s) "
+        f"damaged: {[s for s, _ in skipped]}"
+    )
+
+
+def list_steps(ckpt_dir: str) -> list:
+    """All complete checkpoint steps under ``ckpt_dir``, ascending."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
+        if name.startswith("step_") and not name.endswith((".tmp", ".old")):
             if os.path.exists(os.path.join(ckpt_dir, name, _MANIFEST)):
                 try:
                     steps.append(int(name[len("step_"):]))
                 except ValueError:
                     continue
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Highest complete checkpoint step under ``ckpt_dir`` (None if none)."""
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def cleanup_tmp(ckpt_dir: str):

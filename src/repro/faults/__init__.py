@@ -1,0 +1,34 @@
+"""Deterministic fault injection (DESIGN.md §Resilience).
+
+A seeded :class:`FaultPlan` schedules transient/permanent errors, pool
+exhaustion spikes, and checkpoint byte corruption at named injection
+points instrumented throughout serving and the long-running pipelines, so
+every failure path is a reproducible test (tests/test_chaos.py) instead of
+a production surprise.
+"""
+
+from repro.faults.plan import (
+    SITES,
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    PermanentFault,
+    TransientFault,
+    active_plan,
+    corrupt_bytes,
+    fault_plan,
+    fault_point,
+)
+
+__all__ = [
+    "SITES",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
+    "PermanentFault",
+    "TransientFault",
+    "active_plan",
+    "corrupt_bytes",
+    "fault_plan",
+    "fault_point",
+]

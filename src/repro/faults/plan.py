@@ -1,0 +1,261 @@
+"""Seeded, deterministic fault injection for serving and pipelines.
+
+Every failure path in this repo is exercised as a *reproducible test*, not
+discovered as a production surprise: a :class:`FaultPlan` is a pure function
+of ``(specs, seed)`` and of the per-site invocation counters, so the same
+plan driven through the same workload fires the same faults at the same
+instants every time (the chaos suite's whole premise —
+tests/test_chaos.py).
+
+Injection points are registered by name (:data:`SITES`) and instrumented in
+the production code with a single :func:`fault_point` call each:
+
+=====================  ====================================================
+``engine.step``        top of ``ServingEngine.step`` / ``PagedServingEngine
+                       .step`` — before any state mutation, so a transient
+                       fault is a pure no-op retry
+``pool.alloc``         ``serve.kv_cache.PagePool.alloc`` — a ``deny``
+                       action simulates a pool-exhaustion spike (alloc
+                       returns None as if the pool were dry)
+``ckpt.write``         per-leaf in ``dist.checkpoint.save_checkpoint`` —
+                       ``corrupt`` flips one seeded byte of the shard on
+                       disk (the manifest checksum still describes the true
+                       bytes, so the read side *must* detect it)
+``ckpt.read``          per-leaf in ``dist.checkpoint.load_checkpoint``
+``kernel.dispatch``    Pallas dispatch wrappers (``kernels.ops``) — a
+                       ``deny`` action simulates VMEM-gate pressure and
+                       forces the (bit-equivalent) XLA fallback; fires at
+                       dispatch time, i.e. trace time under jit
+``data.fetch``         ``data.pipeline.make_batch_fn``'s batch getter
+=====================  ====================================================
+
+Fault kinds:
+
+* ``transient`` — raises :class:`TransientFault`; the consumer is expected
+  to retry (engines count and retry the step; pipeline loops go through
+  ``dist.elastic.RetryingRunner``'s backoff).
+* ``permanent`` — raises :class:`PermanentFault`; never retried
+  (``RetryingRunner`` classifies it and re-raises immediately).
+* ``deny`` — soft action returned to the caller (pool alloc failure, VMEM
+  gate failure); no exception.
+* ``corrupt`` — soft action; the caller damages its payload (checkpoint
+  shard bytes) in a seeded, reproducible way via :func:`corrupt_bytes`.
+
+Activation is lexically scoped — ``with fault_plan(plan): ...`` — and when
+no plan is active every ``fault_point`` is a cheap no-op, so the hooks cost
+nothing in production.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "SITES",
+    "FaultError",
+    "TransientFault",
+    "PermanentFault",
+    "FaultSpec",
+    "FaultPlan",
+    "fault_plan",
+    "fault_point",
+    "active_plan",
+    "corrupt_bytes",
+]
+
+SITES = (
+    "engine.step",
+    "pool.alloc",
+    "ckpt.read",
+    "ckpt.write",
+    "kernel.dispatch",
+    "data.fetch",
+)
+
+_KINDS = ("transient", "permanent", "deny", "corrupt")
+
+
+class FaultError(Exception):
+    """Base class for injected faults; carries the site and invocation."""
+
+    def __init__(self, site: str, invocation: int):
+        self.site = site
+        self.invocation = invocation
+        super().__init__(f"injected fault at {site}#{invocation}")
+
+
+class TransientFault(FaultError):
+    """Recoverable: consumers retry (engine step retry, runner backoff)."""
+
+
+class PermanentFault(FaultError):
+    """Unrecoverable: never retried (RetryingRunner re-raises at once)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault at one site.
+
+    A spec fires on a per-site invocation ``n`` (0-based) when ``n ∈ at``,
+    or ``window[0] <= n < window[1]``, or a seeded Bernoulli draw with
+    probability ``p`` succeeds — whichever triggers are set (any of them
+    firing fires the spec).  ``max_fires`` caps the total fires of this
+    spec (None = unbounded); probability draws are consumed on *every*
+    invocation of the site so the fire schedule never depends on what other
+    specs did.
+    """
+
+    site: str
+    kind: str
+    at: tuple = ()
+    window: Optional[tuple] = None
+    p: float = 0.0
+    max_fires: Optional[int] = None
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; expected one of {SITES}")
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; expected one of {_KINDS}")
+        object.__setattr__(self, "at", tuple(int(a) for a in self.at))
+        if self.window is not None:
+            a, b = self.window
+            object.__setattr__(self, "window", (int(a), int(b)))
+        if not (0.0 <= self.p <= 1.0):
+            raise ValueError(f"p={self.p} not a probability")
+
+
+class FaultPlan:
+    """A deterministic fault schedule over the registered injection sites.
+
+    ``check(site)`` advances the site's invocation counter and returns the
+    action the instrumented code must take (``"ok"`` / ``"deny"`` /
+    ``"corrupt"``) or raises (``transient`` / ``permanent``).  The first
+    matching spec wins, in construction order.  ``plan.fired`` is the audit
+    trail: ``(site, invocation, kind)`` per fire.
+    """
+
+    def __init__(self, specs, seed: int = 0):
+        self.specs = tuple(specs)
+        self.seed = int(seed)
+        self.counts: dict[str, int] = {s: 0 for s in SITES}
+        self.fired: list[tuple] = []
+        self._fires_left = [
+            float("inf") if sp.max_fires is None else int(sp.max_fires)
+            for sp in self.specs
+        ]
+        # One independent RNG stream per spec, keyed (seed, spec index):
+        # each spec's p-draws are a pure function of the site's invocation
+        # sequence, untouched by the other specs' draws.
+        self._rngs = [
+            np.random.default_rng((self.seed, i)) for i in range(len(self.specs))
+        ]
+        # Seeded stream for payload corruption (byte choice).
+        self._corrupt_rng = np.random.default_rng((self.seed, 0xC0FFEE))
+
+    @classmethod
+    def from_spec(cls, doc) -> "FaultPlan":
+        """Build from a JSON document (dict, JSON string, or path to one):
+        ``{"seed": 0, "faults": [{"site": ..., "kind": ..., "at": [...],
+        "window": [a, b], "p": 0.0, "max_fires": null}, ...]}``."""
+        if isinstance(doc, str):
+            try:
+                doc = json.loads(doc)
+            except json.JSONDecodeError:
+                with open(doc) as f:
+                    doc = json.load(f)
+        specs = [
+            FaultSpec(
+                site=d["site"],
+                kind=d["kind"],
+                at=tuple(d.get("at", ())),
+                window=tuple(d["window"]) if d.get("window") else None,
+                p=float(d.get("p", 0.0)),
+                max_fires=d.get("max_fires"),
+            )
+            for d in doc.get("faults", [])
+        ]
+        return cls(specs, seed=int(doc.get("seed", 0)))
+
+    def check(self, site: str) -> str:
+        if site not in self.counts:
+            raise ValueError(f"unknown fault site {site!r}; expected one of {SITES}")
+        n = self.counts[site]
+        self.counts[site] = n + 1
+        action = "ok"
+        for i, sp in enumerate(self.specs):
+            if sp.site != site:
+                continue
+            fire = n in sp.at
+            if sp.window is not None:
+                fire = fire or (sp.window[0] <= n < sp.window[1])
+            if sp.p > 0.0:
+                # Always draw: the stream position is the invocation index.
+                fire = bool(self._rngs[i].random() < sp.p) or fire
+            if not fire or self._fires_left[i] <= 0:
+                continue
+            self._fires_left[i] -= 1
+            self.fired.append((site, n, sp.kind))
+            if sp.kind == "transient":
+                raise TransientFault(site, n)
+            if sp.kind == "permanent":
+                raise PermanentFault(site, n)
+            action = sp.kind  # deny | corrupt — first match wins
+            break
+        return action
+
+    def corrupt_index(self, n: int) -> int:
+        """Seeded byte index into an ``n``-byte payload (for ``corrupt``)."""
+        return int(self._corrupt_rng.integers(0, max(n, 1)))
+
+
+_ACTIVE: list[FaultPlan] = []
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def fault_plan(plan: Optional[FaultPlan]):
+    """Activate ``plan`` for the dynamic extent of the block (re-entrant:
+    the innermost plan wins).  ``None`` is accepted and is a no-op, so
+    callers can thread an optional plan without branching."""
+    if plan is None:
+        yield None
+        return
+    _ACTIVE.append(plan)
+    try:
+        yield plan
+    finally:
+        _ACTIVE.pop()
+
+
+def fault_point(site: str) -> str:
+    """The single instrumentation hook: consult the active plan (if any).
+
+    Returns the soft action (``"ok"`` / ``"deny"`` / ``"corrupt"``) or
+    raises :class:`TransientFault` / :class:`PermanentFault`.  With no
+    active plan this is a dict-lookup-free no-op.
+    """
+    plan = active_plan()
+    if plan is None:
+        return "ok"
+    return plan.check(site)
+
+
+def corrupt_bytes(plan: FaultPlan, data: bytes) -> bytes:
+    """Flip one seeded byte of ``data`` (XOR 0xFF so the flip never
+    round-trips to the original value) — the reproducible shard-corruption
+    primitive behind ``ckpt.write``'s ``corrupt`` action."""
+    if not data:
+        return data
+    idx = plan.corrupt_index(len(data))
+    out = bytearray(data)
+    out[idx] ^= 0xFF
+    return bytes(out)

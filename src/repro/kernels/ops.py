@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.faults import fault_point
 from repro.kernels import ref
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
@@ -306,6 +307,12 @@ def paged_attention(
             k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
         )
 
+    # Injection point "kernel.dispatch" (DESIGN.md §Resilience): a "deny"
+    # action simulates VMEM-gate pressure — the dispatcher degrades to the
+    # XLA gather reference, which reads the same pages bitwise (tested), so
+    # outputs are unchanged.  Fires at dispatch time (trace time under jit).
+    if fault_point("kernel.dispatch") == "deny":
+        return reference()
     if interpret is None:
         if not on_tpu():
             return reference()
@@ -377,6 +384,10 @@ def dequant_matmul(
             out_dtype=out_dtype, group_size=group_size,
         )
 
+    # Injection point "kernel.dispatch": "deny" degrades to the XLA
+    # reference (same semantics; see paged_attention's note).
+    if fault_point("kernel.dispatch") == "deny":
+        return reference()
     if interpret is None:
         if not on_tpu():
             return reference()

@@ -21,7 +21,21 @@ Flags beyond the model/method basics:
   as choosing a different calibration batch size).
 * ``--resume`` — report progress from a previous run's ``progress.jsonl``
   in the output dir before starting (block-level audit trail of what
-  completed and the per-block error summary).
+  completed and the per-block error summary), then restart from scratch.
+  The whole pipeline is deterministic for fixed flags — calibration batch
+  ``i`` is a pure function of ``(seed, "calib", i)`` and the CD solve has
+  no RNG — so a restart emits a **bit-identical** artifact to the
+  uninterrupted run (tests/test_chaos.py pins this).
+* ``--fault-plan`` — activate a seeded fault-injection plan
+  (repro.faults) for chaos testing; transient faults in the calibration
+  fetch are absorbed by a retry loop, a corrupted source checkpoint falls
+  back to the last good step.
+
+Resilience (DESIGN.md §Resilience): the source checkpoint loads through
+``load_last_good`` (CRC-verified, damaged steps skipped with a warning),
+and the calibration fetch runs under ``dist/elastic.RetryingRunner`` —
+a transient storage fault restarts the (deterministic) fetch instead of
+killing the run.
 
 Progress: one line + one ``progress.jsonl`` record per quantized block
 (stack, period, block index, linears solved, mean relative error, seconds).
@@ -38,38 +52,12 @@ End-to-end on the reduced CPU configs (quickstart-sized, ~a minute):
 import argparse
 import json
 import os
+import sys
 
-
-def load_progress(path: str) -> list:
-    """Parse a ``progress.jsonl`` audit trail, tolerating a truncated tail.
-
-    A run killed mid-write leaves a partial (or empty) last line; resume
-    must report from the last *complete* record rather than crash on the
-    torn one.  Any undecodable line after the last complete record is
-    dropped; an undecodable line *followed by* complete records means real
-    corruption and still raises (same policy as the train CLI's
-    empty-metrics handling: degrade on torn tails, never mask corruption).
-    """
-    if not os.path.exists(path):
-        return []
-    records, bad_at = [], None
-    with open(path) as f:
-        for n, ln in enumerate(f):
-            if not ln.strip():
-                continue
-            try:
-                rec = json.loads(ln)
-            except json.JSONDecodeError:
-                if bad_at is None:
-                    bad_at = n
-                continue
-            if bad_at is not None:
-                raise ValueError(
-                    f"{path}: undecodable record at line {bad_at + 1} "
-                    "followed by later records — corrupt, not truncated"
-                )
-            records.append(rec)
-    return records
+# Historical home of the torn-tail-tolerant progress parser; the shared
+# implementation now lives in repro.launch.progress (tune.py and the resume
+# paths import it from there) — re-exported so existing imports keep working.
+from repro.launch.progress import append_record, load_progress  # noqa: F401
 
 
 def main():
@@ -99,14 +87,29 @@ def main():
                     help="capture-pass chunk size in sequences (0 = whole batch)")
     ap.add_argument("--resume", action="store_true",
                     help="report a previous run's block progress before starting")
+    ap.add_argument("--fault-plan", default="",
+                    help="fault-injection plan: path to a JSON spec or an "
+                         "inline JSON string (see repro.faults.FaultPlan)")
     args = ap.parse_args()
 
+    from repro.faults import FaultPlan, fault_plan
+
+    plan_obj = FaultPlan.from_spec(args.fault_plan) if args.fault_plan else None
+    if plan_obj is not None:
+        print(f"fault plan active: seed={plan_obj.seed}, "
+              f"{len(plan_obj.specs)} spec(s)")
+    with fault_plan(plan_obj):
+        _run(args)
+
+
+def _run(args):
     import jax.numpy as jnp
 
     from repro.configs import get_config
     from repro.core.solver import PTQConfig, ptq_quantize_model
     from repro.data.pipeline import DataConfig, make_batch_fn
     from repro.dist import checkpoint as ckpt
+    from repro.dist.elastic import RetryingRunner
     from repro.launch.mesh import make_data_mesh
     from repro.launch.train import reduced
     from repro.models import make_plan, param_shapes
@@ -143,7 +146,10 @@ def main():
         lambda s: jnp.zeros(s.shape, s.dtype), param_shapes(plan)
     )
     like = {"params": like_params, "opt": adamw_init(like_params, AdamWConfig())}
-    state, manifest = ckpt.load_checkpoint(args.ckpt_dir, like)
+    state, manifest, skipped = ckpt.load_last_good(args.ckpt_dir, like)
+    for step, reason in skipped:
+        print(f"WARNING: skipped damaged checkpoint step_{step}: "
+              f"{reason.splitlines()[0]}", file=sys.stderr)
     params = state["params"]
     print(f"loaded checkpoint step {manifest['step']}")
 
@@ -162,10 +168,18 @@ def main():
         DataConfig(vocab=cfg.vocab, seed=args.data_seed), cfg,
         batch=4, seq=args.seq, split="calib",
     )
-    calib = [
-        {k: jnp.asarray(v) for k, v in batch_fn(i).items()}
-        for i in range(args.calib_batches)
-    ]
+    # Retried fetch: batch i is a pure function of (seed, "calib", i), so
+    # restarting from an empty list after a transient storage fault
+    # reproduces the exact same calibration set.
+    fetcher = RetryingRunner(
+        lambda acc, i: acc + [{k: jnp.asarray(v) for k, v in batch_fn(i).items()}],
+        lambda: ([], 0),
+        max_retries=5,
+    )
+    calib, _ = fetcher.run([], 0, args.calib_batches)
+    if fetcher.recoveries:
+        print(f"calibration fetch recovered from {fetcher.recoveries} "
+              "transient fault(s)")
     pcfg = PTQConfig(
         method=args.method,
         spec=GridSpec(bits=args.bits, group_size=args.group_size or None),
@@ -184,8 +198,7 @@ def main():
             f"{rec['n_linears']} linears  mean_err={rec['mean_rel_error']:.4g}  "
             f"{rec['seconds']}s"
         )
-        with open(progress_path, "a") as f:
-            f.write(json.dumps(rec) + "\n")
+        append_record(progress_path, rec)
 
     qparams, report = ptq_quantize_model(
         plan, params, calib, pcfg, mesh=mesh, progress_cb=progress

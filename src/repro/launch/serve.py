@@ -4,12 +4,21 @@
         --ckpt-dir /tmp/repro_quant --requests 8 --engine paged
 
 ``--engine paged`` (default for self-attention decoder archs) serves from
-the paged-KV engine — shared page pool, chunked prefill, prefix caching;
-``--engine contiguous`` keeps the per-slot max_seq reservation baseline
-(and is the only choice for enc-dec / SSM-hybrid archs).
+the paged-KV engine — shared page pool, chunked prefill, prefix caching,
+SLO-aware scheduling; ``--engine contiguous`` keeps the per-slot max_seq
+reservation baseline (and is the only choice for enc-dec / SSM-hybrid
+archs — the fallback warns loudly, and ``--strict-engine`` turns it into a
+hard error for deployments that must not silently lose paging).
+
+SLO knobs (paged engine): ``--deadline-ms`` attaches a per-request
+deadline, ``--priority`` a scheduling priority; requests finish with a
+terminal status (completed / preempted_resumed / shed / deadline_missed).
+``--fault-plan`` activates seeded fault injection (repro.faults) for chaos
+drills.
 """
 
 import argparse
+import sys
 
 
 def main():
@@ -24,6 +33,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--engine", choices=["paged", "contiguous"], default="paged")
+    ap.add_argument("--strict-engine", action="store_true",
+                    help="hard-error instead of falling back to the "
+                         "contiguous engine when --engine paged is "
+                         "unavailable for the arch")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=0,
                     help="KV pool size in pages (0 = ample: no preemption)")
@@ -31,8 +44,32 @@ def main():
     ap.add_argument("--kv-dtype", choices=["bf16", "int8", "int4"], default="bf16",
                     help="KV cache storage; int4 packs two codes/byte and is "
                          "paged-engine only")
+    ap.add_argument("--scheduler", choices=["slo", "fifo"], default="slo",
+                    help="paged-engine scheduling policy (fifo = legacy "
+                         "arrival order + preempt-newest)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request SLO deadline in ms (0 = none); "
+                         "unmeetable requests are shed, overdue ones "
+                         "finish as deadline_missed")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="request priority (higher = more urgent; low-"
+                         "priority work parks under pool pressure)")
+    ap.add_argument("--fault-plan", default="",
+                    help="fault-injection plan: path to a JSON spec or an "
+                         "inline JSON string (see repro.faults.FaultPlan)")
     args = ap.parse_args()
 
+    from repro.faults import FaultPlan, fault_plan
+
+    plan_obj = FaultPlan.from_spec(args.fault_plan) if args.fault_plan else None
+    if plan_obj is not None:
+        print(f"fault plan active: seed={plan_obj.seed}, "
+              f"{len(plan_obj.specs)} spec(s)")
+    with fault_plan(plan_obj):
+        _run(args)
+
+
+def _run(args):
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -91,28 +128,43 @@ def main():
                 raise SystemExit(
                     f"--kv-dtype int4 unavailable for {args.arch}: {e}"
                 )
-            print(f"paged engine unavailable for {args.arch} ({e}); "
-                  "falling back to the contiguous engine")
+            if args.strict_engine:
+                raise SystemExit(
+                    f"--strict-engine: paged engine unavailable for arch "
+                    f"{args.arch!r} ({e}) and fallback is disabled"
+                )
+            print(
+                f"WARNING: paged engine unavailable for arch {args.arch!r} "
+                f"({e}) — FALLING BACK to the contiguous engine: no paged "
+                "KV pool, no prefix cache, no SLO preemption; per-slot "
+                "max_seq KV is reserved up front (pass --strict-engine to "
+                "make this a hard error)",
+                file=sys.stderr,
+            )
             args.engine = "contiguous"
     if args.engine == "paged":
         eng = PagedServingEngine(
             plan, params, max_batch=args.max_batch, max_seq=512,
             page_size=args.page_size, n_pages=args.n_pages or None,
-            prefill_chunk=args.prefill_chunk,
+            prefill_chunk=args.prefill_chunk, scheduler=args.scheduler,
         )
     else:
         eng = ServingEngine(plan, params, max_batch=args.max_batch, max_seq=512)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, rng.integers(4, 32)).astype(np.int32)
-        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
+        eng.submit(Request(
+            rid=i, prompt=prompt, max_new_tokens=args.max_new,
+            deadline_ms=args.deadline_ms or None, priority=args.priority,
+        ))
     finished = eng.run()
     for r in sorted(finished, key=lambda r: r.rid):
-        print(f"req{r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
+        print(f"req{r.rid} [{r.status}]: prompt[{len(r.prompt)}] -> {r.output}")
     if args.engine == "paged":
         print(f"{len(finished)} requests, {eng.n_decode_steps} decode steps, "
               f"{eng.n_prefill_chunks} prefill chunks "
               f"({eng.n_prefix_hit_tokens} prefix-cached tokens, "
-              f"{eng.n_preemptions} preemptions)")
+              f"{eng.n_preemptions} preemptions, {eng.n_shed} shed, "
+              f"{eng.n_deadline_missed} deadline-missed)")
     else:
         print(f"{len(finished)} requests, {eng.n_decode_steps} decode steps, "
               f"{eng.n_prefills} prefills")

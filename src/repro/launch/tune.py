@@ -36,6 +36,7 @@ End-to-end on the reduced CPU configs:
 import argparse
 import json
 import os
+import sys
 
 
 def main():
@@ -71,8 +72,22 @@ def main():
                     help="corpus seed — must match the TRAINING corpus")
     ap.add_argument("--resume", action="store_true",
                     help="continue from <out-dir>/progress.jsonl candidate records")
+    ap.add_argument("--fault-plan", default="",
+                    help="fault-injection plan: path to a JSON spec or an "
+                         "inline JSON string (see repro.faults.FaultPlan)")
     args = ap.parse_args()
 
+    from repro.faults import FaultPlan, fault_plan
+
+    plan_obj = FaultPlan.from_spec(args.fault_plan) if args.fault_plan else None
+    if plan_obj is not None:
+        print(f"fault plan active: seed={plan_obj.seed}, "
+              f"{len(plan_obj.specs)} spec(s)")
+    with fault_plan(plan_obj):
+        _run(args)
+
+
+def _run(args):
     import jax
     import jax.numpy as jnp
 
@@ -80,7 +95,7 @@ def main():
     from repro.data.pipeline import DataConfig, make_batch_fn
     from repro.dist import checkpoint as ckpt
     from repro.dist.elastic import RetryingRunner
-    from repro.launch.quantize import load_progress
+    from repro.launch.progress import append_record, load_progress
     from repro.launch.train import reduced
     from repro.models import make_plan, param_shapes
     from repro.train.optimizer import AdamWConfig, adamw_init
@@ -117,24 +132,34 @@ def main():
         os.remove(progress_path)
 
     def log_record(rec: dict):
-        with open(progress_path, "a") as f:
-            f.write(json.dumps(rec) + "\n")
+        append_record(progress_path, rec)
 
     like_params = jax.tree.map(
         lambda s: jnp.zeros(s.shape, s.dtype), param_shapes(plan)
     )
     like = {"params": like_params, "opt": adamw_init(like_params, AdamWConfig())}
-    state, manifest = ckpt.load_checkpoint(args.ckpt_dir, like)
+    state, manifest, skipped = ckpt.load_last_good(args.ckpt_dir, like)
+    for step, reason in skipped:
+        print(f"WARNING: skipped damaged checkpoint step_{step}: "
+              f"{reason.splitlines()[0]}", file=sys.stderr)
     params = state["params"]
     print(f"loaded checkpoint step {manifest['step']}")
 
     dcfg = DataConfig(vocab=cfg.vocab, seed=args.data_seed)
     calib_fn, _ = make_batch_fn(dcfg, cfg, batch=4, seq=args.seq, split="calib")
     eval_fn, _ = make_batch_fn(dcfg, cfg, batch=4, seq=args.seq, split="eval")
-    calib = [
-        {k: jnp.asarray(v) for k, v in calib_fn(i).items()}
-        for i in range(args.calib_batches)
-    ]
+    # Retried fetch: calib batch i is pure in (seed, "calib", i) — a
+    # transient storage fault restarts the fetch and reproduces the exact
+    # same calibration set.
+    fetcher = RetryingRunner(
+        lambda acc, i: acc + [{k: jnp.asarray(v) for k, v in calib_fn(i).items()}],
+        lambda: ([], 0),
+        max_retries=5,
+    )
+    calib, _ = fetcher.run([], 0, args.calib_batches)
+    if fetcher.recoveries:
+        print(f"calibration fetch recovered from {fetcher.recoveries} "
+              "transient fault(s)")
 
     def progress(rec: dict):
         if "probe" in rec:

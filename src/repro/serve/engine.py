@@ -18,23 +18,56 @@ it token-for-token on bf16 KV) and as the benchmark baseline
 slots, prompts stream in **chunked prefills** interleaved with decode steps
 (long prompts never stall the running batch), matching prompt prefixes
 share pages (hash-chain prefix cache + copy-on-write partial hits), and
-when the pool runs dry the newest sequence is **preempted** — its pages
-freed, the request requeued, and later resumed by deterministic
-re-prefill of prompt + already-generated tokens (greedy decode makes the
-final output identical to an uninterrupted run).  Decode attends through
+when the pool runs dry a sequence is **preempted** — its pages freed, the
+request requeued, and later resumed by deterministic re-prefill of
+prompt + already-generated tokens (greedy decode makes the final output
+identical to an uninterrupted run).  Decode attends through
 ``ops.paged_attention`` — the Pallas paged kernel on TPU, the XLA gather
 fallback elsewhere.
+
+SLO scheduling (DESIGN.md §Resilience): requests carry an optional
+``deadline_ms`` (relative to submit) and an integer ``priority`` (higher =
+more important).  Under ``scheduler="slo"`` (the default) the engine
+
+* admits in ``(priority desc, deadline asc, arrival)`` order — low-priority
+  requests **park** in the queue under sustained pressure instead of
+  competing for pages;
+* **sheds** a request at admission when its deadline is *provably*
+  unmeetable — the optimistic lower bound (its own prefill chunks + decode
+  steps at the fastest step cost ever observed, i.e. assuming zero queueing
+  and zero pool pressure) already overshoots the deadline;
+* **expires** queued or running requests the moment their deadline passes
+  (pages freed, partial output kept) instead of burning pool on work
+  nobody can use;
+* preempts by **deadline/priority**: the victim is the lowest-priority,
+  most-slack, newest sequence — not simply the newest.
+
+Every request leaves with a terminal ``status``: ``completed`` (all tokens,
+never preempted), ``preempted_resumed`` (all tokens, survived ≥1
+preemption — token-identical to an uninterrupted run by the deterministic
+resume contract), ``shed``, or ``deadline_missed``.  ``scheduler="fifo"``
+keeps the legacy FIFO/preempt-newest behaviour and ignores deadlines — the
+benchmark baseline for the SLO scheduler.
+
+Fault injection: both engines consult ``fault_point("engine.step")`` at the
+top of :meth:`step` — before any state mutation — so an injected transient
+fault is counted and retried as a pure no-op step; page allocation runs
+through the ``pool.alloc`` injection point (a denial spike exercises
+preemption and, if nothing else holds pages, self-preemption and retry
+rather than a crash).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.faults import TransientFault, fault_point
 from repro.models import (
     decode_step,
     init_cache,
@@ -46,7 +79,11 @@ from repro.models import (
 from repro.models.model import ModelPlan
 from repro.serve.kv_cache import NULL_PAGE, PagePool, page_nbytes
 
-__all__ = ["Request", "ServingEngine", "PagedServingEngine"]
+__all__ = ["Request", "ServingEngine", "PagedServingEngine", "TERMINAL_STATUSES"]
+
+TERMINAL_STATUSES = ("completed", "preempted_resumed", "shed", "deadline_missed")
+
+_INF = float("inf")
 
 
 @dataclasses.dataclass
@@ -54,8 +91,23 @@ class Request:
     rid: int
     prompt: np.ndarray  # (n,) int32
     max_new_tokens: int = 16
+    deadline_ms: Optional[float] = None  # SLO deadline, relative to submit
+    priority: int = 0  # higher = more important (scheduler="slo" only)
     output: Optional[list] = None
     done: bool = False
+    status: str = "pending"  # terminal: one of TERMINAL_STATUSES
+    error: Optional[str] = None  # set when shed (the clear rejection reason)
+    submit_t: Optional[float] = None  # engine-clock timestamps
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    n_preemptions: int = 0
+    submit_order: int = -1  # arrival tie-break (assigned by the engine)
+
+    def deadline_at(self) -> float:
+        """Absolute engine-clock deadline (inf when no SLO attached)."""
+        if self.deadline_ms is None or self.submit_t is None:
+            return _INF
+        return self.submit_t + self.deadline_ms / 1e3
 
 
 class ServingEngine:
@@ -77,6 +129,7 @@ class ServingEngine:
         max_seq: int = 512,
         prefill_pad: int = 32,
         record_logits: bool = False,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.plan = plan
         self.params = params
@@ -84,6 +137,7 @@ class ServingEngine:
         self.max_seq = max_seq
         self.prefill_pad = prefill_pad
         self.record_logits = record_logits
+        self.clock = clock or time.monotonic
         self.logit_trace: dict[int, list] = {}
 
         self.cache = init_cache(plan, max_batch, max_seq)
@@ -92,12 +146,14 @@ class ServingEngine:
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self._last_tok = np.zeros((max_batch, 1), np.int32)
+        self._submitted = 0
 
         self._decode = jax.jit(lambda p, t, c, pos: decode_step(plan, p, t, c, pos))
         self._prefill = jax.jit(lambda p, b, c: prefill(plan, p, b, c))
         self.n_decode_steps = 0
         self.n_prefills = 0
         self.n_prefill_tokens = 0  # real prompt tokens (pad excluded)
+        self.n_transient_faults = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -114,6 +170,10 @@ class ServingEngine:
                 f"max_new {req.max_new_tokens} > max_seq {self.max_seq}"
             )
         req.output = []
+        req.status = "queued"
+        req.submit_t = self.clock()
+        req.submit_order = self._submitted
+        self._submitted += 1
         self.queue.append(req)
 
     def _admit(self):
@@ -150,10 +210,18 @@ class ServingEngine:
                 continue
             if len(req.output) >= req.max_new_tokens or self.slot_pos[i] >= self.max_seq - 1:
                 req.done = True
+                req.status = "completed"
+                req.finish_t = self.clock()
                 self.finished.append(req)
                 self.slot_req[i] = None
 
     def step(self) -> bool:
+        try:
+            fault_point("engine.step")
+        except TransientFault:
+            # Nothing mutated yet — a pure no-op step; retry next time.
+            self.n_transient_faults += 1
+            return True
         self._admit()
         self._retire()  # max_new_tokens == 0 finishes without a decode
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
@@ -165,6 +233,7 @@ class ServingEngine:
         )
         self.n_decode_steps += 1
         logits = np.asarray(logits.astype(jnp.float32))
+        now = self.clock()
         for i in active:
             tok = int(np.argmax(logits[i]))
             if self.record_logits:
@@ -172,7 +241,10 @@ class ServingEngine:
                     logits[i]
                 )
             self._last_tok[i, 0] = tok
-            self.slot_req[i].output.append(tok)
+            req = self.slot_req[i]
+            if not req.output:
+                req.first_token_t = now
+            req.output.append(tok)
             self.slot_pos[i] += 1
         self._retire()
         return True
@@ -196,14 +268,14 @@ class _Seq:
     n_prefilled: int  # positions [0, n_prefilled) hold valid KV
     n_target: int  # == len(tokens) at admission; prefill ends here
     hashed_upto: int = 0  # pages registered into the prefix cache so far
-    order: int = 0  # admission order (preemption picks the newest)
+    order: int = 0  # admission order (the final preemption tie-break)
 
 
 class PagedServingEngine:
     """Paged-KV engine: shared page pool, chunked prefill, prefix cache,
-    preemption-by-eviction.  See the module docstring for the scheduler
-    contract; on bf16 KV its outputs are token-identical to
-    :class:`ServingEngine` (asserted in tests/test_paged_serve.py)."""
+    SLO-aware scheduling with preemption-by-eviction.  See the module
+    docstring for the scheduler contract; on bf16 KV its outputs are
+    token-identical to :class:`ServingEngine` (tests/test_paged_serve.py)."""
 
     def __init__(
         self,
@@ -217,7 +289,11 @@ class PagedServingEngine:
         prefill_chunk: int = 64,
         prefix_cache: bool = True,
         record_logits: bool = False,
+        scheduler: str = "slo",
+        clock: Optional[Callable[[], float]] = None,
     ):
+        if scheduler not in ("slo", "fifo"):
+            raise ValueError(f"unknown scheduler {scheduler!r}; expected slo|fifo")
         self.plan = plan
         self.params = params
         self.max_batch = max_batch
@@ -230,6 +306,8 @@ class PagedServingEngine:
         self.prefill_chunk = prefill_chunk
         self.prefix_cache = prefix_cache
         self.record_logits = record_logits
+        self.scheduler = scheduler
+        self.clock = clock or time.monotonic
 
         self.cache = init_paged_cache(plan, n_pages, page_size)
         self.pool = PagePool(n_pages, page_size)
@@ -241,6 +319,7 @@ class PagedServingEngine:
         self.slot_pos = np.zeros(max_batch, np.int64)
         self._last_tok = np.zeros((max_batch, 1), np.int32)
         self._admitted = 0
+        self._submitted = 0
         self.logit_trace: dict[int, list] = {}
 
         # The page pool is donated (same policy as launch/specs.py serve
@@ -268,6 +347,15 @@ class PagedServingEngine:
         self.n_cow_hits = 0
         self.n_guard_copies = 0  # replay-target copies off registered pages
         self.n_preemptions = 0
+        self.n_shed = 0
+        self.n_deadline_missed = 0
+        self.n_transient_faults = 0
+        # Fastest step costs ever observed (engine clock): the optimistic
+        # per-step floor behind provable-shed admission.  None until the
+        # first measurement — admission cannot *prove* anything without
+        # cost evidence, so it never sheds cold.
+        self._min_decode_s: Optional[float] = None
+        self._min_chunk_s: Optional[float] = None
         # KV pages streamed by decode attention: Σ over decode steps and
         # active lanes of ceil(context/page_size) — the roofline's
         # context_pages term, measured.  Periods are folded in by
@@ -295,7 +383,29 @@ class PagedServingEngine:
                 f"{len(req.prompt) + req.max_new_tokens} positions"
             )
         req.output = []
+        req.status = "queued"
+        req.submit_t = self.clock()
+        req.submit_order = self._submitted
+        self._submitted += 1
         self.queue.append(req)
+
+    def _finish(self, req: Request, status: str, error: Optional[str] = None):
+        req.done = True
+        req.status = status
+        req.error = error
+        req.finish_t = self.clock()
+        if status == "shed":
+            self.n_shed += 1
+        elif status == "deadline_missed":
+            self.n_deadline_missed += 1
+        self.finished.append(req)
+
+    def _release_lane(self, lane: int):
+        seq = self.lanes[lane]
+        for p in seq.pages:
+            self.pool.release(p)
+        self.lanes[lane] = None
+        self._set_row(lane, [])
 
     def _dev_table_now(self):
         if self._dev_table is None:
@@ -307,16 +417,85 @@ class PagedServingEngine:
         self.table[lane, : len(pages)] = pages
         self._dev_table = None
 
+    # -- SLO bookkeeping ------------------------------------------------
+    def _queue_pick(self) -> int:
+        """Index into ``self.queue`` of the next request to admit.
+
+        ``fifo``: strict arrival order (preempted requests re-queue at the
+        front).  ``slo``: highest priority first, then earliest deadline,
+        then arrival — which is exactly how low-priority requests *park*
+        under sustained pressure: they stay queued (holding no pages)
+        while urgent work flows past them.
+        """
+        if self.scheduler == "fifo" or len(self.queue) == 1:
+            return 0
+        return min(
+            range(len(self.queue)),
+            key=lambda i: (
+                -self.queue[i].priority,
+                self.queue[i].deadline_at(),
+                self.queue[i].submit_order,
+            ),
+        )
+
+    def _provably_unmeetable(self, req: Request) -> Optional[str]:
+        """A rejection reason when even the *optimistic* completion bound —
+        the request's own prefill chunks plus its remaining decode steps at
+        the fastest per-step cost ever observed, assuming zero queueing and
+        zero pool pressure — overshoots the deadline.  Conservative by
+        construction: real pressure only makes it later."""
+        if req.deadline_ms is None:
+            return None
+        if self._min_decode_s is None:
+            return None  # no cost evidence yet: nothing is provable
+        now = self.clock()
+        deadline = req.deadline_at()
+        T = len(req.prompt) + len(req.output)
+        n_chunks = -(-T // self.prefill_chunk)
+        remaining = req.max_new_tokens - len(req.output)
+        t_min = n_chunks * (self._min_chunk_s or 0.0) + remaining * self._min_decode_s
+        if now + t_min > deadline:
+            return (
+                f"deadline {req.deadline_ms:.1f}ms provably unmeetable: "
+                f"optimistic completion needs {t_min * 1e3:.1f}ms "
+                f"({n_chunks} prefill chunks + {remaining} decode steps at "
+                f"best-observed step cost) but only "
+                f"{max(deadline - now, 0.0) * 1e3:.1f}ms remain"
+            )
+        return None
+
+    def _expire_deadlines(self):
+        """Terminate queued/running requests whose deadline has passed —
+        partial output is kept, pages are freed immediately (degradation
+        ladder rung 4: stop burning pool on work nobody can use)."""
+        if self.scheduler != "slo":
+            return
+        now = self.clock()
+        expired = [r for r in self.queue if r.deadline_at() <= now]
+        for req in expired:
+            self.queue.remove(req)
+            self._finish(req, "deadline_missed")
+        for lane, seq in enumerate(self.lanes):
+            if seq is not None and seq.req.deadline_at() <= now:
+                req = seq.req
+                self._release_lane(lane)
+                self._finish(req, "deadline_missed")
+
     # -- admission ------------------------------------------------------
     def _admit(self):
         for lane in range(self.max_batch):
             if self.lanes[lane] is not None or not self.queue:
                 continue
-            req = self.queue[0]
+            req = self.queue[self._queue_pick()]
+            if self.scheduler == "slo":
+                reason = self._provably_unmeetable(req)
+                if reason is not None:
+                    self.queue.remove(req)
+                    self._finish(req, "shed", reason)
+                    continue
             if req.max_new_tokens <= 0:  # nothing to generate: skip the pool
-                self.queue.pop(0)
-                req.done = True
-                self.finished.append(req)
+                self.queue.remove(req)
+                self._finish(req, "completed")
                 continue
             toks = list(map(int, req.prompt)) + list(req.output)
             T = len(toks)
@@ -327,7 +506,7 @@ class PagedServingEngine:
                 cow_src = self.pool.match_partial(tt, n_cached)
             need = -(-T // self.page_size) - len(pages)
             fresh = self.pool.alloc(need)
-            if fresh is None:  # head-of-line blocking keeps FIFO fairness
+            if fresh is None:  # head-of-line blocking keeps priority order
                 for p in pages:
                     self.pool.release(p)
                 break
@@ -348,12 +527,30 @@ class PagedServingEngine:
                 if repl is None:
                     for p in pages:
                         self.pool.release(p)
+                    # Livelock audit: a full-coverage hit needs matched
+                    # pages + 1 private COW page.  When that exceeds every
+                    # page the pool could ever produce, no amount of
+                    # waiting or eviction helps — the matched pages
+                    # themselves exhaust the pool, and retrying each step
+                    # re-matches them forever.  Reject with a clear error
+                    # instead of livelocking the step loop.
+                    if -(-T // self.page_size) + 1 > self.n_pages - 1:
+                        self.queue.remove(req)
+                        self._finish(
+                            req, "shed",
+                            f"request {req.rid} unsatisfiable: full prefix-"
+                            f"cache hit needs {-(-T // self.page_size)} "
+                            f"matched pages + 1 replay copy-on-write page, "
+                            f"but the pool holds only {self.n_pages - 1} "
+                            "allocatable pages — admission would livelock",
+                        )
+                        continue
                     break
                 self.cache = self._copy_page(self.cache, pages[-1], repl[0])
                 self.pool.release(pages[-1])
                 pages[-1] = repl[0]
                 self.n_cow_hits += 1
-            self.queue.pop(0)
+            self.queue.remove(req)
             seq = _Seq(
                 req=req, tokens=toks, pages=pages + fresh,
                 n_prefilled=n_cached, n_target=T,
@@ -420,10 +617,14 @@ class PagedServingEngine:
         C = min(self.prefill_chunk, seq.n_target - off)
         buf = np.zeros((1, self.prefill_chunk), np.int32)
         buf[0, :C] = seq.tokens[off : off + C]
+        t0 = self.clock()
         self.cache = self._chunk(
             self.params, jnp.asarray(buf), self.cache,
             self._dev_table_now()[lane : lane + 1], np.int32(off),
         )
+        dt = self.clock() - t0
+        if dt > 0:
+            self._min_chunk_s = dt if self._min_chunk_s is None else min(self._min_chunk_s, dt)
         seq.n_prefilled += C
         self.n_prefill_chunks += 1
         self.n_prefill_tokens += C
@@ -436,12 +637,33 @@ class PagedServingEngine:
     # -- decode ----------------------------------------------------------
     def _preempt(self, lane: int):
         seq = self.lanes[lane]
-        for p in seq.pages:
-            self.pool.release(p)
-        self.lanes[lane] = None
-        self._set_row(lane, [])
-        self.queue.insert(0, seq.req)  # resume ASAP; output so far is kept
+        self._release_lane(lane)
+        seq.req.n_preemptions += 1
+        if self.scheduler == "fifo":
+            self.queue.insert(0, seq.req)  # resume ASAP; output so far is kept
+        else:
+            # slo: _queue_pick favours the earliest submit_order within a
+            # priority class, so the preempted request still resumes ahead
+            # of later arrivals of equal urgency.
+            self.queue.append(seq.req)
         self.n_preemptions += 1
+
+    def _victim(self, victims: list) -> int:
+        """Preemption victim: under ``slo``, evict the lowest-priority,
+        most-slack (latest-deadline), newest sequence; under ``fifo``, the
+        newest.  With no deadlines and uniform priorities the two policies
+        coincide (the legacy determinism tests pin this)."""
+        if self.scheduler == "fifo":
+            return max(victims, key=lambda i: self.lanes[i].order)
+        now = self.clock()
+        return max(
+            victims,
+            key=lambda i: (
+                -self.lanes[i].req.priority,
+                self.lanes[i].req.deadline_at() - now,
+                self.lanes[i].order,
+            ),
+        )
 
     def _decode_ready(self):
         return [
@@ -451,7 +673,7 @@ class PagedServingEngine:
 
     def _ensure_capacity(self) -> list[int]:
         """Grow each decoding lane's page list to cover its write position,
-        preempting the newest sequence when the pool runs dry."""
+        preempting by deadline/priority when the pool runs dry."""
         while True:
             active = self._decode_ready()
             blocked = None
@@ -473,11 +695,20 @@ class PagedServingEngine:
                 j for j, s in enumerate(self.lanes)
                 if s is not None and s.n_prefilled < s.n_target
             ]
-            victim = max(victims, key=lambda i: self.lanes[i].order)
+            victim = self._victim(victims)
             if victim == blocked and len(victims) == 1:
-                raise RuntimeError(
-                    "page pool too small for a single sequence"
-                )  # pragma: no cover — submit() bounds prevent this
+                seq = self.lanes[blocked]
+                need = -(-(len(seq.req.prompt) + seq.req.max_new_tokens)
+                         // self.page_size)
+                if need > self.n_pages - 1:
+                    raise RuntimeError(
+                        "page pool too small for a single sequence"
+                    )  # pragma: no cover — submit() bounds prevent this
+                # The pool *can* hold this sequence, so the failure is a
+                # transient denial (e.g. an injected exhaustion spike):
+                # preempt the blocked sequence itself — its pages free, the
+                # request requeues, and a later step resumes it
+                # deterministically once allocation succeeds again.
             self._preempt(victim)
 
     def _decode_step(self) -> bool:
@@ -491,18 +722,25 @@ class PagedServingEngine:
             pos[i] = self.slot_pos[i]
             write_page[i] = seq.pages[int(self.slot_pos[i]) // self.page_size]
             self.n_kv_page_reads += -(-(int(self.slot_pos[i]) + 1) // self.page_size)
+        t0 = self.clock()
         logits, self.cache = self._decode(
             self.params, jnp.asarray(self._last_tok), self.cache,
             jnp.asarray(pos), self._dev_table_now(), jnp.asarray(write_page),
         )
         self.n_decode_steps += 1
         logits = np.asarray(logits.astype(jnp.float32))
+        dt = self.clock() - t0
+        if dt > 0:
+            self._min_decode_s = dt if self._min_decode_s is None else min(self._min_decode_s, dt)
+        now = self.clock()
         for i in active:
             seq = self.lanes[i]
             tok = int(np.argmax(logits[i]))
             if self.record_logits:
                 self.logit_trace.setdefault(seq.req.rid, []).append(logits[i])
             self._last_tok[i, 0] = tok
+            if not seq.req.output:
+                seq.req.first_token_t = now
             seq.req.output.append(tok)
             seq.tokens.append(tok)
             self.slot_pos[i] += 1
@@ -514,15 +752,22 @@ class PagedServingEngine:
                 continue
             req = seq.req
             if len(req.output) >= req.max_new_tokens or self.slot_pos[i] >= self.max_seq - 1:
-                req.done = True
-                self.finished.append(req)
-                for p in seq.pages:
-                    self.pool.release(p)
-                self.lanes[i] = None
-                self._set_row(i, [])
+                self._release_lane(i)
+                self._finish(
+                    req,
+                    "preempted_resumed" if req.n_preemptions else "completed",
+                )
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
+        try:
+            fault_point("engine.step")
+        except TransientFault:
+            # Raised before any state mutation: this step is a pure no-op
+            # and the next one sees exactly the pre-fault scheduler state.
+            self.n_transient_faults += 1
+            return True
+        self._expire_deadlines()
         self._admit()
         progressed = self._prefill_step()
         # Nothing can decode yet (cold start / post-preemption ramp): drain
@@ -532,6 +777,14 @@ class PagedServingEngine:
                 break
         progressed |= self._decode_step()
         self._retire()
+        # Queued work with an idle engine and no progress means admission
+        # was blocked by a transient allocation denial (nothing else holds
+        # pages that could ever be freed) — keep stepping so the denial
+        # window can pass, instead of reporting a dead engine.
+        if not progressed and self.queue and not any(
+            s is not None for s in self.lanes
+        ):
+            return True
         return progressed
 
     def run(self, max_steps: int = 10_000):

@@ -39,6 +39,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+from repro.faults import fault_point
+
 __all__ = ["NULL_PAGE", "PagePool", "page_nbytes"]
 
 NULL_PAGE = 0
@@ -86,7 +88,14 @@ class PagePool:
     def alloc(self, n: int) -> Optional[list[int]]:
         """Allocate ``n`` pages with refcount 1, or None if the pool can't
         satisfy the request (never partially allocates).  Prefers truly
-        free pages; evicts cached-free pages LRU-first only when needed."""
+        free pages; evicts cached-free pages LRU-first only when needed.
+
+        Injection point ``pool.alloc`` (DESIGN.md §Resilience): a ``deny``
+        action simulates a pool-exhaustion spike — the allocation fails as
+        if the pool were dry, exercising the engine's preemption and
+        head-of-line machinery without actually draining pages."""
+        if n > 0 and fault_point("pool.alloc") == "deny":
+            return None
         if self.n_free < n:
             return None
         out = []

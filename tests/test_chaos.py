@@ -1,0 +1,536 @@
+"""Chaos suite: seeded fault injection end to end (DESIGN.md §Resilience).
+
+The two invariants this file exists to pin:
+
+1. **Serving**: under any injected fault schedule (engine-step transients,
+   page-pool exhaustion spikes, kernel-dispatch denials), every request
+   that finishes ``completed`` or ``preempted_resumed`` has tokens
+   identical to the fault-free run, and the pool leaks nothing.
+2. **Pipelines**: a quantize run killed mid-flight by an injected
+   permanent fault and then re-run with ``--resume`` emits a
+   **bit-identical** artifact to an uninterrupted run (the whole pipeline
+   is deterministic, so restart-from-scratch is exact); corrupted
+   checkpoint shards are detected by checksum and degrade to the last
+   good step instead of restoring garbage.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.faults import (
+    FaultPlan,
+    FaultSpec,
+    PermanentFault,
+    TransientFault,
+    active_plan,
+    corrupt_bytes,
+    fault_plan,
+    fault_point,
+)
+from repro.models import init_params, make_plan
+from repro.serve.engine import PagedServingEngine, Request
+from tests.conftest import reduce_cfg
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism & mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="no.such.site", kind="transient")
+    with pytest.raises(ValueError):
+        FaultSpec(site="engine.step", kind="flaky")
+    with pytest.raises(ValueError):
+        FaultSpec(site="engine.step", kind="transient", p=1.5)
+
+
+def _drive_plan(plan, site, n):
+    """Call ``check(site)`` n times, recording the action per invocation."""
+    out = []
+    for _ in range(n):
+        try:
+            out.append(plan.check(site))
+        except TransientFault:
+            out.append("transient")
+        except PermanentFault:
+            out.append("permanent")
+    return out
+
+
+def test_fault_plan_at_window_and_max_fires():
+    specs = [
+        FaultSpec(site="pool.alloc", kind="deny", at=(1,), window=(4, 6)),
+        FaultSpec(site="engine.step", kind="transient", window=(0, 100),
+                  max_fires=2),
+    ]
+    plan = FaultPlan(specs, seed=0)
+    assert _drive_plan(plan, "pool.alloc", 7) == [
+        "ok", "deny", "ok", "ok", "deny", "deny", "ok"
+    ]
+    # max_fires caps the unbounded window at 2 fires
+    assert _drive_plan(plan, "engine.step", 5) == [
+        "transient", "transient", "ok", "ok", "ok"
+    ]
+    assert plan.fired == [
+        ("pool.alloc", 1, "deny"), ("pool.alloc", 4, "deny"),
+        ("pool.alloc", 5, "deny"), ("engine.step", 0, "transient"),
+        ("engine.step", 1, "transient"),
+    ]
+
+
+def test_fault_plan_probabilistic_fires_are_deterministic():
+    mk = lambda: FaultPlan(
+        [FaultSpec(site="data.fetch", kind="transient", p=0.3)], seed=7
+    )
+    a = _drive_plan(mk(), "data.fetch", 50)
+    b = _drive_plan(mk(), "data.fetch", 50)
+    assert a == b and "transient" in a and "ok" in a
+    # a different seed produces a different (but equally deterministic) draw
+    c = _drive_plan(
+        FaultPlan([FaultSpec(site="data.fetch", kind="transient", p=0.3)],
+                  seed=8),
+        "data.fetch", 50,
+    )
+    assert c != a
+
+
+def test_fault_plan_from_spec_dict_string_and_path(tmp_path):
+    doc = {"seed": 5, "faults": [
+        {"site": "ckpt.write", "kind": "corrupt", "at": [0]},
+        {"site": "engine.step", "kind": "transient", "window": [2, 4],
+         "p": 0.1, "max_fires": 3},
+    ]}
+    for src in (doc, json.dumps(doc)):
+        plan = FaultPlan.from_spec(src)
+        assert plan.seed == 5 and len(plan.specs) == 2
+        assert plan.specs[0].kind == "corrupt" and plan.specs[1].window == (2, 4)
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(doc))
+    assert FaultPlan.from_spec(str(p)).seed == 5
+
+
+def test_fault_point_inactive_is_noop_and_scoping_nests():
+    assert active_plan() is None
+    assert fault_point("engine.step") == "ok"
+    outer = FaultPlan([FaultSpec(site="pool.alloc", kind="deny", at=(0,))])
+    inner = FaultPlan([])
+    with fault_plan(outer):
+        assert active_plan() is outer
+        with fault_plan(inner):  # innermost wins
+            assert fault_point("pool.alloc") == "ok"
+        assert fault_point("pool.alloc") == "deny"
+    assert active_plan() is None
+    with fault_plan(None):  # None-tolerant threading
+        assert fault_point("pool.alloc") == "ok"
+    with pytest.raises(ValueError):
+        outer.check("not.a.site")
+
+
+def test_corrupt_bytes_flips_exactly_one_seeded_byte():
+    plan = FaultPlan([], seed=3)
+    data = bytes(range(64))
+    out = corrupt_bytes(plan, data)
+    diff = [i for i in range(64) if out[i] != data[i]]
+    assert len(diff) == 1 and out[diff[0]] == data[diff[0]] ^ 0xFF
+    # same seed, fresh plan → same byte; the corruption is reproducible
+    assert corrupt_bytes(FaultPlan([], seed=3), data) == out
+    assert corrupt_bytes(plan, b"") == b""
+
+
+# ---------------------------------------------------------------------------
+# RetryingRunner: backoff, budget, permanent classification
+# ---------------------------------------------------------------------------
+
+
+def _flaky_counter(fail_at, exc=RuntimeError):
+    calls = []
+
+    def step(state, i):
+        calls.append(i)
+        if (i, len([c for c in calls if c == i])) in fail_at:
+            raise exc(f"boom at {i}")
+        return state + [i]
+
+    return step, calls
+
+
+def test_retrying_runner_backoff_and_recovery():
+    from repro.dist.elastic import RetryingRunner
+
+    step, _ = _flaky_counter({(2, 1), (2, 2)})  # step 2 fails twice
+    slept = []
+    runner = RetryingRunner(
+        step, lambda: ([0, 1], 2), max_retries=3,
+        backoff_base_s=0.01, backoff_mult=2.0, jitter=0.5,
+        sleep_fn=slept.append, seed=0,
+    )
+    state, end = runner.run([], 0, 5)
+    assert state == [0, 1, 2, 3, 4] and end == 5
+    assert runner.recoveries == 2 and slept == runner.delays
+    # exponential base with seeded jitter in [0.5x, 1.5x]
+    assert 0.005 <= runner.delays[0] <= 0.015
+    assert 0.01 <= runner.delays[1] <= 0.03
+    # seeded jitter replays exactly
+    step2, _ = _flaky_counter({(2, 1), (2, 2)})
+    rerun = RetryingRunner(
+        step2, lambda: ([0, 1], 2), max_retries=3,
+        backoff_base_s=0.01, backoff_mult=2.0, jitter=0.5,
+        sleep_fn=lambda s: None, seed=0,
+    )
+    rerun.run([], 0, 5)
+    assert rerun.delays == runner.delays
+
+
+def test_retrying_runner_budget_exhaustion_reraises():
+    from repro.dist.elastic import RetryingRunner
+
+    step, _ = _flaky_counter({(1, k) for k in range(1, 10)})
+    runner = RetryingRunner(step, lambda: ([0], 1), max_retries=2,
+                            sleep_fn=lambda s: None)
+    with pytest.raises(RuntimeError):
+        runner.run([], 0, 3)
+    assert runner.recoveries == 2  # budget fully spent before the re-raise
+
+
+def test_retrying_runner_permanent_never_retried():
+    from repro.dist.elastic import RetryingRunner
+
+    step, calls = _flaky_counter({(1, 1)}, exc=lambda m: PermanentFault("data.fetch", 1))
+    restores = []
+    runner = RetryingRunner(step, lambda: restores.append(1) or ([], 0),
+                            sleep_fn=lambda s: None)
+    with pytest.raises(PermanentFault):
+        runner.run([], 0, 3)
+    assert restores == [] and runner.recoveries == 0
+    # caller-supplied permanent types behave identically
+    step2, _ = _flaky_counter({(0, 1)}, exc=KeyboardInterrupt)
+    runner2 = RetryingRunner(step2, lambda: ([], 0),
+                             permanent=(KeyboardInterrupt,),
+                             sleep_fn=lambda s: None)
+    with pytest.raises(KeyboardInterrupt):
+        runner2.run([], 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint corruption: checksum detection + last-good fallback
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed, shape=(4, 3)):
+    r = np.random.default_rng(seed)
+    return {"w": r.standard_normal(shape).astype(np.float32),
+            "b": r.standard_normal(shape[0]).astype(np.float32)}
+
+
+def test_injected_write_corruption_detected_on_read(tmp_path):
+    from repro.dist import checkpoint as ckpt
+
+    tree = _tree(0)
+    plan = FaultPlan([FaultSpec(site="ckpt.write", kind="corrupt", at=(0,))])
+    with fault_plan(plan):
+        ckpt.save_checkpoint(str(tmp_path), 1, tree)
+    assert plan.fired  # the corruption really was injected
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.load_checkpoint(str(tmp_path), tree)
+
+
+def test_load_last_good_skips_damaged_steps(tmp_path):
+    from repro.dist import checkpoint as ckpt
+
+    good = _tree(1)
+    ckpt.save_checkpoint(str(tmp_path), 1, good)
+    bad = _tree(2)
+    plan = FaultPlan([FaultSpec(site="ckpt.write", kind="corrupt", at=(0,))])
+    with fault_plan(plan):
+        ckpt.save_checkpoint(str(tmp_path), 2, bad)
+    # latest (step 2) is damaged → degrade to step 1, reporting the skip
+    tree, manifest, skipped = ckpt.load_last_good(str(tmp_path), good)
+    assert manifest["step"] == 1
+    assert [s for s, _ in skipped] == [2]
+    assert "checksum" in skipped[0][1]
+    np.testing.assert_array_equal(np.asarray(tree["w"]), good["w"])
+
+
+def test_load_last_good_all_damaged_raises(tmp_path):
+    from repro.dist import checkpoint as ckpt
+
+    tree = _tree(3)
+    plan = FaultPlan([FaultSpec(site="ckpt.write", kind="corrupt",
+                                window=(0, 10_000))])
+    with fault_plan(plan):
+        ckpt.save_checkpoint(str(tmp_path), 1, tree)
+        ckpt.save_checkpoint(str(tmp_path), 2, tree)
+    with pytest.raises(ckpt.CheckpointCorrupt, match="all 2 step"):
+        ckpt.load_last_good(str(tmp_path), tree)
+    with pytest.raises(FileNotFoundError):
+        ckpt.load_last_good(str(tmp_path / "empty"), tree)
+
+
+def test_pre_checksum_manifests_still_load(tmp_path):
+    """Manifests written before CRC-32 existed have no ``crc32`` field —
+    they must load unverified, not crash."""
+    from repro.dist import checkpoint as ckpt
+
+    tree = _tree(4)
+    ckpt.save_checkpoint(str(tmp_path), 1, tree)
+    mpath = tmp_path / "step_1" / "manifest.json"
+    doc = json.loads(mpath.read_text())
+    for rec in doc["leaves"]:
+        del rec["crc32"]
+    mpath.write_text(json.dumps(doc))
+    out, manifest = ckpt.load_checkpoint(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+
+
+def test_transient_read_fault_raises_through(tmp_path):
+    from repro.dist import checkpoint as ckpt
+
+    tree = _tree(5)
+    ckpt.save_checkpoint(str(tmp_path), 1, tree)
+    plan = FaultPlan([FaultSpec(site="ckpt.read", kind="transient", at=(0,))])
+    with fault_plan(plan):
+        with pytest.raises(TransientFault):
+            ckpt.load_checkpoint(str(tmp_path), tree)
+        out, _ = ckpt.load_checkpoint(str(tmp_path), tree)  # retry succeeds
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline: retried fetch reproduces the batch bit-identically
+# ---------------------------------------------------------------------------
+
+
+def test_data_fetch_retry_is_bit_identical():
+    from repro.data.pipeline import DataConfig, make_batch_fn
+
+    cfg = reduce_cfg(get_config("stablelm_12b"))
+    get, _ = make_batch_fn(DataConfig(vocab=cfg.vocab, seed=0), cfg,
+                           batch=2, seq=16, split="calib")
+    clean = get(3)
+    plan = FaultPlan([FaultSpec(site="data.fetch", kind="transient", at=(0,))])
+    with fault_plan(plan):
+        with pytest.raises(TransientFault):
+            get(3)
+        retried = get(3)  # the retry the RetryingRunner would perform
+    np.testing.assert_array_equal(retried["tokens"], clean["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Serving chaos invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def chaos_model():
+    cfg = reduce_cfg(
+        get_config("stablelm_12b"), d_model=96, head_dim=24, d_ff=192,
+        n_periods=2,
+    )
+    plan = make_plan(cfg, 1)
+    params = init_params(plan, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 250, n).astype(np.int32) for n in (6, 21, 47, 11, 33)]
+    return plan, params, prompts
+
+
+def _serve_outputs(plan, params, prompts, fplan=None, **eng_kw):
+    eng = PagedServingEngine(plan, params, **eng_kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=7))
+    with fault_plan(fplan):
+        eng.run(max_steps=2_000)
+    return eng, {r.rid: r for r in eng.finished}
+
+
+def test_chaos_serving_invariant(chaos_model):
+    """Under injected engine-step transients, pool-exhaustion spikes, and
+    kernel-dispatch denials, every completed/preempted_resumed request is
+    token-identical to the fault-free run and no page leaks."""
+    plan, params, prompts = chaos_model
+    kw = dict(max_batch=3, max_seq=128, page_size=8, n_pages=13,
+              prefill_chunk=16, prefix_cache=False)
+    _, clean = _serve_outputs(plan, params, prompts, **kw)
+    assert len(clean) == len(prompts)
+    fplan = FaultPlan([
+        FaultSpec(site="engine.step", kind="transient", at=(0, 3, 7),
+                  window=(11, 14)),
+        FaultSpec(site="pool.alloc", kind="deny", at=(2, 5, 9),
+                  window=(12, 15), p=0.05, max_fires=12),
+        FaultSpec(site="kernel.dispatch", kind="deny", window=(0, 10_000)),
+    ], seed=42)
+    eng, chaotic = _serve_outputs(plan, params, prompts, fplan=fplan, **kw)
+    assert fplan.fired  # the schedule really exercised the engine
+    assert eng.n_transient_faults >= 3
+    assert len(chaotic) == len(prompts)  # nothing stuck, nothing lost
+    for rid, req in chaotic.items():
+        assert req.status in ("completed", "preempted_resumed")
+        assert req.output == clean[rid].output  # the tentpole invariant
+    assert eng.pool.n_free == eng.n_pages - 1  # every page returned
+
+
+def test_chaos_alloc_denial_storm_self_preempts(chaos_model):
+    """A denial spike while a single sequence needs to grow must not crash
+    with 'pool too small' — the engine self-preempts and resumes once the
+    spike passes, with identical output."""
+    plan, params, prompts = chaos_model
+    kw = dict(max_batch=1, max_seq=128, page_size=8, prefill_chunk=16,
+              prefix_cache=False)
+    _, clean = _serve_outputs(plan, params, [prompts[1]], **kw)
+    fplan = FaultPlan([
+        FaultSpec(site="pool.alloc", kind="deny", window=(2, 8)),
+    ])
+    eng, chaotic = _serve_outputs(plan, params, [prompts[1]], fplan=fplan, **kw)
+    assert chaotic[0].output == clean[0].output
+    assert chaotic[0].status in ("completed", "preempted_resumed")
+    assert eng.pool.n_free == eng.n_pages - 1
+
+
+def test_engine_step_transient_is_pure_noop(chaos_model):
+    """A transient at the very first step must not lose queued requests or
+    report a dead engine (step() returns True, nothing mutates)."""
+    plan, params, prompts = chaos_model
+    eng = PagedServingEngine(plan, params, max_batch=2, max_seq=128,
+                             page_size=8, prefill_chunk=16)
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=3))
+    fplan = FaultPlan([FaultSpec(site="engine.step", kind="transient", at=(0,))])
+    with fault_plan(fplan):
+        assert eng.step() is True  # no-op retry, not a dead engine
+        assert eng.n_transient_faults == 1
+        assert eng.lanes == [None, None] and len(eng.queue) == 1
+        fin = eng.run()
+    assert len(fin) == 1 and fin[0].status == "completed"
+
+
+# ---------------------------------------------------------------------------
+# Quantize pipeline: fault-interrupted run resumes bit-identically
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def quantize_env(tmp_path_factory):
+    """A tiny trained-checkpoint directory + the config monkeypatch args."""
+    import jax.numpy as jnp
+
+    from repro.dist import checkpoint as ckpt
+    from repro.models import param_shapes
+    from repro.train.optimizer import AdamWConfig, adamw_init
+
+    cfg = reduce_cfg(
+        get_config("stablelm_12b"), d_model=32, head_dim=8, d_ff=64,
+        max_seq=64,
+    )
+    plan = make_plan(cfg, 1)
+    params = init_params(plan, jax.random.PRNGKey(1))
+    like = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), param_shapes(plan))
+    # param_shapes and init_params agree on structure; store a real state
+    state = {"params": params, "opt": adamw_init(like, AdamWConfig())}
+    ckpt_dir = tmp_path_factory.mktemp("train_ckpt")
+    ckpt.save_checkpoint(str(ckpt_dir), 7, state)
+    return cfg, str(ckpt_dir)
+
+
+def _run_quantize(monkeypatch, cfg, ckpt_dir, out_dir, extra=()):
+    import repro.configs as configs
+    from repro.launch import quantize
+
+    monkeypatch.setattr(configs, "get_config", lambda name: cfg)
+    argv = ["quantize", "--arch", "tiny", "--ckpt-dir", ckpt_dir,
+            "--out-dir", out_dir, "--method", "quantease", "--bits", "3",
+            "--iterations", "2", "--calib-batches", "2", "--seq", "32",
+            *extra]
+    monkeypatch.setattr("sys.argv", argv)
+    quantize.main()
+
+
+def _artifact_bytes(out_dir):
+    d = [p for p in os.listdir(out_dir) if p.startswith("step_")]
+    assert len(d) == 1
+    step = os.path.join(out_dir, d[0])
+    return {
+        name: open(os.path.join(step, name), "rb").read()
+        for name in sorted(os.listdir(step))
+        if name.endswith(".bin")
+    }
+
+
+def test_quantize_fault_then_resume_bit_identical(
+    quantize_env, tmp_path, monkeypatch
+):
+    cfg, ckpt_dir = quantize_env
+    # 1) uninterrupted reference run
+    ref_dir = str(tmp_path / "ref")
+    _run_quantize(monkeypatch, cfg, ckpt_dir, ref_dir)
+    ref = _artifact_bytes(ref_dir)
+    assert ref  # produced leaf shards
+
+    # 2) fault-interrupted run: a permanent storage fault mid-calibration
+    #    kills the run (RetryingRunner classifies it — no retry burn)
+    out_dir = str(tmp_path / "chaotic")
+    fp = json.dumps({"faults": [
+        {"site": "data.fetch", "kind": "permanent", "at": [1]},
+    ]})
+    with pytest.raises(PermanentFault):
+        _run_quantize(monkeypatch, cfg, ckpt_dir, out_dir,
+                      extra=("--fault-plan", fp))
+    assert not os.path.exists(os.path.join(out_dir, "step_7"))
+
+    # 3) --resume after the crash: deterministic restart → identical bytes
+    _run_quantize(monkeypatch, cfg, ckpt_dir, out_dir, extra=("--resume",))
+    assert _artifact_bytes(out_dir) == ref
+
+
+def test_quantize_transient_fetch_fault_recovers_in_run(
+    quantize_env, tmp_path, monkeypatch, capsys
+):
+    """A *transient* calibration-fetch fault is absorbed by the retry loop
+    inside one run — same artifact, no restart needed."""
+    cfg, ckpt_dir = quantize_env
+    ref_dir = str(tmp_path / "ref")
+    _run_quantize(monkeypatch, cfg, ckpt_dir, ref_dir)
+    out_dir = str(tmp_path / "retried")
+    fp = json.dumps({"faults": [
+        {"site": "data.fetch", "kind": "transient", "at": [1]},
+    ]})
+    _run_quantize(monkeypatch, cfg, ckpt_dir, out_dir,
+                  extra=("--fault-plan", fp))
+    assert "recovered from 1 transient fault" in capsys.readouterr().out
+    assert _artifact_bytes(out_dir) == _artifact_bytes(ref_dir)
+
+
+def test_quantize_corrupt_source_falls_back_to_last_good(
+    quantize_env, tmp_path, monkeypatch, capsys
+):
+    """A corrupted newest train checkpoint degrades to the previous good
+    step (with a loud warning) instead of wedging the quantize run."""
+    import shutil
+
+    from repro.dist import checkpoint as ckpt
+
+    cfg, ckpt_dir = quantize_env
+    work = str(tmp_path / "ckpts")
+    shutil.copytree(ckpt_dir, work)
+    # forge a newer step, then flip one byte of one of its shards
+    src = os.path.join(work, "step_7")
+    dst = os.path.join(work, "step_9")
+    shutil.copytree(src, dst)
+    man = json.loads(open(os.path.join(dst, "manifest.json")).read())
+    man["step"] = 9
+    with open(os.path.join(dst, "manifest.json"), "w") as f:
+        json.dump(man, f)
+    shard = os.path.join(dst, "leaf_0.bin")
+    raw = bytearray(open(shard, "rb").read())
+    raw[0] ^= 0xFF
+    open(shard, "wb").write(bytes(raw))
+    assert ckpt.latest_step(work) == 9
+
+    out_dir = str(tmp_path / "out")
+    _run_quantize(monkeypatch, cfg, work, out_dir)
+    captured = capsys.readouterr()
+    assert "skipped damaged checkpoint step_9" in captured.err
+    assert "loaded checkpoint step 7" in captured.out

@@ -279,12 +279,18 @@ def test_validate_doc_full_run_orderings():
 
 
 # ---------------------------------------------------------------------------
-# Satellite: launch/quantize.py --resume with torn progress.jsonl
+# Satellite: shared progress.jsonl parser tolerates torn tails
 # ---------------------------------------------------------------------------
 
 
 def test_load_progress_tolerates_truncation(tmp_path):
-    from repro.launch.quantize import load_progress
+    from repro.launch.progress import append_record, load_progress
+
+    # the historical import site re-exports the one shared implementation
+    import repro.launch.quantize as q
+
+    assert q.load_progress is load_progress
+    assert q.append_record is append_record
 
     p = tmp_path / "progress.jsonl"
     assert load_progress(str(p)) == []  # absent
@@ -301,6 +307,11 @@ def test_load_progress_tolerates_truncation(tmp_path):
     p.write_text('{"bad": \n' + json.dumps(rec2) + "\n")
     with pytest.raises(ValueError):
         load_progress(str(p))
+    # append_record round-trips through the tolerant parser
+    p.write_text("")
+    append_record(str(p), rec1)
+    append_record(str(p), rec2)
+    assert load_progress(str(p)) == [rec1, rec2]
 
 
 # ---------------------------------------------------------------------------

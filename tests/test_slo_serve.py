@@ -1,0 +1,206 @@
+"""SLO-aware scheduling: admission shedding, deadlines, priorities.
+
+The paged engine's ``slo`` scheduler (the default) adds per-request
+deadlines and priorities on top of the legacy paged machinery:
+
+* **provable shed** — admission rejects a deadline the engine can prove
+  unmeetable even under the *optimistic* cost bound (fastest observed
+  step costs, zero queueing); it never sheds cold (no cost evidence).
+* **deadline_missed** — overdue work is terminated at the next step
+  boundary, keeping partial output and freeing its pages immediately.
+* **priority** — the queue admits highest-priority-first (low-priority
+  work parks, holding no pages) and preemption evicts the
+  lowest-priority / most-slack / newest lane.
+* **degeneracy** — for default requests (no deadline, priority 0) the
+  ``slo`` policy is bit-identical to the legacy ``fifo`` policy; the
+  whole legacy test suite pins this implicitly by running on the
+  default scheduler.
+
+Tests drive a virtual clock (one tick per ``clock()`` call) so deadline
+arithmetic is exact and host-speed independent.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params, make_plan
+from repro.serve.engine import PagedServingEngine, Request
+from tests.conftest import reduce_cfg
+
+
+class StepClock:
+    """Deterministic engine clock: each call advances one virtual second."""
+
+    def __init__(self, dt: float = 1.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def slo_model():
+    cfg = reduce_cfg(get_config("stablelm_12b"))
+    plan = make_plan(cfg, 1)
+    params = init_params(plan, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 250, n).astype(np.int32) for n in (6, 10, 10, 9)]
+    return plan, params, prompts
+
+
+_KW = dict(max_batch=2, max_seq=128, page_size=8, prefill_chunk=16,
+           prefix_cache=False)
+
+
+def test_scheduler_name_validated(slo_model):
+    plan, params, _ = slo_model
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        PagedServingEngine(plan, params, scheduler="edf", **_KW)
+
+
+def test_queue_pick_priority_then_deadline_then_arrival(slo_model):
+    plan, params, prompts = slo_model
+    clk = StepClock()
+    eng = PagedServingEngine(plan, params, clock=clk, **_KW)
+    r0 = Request(rid=0, prompt=prompts[0], max_new_tokens=2)
+    r1 = Request(rid=1, prompt=prompts[0], max_new_tokens=2, priority=1,
+                 deadline_ms=5_000)
+    r2 = Request(rid=2, prompt=prompts[0], max_new_tokens=2, priority=1,
+                 deadline_ms=2_000)
+    r3 = Request(rid=3, prompt=prompts[0], max_new_tokens=2, priority=2)
+    for r in (r0, r1, r2, r3):
+        eng.submit(r)
+    # highest priority first ...
+    assert eng.queue[eng._queue_pick()] is r3
+    eng.queue.remove(r3)
+    # ... then earliest absolute deadline within the priority class ...
+    assert eng.queue[eng._queue_pick()] is r2
+    eng.queue.remove(r2)
+    # ... then arrival order (no deadline sorts last: deadline_at() = inf)
+    assert eng.queue[eng._queue_pick()] is r1
+    eng.queue.remove(r1)
+    assert eng.queue[eng._queue_pick()] is r0
+    # fifo ignores all of it
+    fifo = PagedServingEngine(plan, params, scheduler="fifo", clock=StepClock(),
+                              **_KW)
+    for r in (Request(rid=0, prompt=prompts[0], max_new_tokens=2),
+              Request(rid=1, prompt=prompts[0], max_new_tokens=2, priority=9)):
+        fifo.submit(r)
+    assert fifo._queue_pick() == 0
+
+
+def test_provably_unmeetable_deadline_is_shed(slo_model):
+    plan, params, prompts = slo_model
+    clk = StepClock()
+    eng = PagedServingEngine(plan, params, clock=clk, **_KW)
+    # Cold engine: no cost evidence, nothing is provable — a hopeless
+    # deadline still admits (and will expire instead; see below).
+    hopeless = Request(rid=9, prompt=prompts[0], max_new_tokens=1,
+                       deadline_ms=0.001)
+    assert eng._provably_unmeetable(hopeless) is None
+    # Warm up: one plain request populates the min-observed step costs.
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=2))
+    eng.run()
+    assert eng._min_decode_s is not None and eng._min_chunk_s is not None
+    # 20 decode steps at ≥1 virtual second each can never fit in 3s.
+    doomed = Request(rid=1, prompt=prompts[0], max_new_tokens=20,
+                     deadline_ms=3_000)
+    eng.submit(doomed)
+    eng.run()
+    assert doomed.status == "shed" and doomed.done
+    assert "provably unmeetable" in doomed.error
+    assert doomed.output == []  # shed at admission: no work was burned
+    assert eng.n_shed == 1
+    # A generous deadline sails through the same admission check.
+    fine = Request(rid=2, prompt=prompts[0], max_new_tokens=20,
+                   deadline_ms=10_000_000)
+    eng.submit(fine)
+    eng.run()
+    assert fine.status == "completed" and len(fine.output) == 20
+    assert eng.pool.n_free == eng.n_pages - 1
+
+
+def test_deadline_missed_mid_generation_keeps_partial_output(slo_model):
+    plan, params, prompts = slo_model
+    eng = PagedServingEngine(plan, params, clock=StepClock(), **_KW)
+    req = Request(rid=0, prompt=prompts[0], max_new_tokens=20,
+                  deadline_ms=20_000)  # ~4-5 decode steps of virtual time
+    eng.submit(req)
+    fin = eng.run()
+    assert fin == [req] and req.status == "deadline_missed"
+    assert 0 < len(req.output) < 20  # partial output survives
+    assert req.first_token_t is not None
+    assert eng.n_deadline_missed == 1
+    assert eng.pool.n_free == eng.n_pages - 1  # pages freed at expiry
+
+
+def test_fifo_scheduler_matches_slo_for_default_requests(slo_model):
+    """With no deadlines and uniform priorities the two policies coincide —
+    same preemptions, token-identical outputs, both equal to an ample run."""
+    plan, params, prompts = slo_model
+
+    def serve(**kw):
+        eng = PagedServingEngine(plan, params, **_KW | kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        eng.run()
+        return eng, [r.output for r in sorted(eng.finished, key=lambda r: r.rid)]
+
+    _, ample = serve()
+    slo_eng, slo_out = serve(n_pages=7, scheduler="slo")
+    fifo_eng, fifo_out = serve(n_pages=7, scheduler="fifo")
+    assert slo_out == ample and fifo_out == ample
+    assert slo_eng.n_preemptions == fifo_eng.n_preemptions
+    assert slo_eng.pool.n_free == slo_eng.n_pages - 1
+
+
+def test_priority_preemption_evicts_low_priority_lane(slo_model):
+    """Under pool pressure the slo victim is the low-priority lane: the
+    urgent request runs uninterrupted, the background one resumes later
+    with deterministic (ample-identical) output."""
+    plan, params, prompts = slo_model
+    kw = dict(max_batch=2, max_seq=64, page_size=4, prefill_chunk=16,
+              prefix_cache=False)
+
+    def serve(**over):
+        eng = PagedServingEngine(plan, params, **kw | over)
+        back = Request(rid=0, prompt=prompts[1], max_new_tokens=8)
+        urgent = Request(rid=1, prompt=prompts[2], max_new_tokens=8, priority=5)
+        eng.submit(back)
+        eng.submit(urgent)
+        eng.run()
+        return eng, back, urgent
+
+    _, back_a, urgent_a = serve()  # ample pool: no preemption
+    # 6 allocatable pages: both admit at 3 pages each, the first growth
+    # starves the pool and must evict someone.
+    eng, back, urgent = serve(n_pages=7)
+    assert eng.n_preemptions >= 1
+    assert urgent.status == "completed" and urgent.n_preemptions == 0
+    assert back.status == "preempted_resumed" and back.n_preemptions >= 1
+    assert urgent.output == urgent_a.output
+    assert back.output == back_a.output
+    assert eng.pool.n_free == eng.n_pages - 1
+
+
+def test_low_priority_parks_until_urgent_work_drains(slo_model):
+    """A parked request holds no pages and finishes last; under fifo the
+    same workload completes in arrival order."""
+    plan, params, prompts = slo_model
+
+    def serve(scheduler):
+        eng = PagedServingEngine(plan, params, scheduler=scheduler,
+                                 **_KW | {"max_batch": 1})
+        reqs = [Request(rid=0, prompt=prompts[1], max_new_tokens=3),
+                Request(rid=1, prompt=prompts[2], max_new_tokens=3, priority=5),
+                Request(rid=2, prompt=prompts[3], max_new_tokens=3, priority=5)]
+        for r in reqs:
+            eng.submit(r)
+        return [r.rid for r in eng.run()]  # finished[] is completion order
+
+    assert serve("slo") == [1, 2, 0]  # urgent first, background parked
+    assert serve("fifo") == [0, 1, 2]  # legacy arrival order
