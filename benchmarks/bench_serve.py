@@ -43,14 +43,35 @@ their full output within deadline, counting shed / expired requests and
 late completions alike, so the two schedulers are scored by the identical
 rule.
 
+Schema 4 adds the **speculative decoding** section (``doc["spec"]``,
+DESIGN.md §Speculative-serving): a deep q4 target served at max_batch=1
+(the latency regime speculation exists for) with truncated-layer
+self-drafts (serve/spec.truncate_draft — the first k periods of the *same*
+quantized artifact, zero extra weight memory) at several γ, next to a
+non-speculative baseline run at the **identical page count** (equal KV
+byte budget — draft pages come out of the same pool).  Each row records
+the draft acceptance rate, tokens/s, the paired baseline tokens/s, and
+``token_identical`` — whether the speculative outputs matched the
+baseline outputs token-for-token, the §Speculative-serving invariant.
+The bench weights are synthetic (random init), which is *adversarial* to
+truncated-layer drafting — real trained transformers concentrate their
+function in early layers and contribute decaying residual updates later
+— so the spec model applies a per-period decay λ^i to each period's
+output projections before quantization, the same
+synthetic-stands-in-for-trained modeling choice as RTN standing in for
+the solver elsewhere in this bench.
+
 Emits ``BENCH_serve.json``; ``--smoke`` runs a seconds-scale subset with
 the same schema (CI guards the file shape, not the numbers);
 ``--validate`` checks an existing file and exits non-zero on
 malformed/missing — on full (non-smoke) documents it also enforces the
 acceptance orderings: the int4+quantized-weights cell beats the bf16
-paged baseline on tokens/s with TTFT no worse (5% jitter allowance), and
-the SLO scheduler's deadline-miss rate is no worse than FIFO's on the
-same trace.  Mirrors benchmarks/bench_solver.py conventions.
+paged baseline on tokens/s with TTFT no worse (5% jitter allowance), the
+SLO scheduler's deadline-miss rate is no worse than FIFO's on the same
+trace, every speculative row is token-identical to its baseline, and at
+least one speculative cell reaches acceptance ≥ 0.6 with tokens/s at or
+above its equal-byte-budget baseline.  Mirrors benchmarks/bench_solver.py
+conventions.
 """
 
 from __future__ import annotations
@@ -61,7 +82,7 @@ import os
 import sys
 import time
 
-SCHEMA = 3
+SCHEMA = 4
 _SERVE_KEYS = {
     "scenario", "engine", "kv", "weights", "weight_layout", "max_batch",
     "kv_budget_tokens", "kv_budget_bytes", "n_pages", "n_requests",
@@ -74,6 +95,12 @@ _BURSTY_KEYS = {
     "n_pages", "n_requests", "new_tokens", "wall_s", "tokens_per_s",
     "ttft_p50_ms", "ttft_p99_ms", "deadline_miss_rate", "n_completed",
     "n_preempted_resumed", "n_shed", "n_deadline_missed", "n_preemptions",
+}
+_SPEC_KEYS = {
+    "scenario", "engine", "kv", "weights", "draft", "gamma", "max_batch",
+    "n_pages", "n_requests", "new_tokens", "wall_s", "tokens_per_s",
+    "acceptance_rate", "n_spec_rounds", "n_draft_tokens", "n_draft_accepted",
+    "baseline_tokens_per_s", "speedup_vs_baseline", "token_identical",
 }
 
 
@@ -99,64 +126,160 @@ def _bench_model(smoke: bool):
 
 
 def _quantize_weights(plan, params, *, bits, outlier_frac=0.0):
-    """RTN-quantize every QUANTIZABLE dec leaf into the serving QT layout.
+    """RTN artifact in the serving QT layout (moved to serve/qparams).
 
-    Serving perf is weight-value independent: the bench needs the artifact's
-    *byte layout* — codes (packed two-per-byte at 4 bits), fp32 scale/zero
-    grid, optional COO outlier planes (QuantEase Algorithm-3 structure:
-    fp16 values + flat int32 indices) — not solver quality, so direct
-    per-channel RTN stands in for the PTQ solver.  4-bit artifacts are then
-    run through the roofline weight-layout decision
-    (serve/qparams.prepack_params_for_serving); returns
-    ``(params, layout_label)``.
+    Serving perf is weight-value independent, so direct per-channel RTN
+    (:func:`repro.serve.qparams.rtn_quantize_for_serving`) stands in for
+    the PTQ solver; the bench only needs the artifact's byte layout.
+    Returns ``(params, layout_label)``.
     """
-    import dataclasses as dc
+    from repro.serve.qparams import rtn_quantize_for_serving
+
+    return rtn_quantize_for_serving(plan, params, bits=bits,
+                                    outlier_frac=outlier_frac)
+
+
+def _spec_bench_model(smoke: bool, lam: float = 0.3):
+    """Deep decayed-residual target for the speculative cells.
+
+    Truncated-layer self-drafting bets that a prefix of the stack already
+    predicts the full stack's argmax most of the time.  Random-init weights
+    are *adversarial* to that bet — every layer contributes an equal-scale
+    i.i.d. residual update, so dropping half the stack decorrelates the
+    logits — whereas trained transformers concentrate their function early
+    and contribute decaying residual updates later (the reason
+    layer-skip/early-exit drafting works at all).  To make the synthetic
+    bench model that shape rather than the adversarial one, each period
+    i's *output* projections (attention ``wo``, MLP ``wd`` — the writes
+    into the residual stream) are scaled by ``lam**i`` before
+    quantization.  Same modeling spirit as RTN standing in for the solver:
+    the bench measures the serving machinery, not model quality.
+    """
+    import dataclasses
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.solver import QUANTIZABLE
-    from repro.quant import GridSpec, quantize_tensor
-    from repro.quant.pack import pack_codes
-    from repro.serve.qparams import _linear_meta, prepack_params_for_serving
+    from repro.configs import get_config
+    from repro.launch.train import reduced
+    from repro.models import init_params, make_plan
 
-    def qt_of(name, leaf):
-        # Dense stacked leaves are (n_periods, in_dims..., out_dims...) with
-        # fused head/ff axes; flatten through the same (out_f, d_in) meta the
-        # serving QT layout uses (qparams._linear_meta / core.solver._to_2d).
-        n_p = leaf.shape[0]
-        out_f, d_in = _linear_meta(plan, name)[:2]
-        w = np.asarray(leaf, np.float32).reshape(n_p, d_in, out_f)
-        w = w.transpose(0, 2, 1)  # (n_periods, out_f, d_in) — serving layout
-        qts = []
-        for i in range(n_p):
-            qt = quantize_tensor(jnp.asarray(w[i]), GridSpec(bits=bits))
-            if outlier_frac:
-                resid = w[i] - np.asarray(qt.dequantize())
-                s = max(1, int(outlier_frac * resid.size))
-                idx = np.argsort(np.abs(resid).ravel())[-s:].astype(np.int32)
-                qt = dc.replace(
-                    qt,
-                    outlier_values=jnp.asarray(resid.ravel()[idx], jnp.float16),
-                    outlier_idx=jnp.asarray(idx),
+    cfg = reduced(get_config("stablelm_12b"))
+    cfg = dataclasses.replace(cfg, n_periods=2 if smoke else 4)
+    if smoke:
+        cfg = dataclasses.replace(cfg, d_model=64, head_dim=16, d_ff=128)
+    plan = make_plan(cfg, 1)
+    params = init_params(plan, jax.random.PRNGKey(0))
+    scale = (lam ** np.arange(cfg.n_periods)).astype(np.float32)
+    dec = {}
+    for key, blk in params["dec"].items():
+        blk = dict(blk)
+        for name in ("wo", "wd"):
+            if name in blk:
+                w = np.asarray(blk[name])
+                blk[name] = jax.numpy.asarray(
+                    w * scale.reshape((-1,) + (1,) * (w.ndim - 1))
                 )
-            if bits == 4 and qt.codes.shape[-1] % 2 == 0:
-                qt = dc.replace(qt, codes=pack_codes(qt.codes, 4), packed=True)
-            qts.append(qt)
-        return jax.tree.map(lambda *ls: jnp.stack(ls), *qts)
+        dec[key] = blk
+    return cfg, plan, dict(params, dec=dec)
 
-    out = dict(params)
-    out["dec"] = {
-        key: {
-            name: qt_of(name, leaf) if name in QUANTIZABLE else leaf
-            for name, leaf in blk.items()
+
+def _collect_spec(smoke: bool) -> list:
+    """The ``doc["spec"]`` rows: q4 target at max_batch=1, truncated
+    self-drafts vs a non-speculative baseline at the identical page count
+    (equal KV byte budget — draft pages live in the same pool)."""
+    import numpy as np
+
+    from repro.serve.engine import PagedServingEngine, Request
+    from repro.serve.spec import SpecConfig, truncate_draft
+
+    cfg, plan, params = _spec_bench_model(smoke)
+    q4_params, _ = _quantize_weights(plan, params, bits=4)
+    if smoke:
+        max_seq, page_size, chunk, n_req, max_new = 64, 8, 16, 2, 6
+        cells = [("trunc1", 1, 2)]
+    else:
+        max_seq, page_size, chunk, n_req, max_new = 256, 16, 32, 6, 32
+        cells = [("trunc2", 2, 2), ("trunc2", 2, 3), ("trunc1", 1, 3)]
+    # Draft pages come from the same pool, so the budget is set once and
+    # shared: room for every lane's target pages plus the transient draft
+    # lookahead (§Speculative-serving degradation keeps it honest anyway).
+    n_pages = 1 + 2 * (max_seq // page_size)
+
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab, size=int(n)).astype(np.int32)
+               for n in rng.integers(8, max(9, max_seq - max_new - 8),
+                                     size=n_req)]
+
+    def serve(spec):
+        eng = PagedServingEngine(
+            plan, q4_params, max_batch=1, max_seq=max_seq,
+            page_size=page_size, prefill_chunk=chunk, n_pages=n_pages,
+            spec=spec,
+        )
+        # Warm every executable on this instance: normal rounds, the
+        # zero-budget legacy single-decode branch (a max_new=1 request),
+        # and the COW guard-copy path (duplicate prompts share
+        # prefix-cache pages).  Warm prompts come from a disjoint seed.
+        wrng = np.random.default_rng(10_001)
+        warm = [wrng.integers(1, cfg.vocab, size=40 + i).astype(np.int32)
+                for i in range(3)]
+        for i, p in enumerate(warm):
+            eng.submit(Request(rid=-1 - i, prompt=p[: max_seq - 16],
+                               max_new_tokens=min(12, max_new)))
+        eng.submit(Request(rid=-8, prompt=warm[0][: page_size + 4].copy(),
+                           max_new_tokens=1))
+        dup = warm[1][: 2 * page_size + 1].copy()  # ≥1 full page to share
+        eng.submit(Request(rid=-9, prompt=dup, max_new_tokens=2))
+        eng.submit(Request(rid=-10, prompt=dup.copy(), max_new_tokens=2))
+        eng.run()
+        eng.finished.clear()
+        eng.n_spec_rounds = eng.n_draft_tokens = eng.n_draft_accepted = 0
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        outs = {r.rid: list(r.output) for r in eng.finished if r.rid >= 0}
+        return eng, wall, outs
+
+    def row(name, gamma, eng, wall, identical, base_tps=None):
+        new_tokens = sum(len(r.output) for r in eng.finished if r.rid >= 0)
+        tps = round(new_tokens / wall, 1)
+        acc = eng.acceptance_rate()
+        return {
+            "scenario": "latency",
+            "engine": "paged",
+            "kv": "bf16",
+            "weights": "q4_decayed",
+            "draft": name,
+            "gamma": gamma,
+            "max_batch": 1,
+            "n_pages": n_pages,
+            "n_requests": len(prompts),
+            "new_tokens": new_tokens,
+            "wall_s": round(wall, 4),
+            "tokens_per_s": tps,
+            "acceptance_rate": None if acc is None else round(acc, 4),
+            "n_spec_rounds": eng.n_spec_rounds,
+            "n_draft_tokens": eng.n_draft_tokens,
+            "n_draft_accepted": eng.n_draft_accepted,
+            "baseline_tokens_per_s": base_tps if base_tps is not None else tps,
+            "speedup_vs_baseline": round(tps / base_tps, 2)
+            if base_tps is not None else 1.0,
+            "token_identical": identical,
         }
-        for key, blk in params["dec"].items()
-    }
-    out, decisions = prepack_params_for_serving(plan, out)
-    labels = sorted(set(decisions.values())) or ["linear"]
-    return out, "+".join(labels)
+
+    base_eng, base_wall, base_outs = serve(None)
+    rows = [row("none", 0, base_eng, base_wall, True)]
+    base_tps = rows[0]["tokens_per_s"]
+    for name, k, gamma in cells:
+        dplan, dparams = truncate_draft(plan, q4_params, k)
+        eng, wall, outs = serve(
+            SpecConfig(draft_plan=dplan, draft_params=dparams, gamma=gamma)
+        )
+        rows.append(row(name, gamma, eng, wall, outs == base_outs, base_tps))
+    return rows
 
 
 def _requests(cfg, scenario: str, n: int, max_prompt: int, max_new: int):
@@ -502,6 +625,7 @@ def collect(smoke: bool) -> dict:
         "backend": jax.default_backend(),
         "serve": rows,
         "bursty": bursty_rows,
+        "spec": _collect_spec(smoke),
     }
 
 
@@ -545,6 +669,25 @@ def validate(path: str) -> list[str]:
     scheds = {r.get("scheduler") for r in bursty}
     if bursty and not {"fifo", "slo"} <= scheds:
         probs.append("bursty: needs both fifo and slo scheduler rows")
+    spec = doc.get("spec")
+    if not isinstance(spec, list) or not spec:
+        probs.append("spec: missing/empty")
+        spec = []
+    for i, row in enumerate(spec):
+        missing = _SPEC_KEYS - set(row)
+        if missing:
+            probs.append(f"spec[{i}]: missing keys {sorted(missing)}")
+    spec_rows = [r for r in spec if r.get("draft") not in (None, "none")]
+    if spec and not spec_rows:
+        probs.append("spec: needs at least one speculative (draft != none) row")
+    for r in spec_rows:
+        # Token identity is the §Speculative-serving invariant — it holds
+        # on every row (smoke included), not just the fast ones.
+        if r.get("token_identical") is not True:
+            probs.append(
+                f"spec {r.get('draft')}/γ={r.get('gamma')}: output not "
+                "token-identical to the non-speculative baseline"
+            )
     if not doc.get("smoke"):
         # Acceptance ordering on the committed full trajectory: the whole
         # sub-4-bit artifact beats the bf16 paged baseline on tokens/s at
@@ -575,6 +718,18 @@ def validate(path: str) -> list[str]:
             probs.append(
                 f"slo deadline-miss rate ({slo['deadline_miss_rate']}) worse "
                 f"than fifo baseline ({fifo['deadline_miss_rate']})"
+            )
+        # Speculative acceptance: some committed cell must show speculation
+        # actually paying — acceptance ≥ 0.6 AND tokens/s at or above the
+        # non-speculative baseline at the identical page budget.
+        if not any(
+            (r.get("acceptance_rate") or 0.0) >= 0.6
+            and r.get("tokens_per_s", 0) >= r.get("baseline_tokens_per_s", 1e9)
+            for r in spec_rows
+        ):
+            probs.append(
+                "spec: no cell with acceptance >= 0.6 and tokens/s >= the "
+                "non-speculative baseline at equal KV byte budget"
             )
     return probs
 
@@ -607,6 +762,14 @@ def run(csv):
             tokens_per_s=row["tokens_per_s"],
             ttft_ms=row["ttft_p50_ms"],
             miss_rate=row["deadline_miss_rate"],
+        )
+    for row in doc["spec"]:
+        csv.add(
+            f"serve_spec_{row['draft']}_g{row['gamma']}",
+            us=round(1e6 / max(row["tokens_per_s"], 1e-9), 1),
+            tokens_per_s=row["tokens_per_s"],
+            acceptance=row["acceptance_rate"],
+            speedup=row["speedup_vs_baseline"],
         )
 
 
@@ -653,6 +816,14 @@ def main():
             f"{row['n_preempted_resumed']} resumed, {row['n_shed']} shed, "
             f"{row['n_deadline_missed']} expired, "
             f"{row['n_preemptions']} preemptions)"
+        )
+    for row in doc["spec"]:
+        acc = row["acceptance_rate"]
+        print(
+            f"{'spec':>14} {'paged':>10} [{row['draft']:>6} γ={row['gamma']}]: "
+            f"{row['tokens_per_s']} tok/s "
+            f"({row['speedup_vs_baseline']}x vs non-spec), acceptance "
+            f"{'-' if acc is None else acc}, identical={row['token_identical']}"
         )
     print(f"wrote {args.out}")
 

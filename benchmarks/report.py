@@ -121,7 +121,7 @@ def _load_json(path):
         return None, f"unreadable/not JSON ({e})"
 
 
-_KNOWN_SCHEMAS = {"BENCH_solver.json": (1, 2, 3), "BENCH_serve.json": (1, 2, 3),
+_KNOWN_SCHEMAS = {"BENCH_solver.json": (1, 2, 3), "BENCH_serve.json": (1, 2, 3, 4),
                   "BENCH_eval.json": (1,), "BENCH_tune.json": (1,)}
 
 
@@ -220,6 +220,37 @@ def serve_bench_table(doc):
             "",
             "_schema-2 artifact (pre SLO upgrade): no bursty-trace / "
             "deadline-miss cells — regenerate with benchmarks/bench_serve.py_",
+        ]
+    spec = doc.get("spec", [])
+    if spec:
+        lines += [
+            "",
+            "**Speculative decoding (q4 target, truncated self-drafts, "
+            "equal page budget — output token-identical to non-spec "
+            "greedy):**",
+            "",
+            "| draft | γ | tok/s | vs non-spec | acceptance | rounds "
+            "| identical |",
+            "|---|---|---|---|---|---|---|",
+        ]
+        for row in spec:
+            acc = row.get("acceptance_rate")
+            lines.append(
+                "| {d} | {g} | {t} | {sp}x | {a} | {r} | {ok} |".format(
+                    d=row.get("draft"), g=row.get("gamma"),
+                    t=row.get("tokens_per_s", "?"),
+                    sp=row.get("speedup_vs_baseline", "?"),
+                    a="—" if acc is None else acc,
+                    r=row.get("n_spec_rounds", "?"),
+                    ok=row.get("token_identical"),
+                )
+            )
+    elif schema == 3:
+        lines += [
+            "",
+            "_schema-3 artifact (pre speculative-decoding upgrade): no "
+            "acceptance-rate cells — regenerate with "
+            "benchmarks/bench_serve.py_",
         ]
     return "\n".join(lines)
 

@@ -15,10 +15,40 @@ deadline, ``--priority`` a scheduling priority; requests finish with a
 terminal status (completed / preempted_resumed / shed / deadline_missed).
 ``--fault-plan`` activates seeded fault injection (repro.faults) for chaos
 drills.
+
+Speculative decoding (paged engine, DESIGN.md §Speculative-serving):
+``--speculate`` turns on self-speculative greedy decode — a draft stack
+proposes ``--gamma`` tokens per round into draft-owned pages of the same
+pool and one fused target forward verifies; output is token-identical to
+non-speculative greedy.  The draft comes from ``--draft-layers K`` (the
+first K periods of the served artifact — zero extra weight memory),
+``--draft-bits B`` (on-the-fly RTN of the loaded dense checkpoint via
+serve/qparams.rtn_quantize_for_serving), ``--draft-checkpoint DIR`` (a
+separately trained/quantized stack), or combinations (bits/checkpoint
+then truncated by ``--draft-layers``).  With no source given,
+``--speculate`` defaults to truncating the served stack at half depth.
 """
 
 import argparse
 import sys
+
+
+def _positive_int(name):
+    """argparse type: strictly positive integer with a pointed error."""
+    def parse(s):
+        try:
+            v = int(s)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"{name} expects a positive integer, got {s!r}"
+            )
+        if v <= 0:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be >= 1, got {v} — 0 or negative would serve "
+                "nothing (use a positive count)"
+            )
+        return v
+    return parse
 
 
 def main():
@@ -30,14 +60,14 @@ def main():
                     help="checkpoint holds fake-quant/dense params either way;"
                          " flag is informational")
     ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-new", type=_positive_int("--max-new"), default=12)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--engine", choices=["paged", "contiguous"], default="paged")
     ap.add_argument("--strict-engine", action="store_true",
                     help="hard-error instead of falling back to the "
                          "contiguous engine when --engine paged is "
                          "unavailable for the arch")
-    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--page-size", type=_positive_int("--page-size"), default=16)
     ap.add_argument("--n-pages", type=int, default=0,
                     help="KV pool size in pages (0 = ample: no preemption)")
     ap.add_argument("--prefill-chunk", type=int, default=64)
@@ -57,6 +87,22 @@ def main():
     ap.add_argument("--fault-plan", default="",
                     help="fault-injection plan: path to a JSON spec or an "
                          "inline JSON string (see repro.faults.FaultPlan)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="self-speculative greedy decode (paged engine only; "
+                         "token-identical output)")
+    ap.add_argument("--gamma", type=_positive_int("--gamma"), default=4,
+                    help="draft tokens proposed per speculative round")
+    ap.add_argument("--draft-layers", type=_positive_int("--draft-layers"),
+                    default=None,
+                    help="truncated self-draft: first K periods of the "
+                         "served stack (zero extra weight memory)")
+    ap.add_argument("--draft-bits", type=_positive_int("--draft-bits"),
+                    default=None,
+                    help="RTN-quantize the loaded dense checkpoint to this "
+                         "many bits as the draft stack")
+    ap.add_argument("--draft-checkpoint", default="",
+                    help="serve the draft from a separate checkpoint dir "
+                         "(same arch)")
     args = ap.parse_args()
 
     from repro.faults import FaultPlan, fault_plan
@@ -84,10 +130,27 @@ def _run(args):
     if args.reduce:
         cfg = reduced(cfg)
     plan = make_plan(cfg, 1, kv_cache_dtype=args.kv_dtype)
-    like = {"params": jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), param_shapes(plan))}
+    like_params = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), param_shapes(plan)
+    )
+
+    def load_params(ckpt_dir):
+        try:  # quantized/eval checkpoints hold params only …
+            state, manifest = ckpt.load_checkpoint(
+                ckpt_dir, {"params": like_params}
+            )
+        except ValueError:  # … train checkpoints also carry optimizer state
+            from repro.train.optimizer import AdamWConfig, adamw_init
+
+            state, manifest = ckpt.load_checkpoint(
+                ckpt_dir,
+                {"params": like_params,
+                 "opt": adamw_init(like_params, AdamWConfig())},
+            )
+        return state["params"], manifest
+
     try:
-        state, manifest = ckpt.load_checkpoint(args.ckpt_dir, like)
-        params = state["params"]
+        params, manifest = load_params(args.ckpt_dir)
         print(f"loaded step {manifest['step']}")
     except FileNotFoundError:
         from repro.models import init_params
@@ -142,11 +205,51 @@ def _run(args):
                 file=sys.stderr,
             )
             args.engine = "contiguous"
+    if args.speculate and args.engine != "paged":
+        # No silent downgrade: draft pages live in the paged pool, so
+        # speculation cannot run on the contiguous engine.
+        raise SystemExit(
+            "--speculate requires the paged engine (draft tokens decode "
+            "into draft-owned pages of the shared pool); it is unavailable "
+            f"with --engine {args.engine} for arch {args.arch!r}"
+        )
+    spec = None
+    if args.speculate:
+        from repro.serve.qparams import rtn_quantize_for_serving
+        from repro.serve.spec import SpecConfig, truncate_draft
+
+        draft_plan, draft_params = plan, params
+        if args.draft_checkpoint:
+            draft_params, d_manifest = load_params(args.draft_checkpoint)
+            print(f"draft checkpoint: step {d_manifest['step']}")
+        if args.draft_bits:
+            draft_params, d_layout = rtn_quantize_for_serving(
+                plan, draft_params, bits=args.draft_bits
+            )
+            print(f"draft: {args.draft_bits}-bit RTN [{d_layout}]")
+        k = args.draft_layers
+        if k is None and not args.draft_bits and not args.draft_checkpoint:
+            k = max(1, cfg.n_periods // 2)
+            print(f"--speculate with no draft source: truncated self-draft "
+                  f"at {k}/{cfg.n_periods} periods")
+        if k is not None:
+            if k >= cfg.n_periods:
+                raise SystemExit(
+                    f"--draft-layers {k} must be < the target's "
+                    f"{cfg.n_periods} periods — a full-depth draft is the "
+                    "target itself and speculation would only add overhead"
+                )
+            draft_plan, draft_params = truncate_draft(
+                draft_plan, draft_params, k
+            )
+        spec = SpecConfig(draft_plan=draft_plan, draft_params=draft_params,
+                          gamma=args.gamma)
     if args.engine == "paged":
         eng = PagedServingEngine(
             plan, params, max_batch=args.max_batch, max_seq=512,
             page_size=args.page_size, n_pages=args.n_pages or None,
             prefill_chunk=args.prefill_chunk, scheduler=args.scheduler,
+            spec=spec,
         )
     else:
         eng = ServingEngine(plan, params, max_batch=args.max_batch, max_seq=512)
@@ -165,6 +268,13 @@ def _run(args):
               f"({eng.n_prefix_hit_tokens} prefix-cached tokens, "
               f"{eng.n_preemptions} preemptions, {eng.n_shed} shed, "
               f"{eng.n_deadline_missed} deadline-missed)")
+        if args.speculate:
+            acc = eng.acceptance_rate()
+            print(f"speculative: {eng.n_spec_rounds} rounds, "
+                  f"{eng.n_draft_accepted}/{eng.n_draft_tokens} draft tokens "
+                  f"accepted (rate "
+                  f"{'-' if acc is None else format(acc, '.3f')}, γ="
+                  f"{args.gamma})")
     else:
         print(f"{len(finished)} requests, {eng.n_decode_steps} decode steps, "
               f"{eng.n_prefills} prefills")

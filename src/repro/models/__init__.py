@@ -16,7 +16,10 @@ from repro.models.model import (
     init_paged_cache,
     paged_prefill_chunk,
     paged_decode_step,
+    paged_verify_tokens,
+    paged_draft_tokens,
 )
+from repro.models.common import HoistedDequant, hoist_dequant
 
 __all__ = [
     "ModelPlan",
@@ -34,4 +37,8 @@ __all__ = [
     "init_paged_cache",
     "paged_prefill_chunk",
     "paged_decode_step",
+    "paged_verify_tokens",
+    "paged_draft_tokens",
+    "HoistedDequant",
+    "hoist_dequant",
 ]

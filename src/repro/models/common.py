@@ -38,6 +38,8 @@ __all__ = [
     "rope",
     "softcap",
     "apply_linear",
+    "HoistedDequant",
+    "hoist_dequant",
     "flash_attention",
     "decode_attention",
     "activation",
@@ -260,6 +262,29 @@ def apply_linear(w, x: jax.Array, out_shape: tuple = (), name: str = None) -> ja
             ).astype(x.dtype)
         out = out_shape or (w.shape[0],)
         return y2.reshape(*lead, *out)
+    if isinstance(w, HoistedDequant):
+        # Pre-dequantized QT (see HoistedDequant): same contraction shape,
+        # same fp32 weight bytes, same post-GEMM outlier adds as the
+        # QuantizedTensor reference path — bitwise-equal results.
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y2 = (x2.astype(jnp.float32) @ w.w.T).astype(x.dtype)
+        if w.outlier_values is not None:
+            p_in = w.shape[1]
+            rows = w.outlier_idx // p_in
+            cols = w.outlier_idx % p_in
+            contrib = x2[:, cols].astype(jnp.float32) * w.outlier_values.astype(
+                jnp.float32
+            )
+            y2 = y2.astype(jnp.float32).at[:, rows].add(contrib).astype(x.dtype)
+        if w.outlier_col_idx is not None:
+            y2 = (
+                y2.astype(jnp.float32)
+                + x2[:, w.outlier_col_idx].astype(jnp.float32)
+                @ w.outlier_col_vals.T
+            ).astype(x.dtype)
+        out = out_shape or (w.shape[0],)
+        return y2.reshape(*lead, *out)
     d_in = x.shape[-1]
     w2 = w.reshape(d_in, -1)
     y = jnp.einsum("...d,df->...f", x, w2)
@@ -271,6 +296,82 @@ def apply_linear(w, x: jax.Array, out_shape: tuple = (), name: str = None) -> ja
         # the flat output.
         y = y.reshape(*y.shape[:-1], *w.shape[1:])
     return y
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HoistedDequant:
+    """A QuantizedTensor whose dequantization has been hoisted out of the
+    consuming computation: ``w`` holds byte-for-byte the fp32 matrix the
+    XLA reference GEMM (kernels/ref.dequant_matmul_ref) would rebuild on
+    every call — ``(codes - zero) * scale`` over the unpacked codes —
+    alongside the original outlier planes, which stay *post-GEMM*
+    corrections exactly as in the QuantizedTensor path.
+
+    Purpose (DESIGN.md §Speculative-serving): inside a multi-position
+    ``lax.scan`` (speculative verify / draft rollout) XLA re-dequantizes
+    loop-invariant quantized weights at every scan position, which on the
+    CPU reference path makes a γ+1-position verify cost γ+1 dequants.
+    Hoisting pays the dequant once per *call* instead of once per
+    *position*; because the per-position dot then consumes bit-identical
+    weight bytes through the same ``x_f32 @ w.T → out_dtype`` contraction
+    and the same post-GEMM outlier adds, results stay bitwise equal to
+    the un-hoisted path — the token-identity invariant survives.  Only
+    meaningful where dequant_matmul would take the XLA reference anyway
+    (off-TPU); the Pallas kernel already fuses dequant in-kernel.
+
+    Leaves may carry a leading period-stack axis like every other ``dec``
+    leaf — slicing through jax.tree.map yields per-period views."""
+
+    w: jax.Array  # (..., q, p) fp32 — exact reference dequant bytes
+    outlier_values: Optional[jax.Array] = None  # (..., s) fp16
+    outlier_idx: Optional[jax.Array] = None  # (..., s) int32, row·p + col
+    outlier_col_idx: Optional[jax.Array] = None  # (..., c) int32
+    outlier_col_vals: Optional[jax.Array] = None  # (..., q, c) fp32
+
+    @property
+    def shape(self):
+        return self.w.shape
+
+
+def hoist_dequant(tree):
+    """Map a params tree, replacing every QuantizedTensor leaf with a
+    :class:`HoistedDequant` holding the reference-path dequantized fp32
+    matrix (packed codes are unpacked with the same helper the GEMM
+    dispatch uses, so tile-prepacked layouts are transparent).  Dense
+    leaves pass through untouched.  Roughly ``32 / bits`` × the quantized
+    footprint in extra memory — a serve-time scratch copy the speculative
+    engine holds only when hoisting is enabled."""
+    from repro.kernels.ops import _unpacked
+
+    def _one(leaf):
+        if not isinstance(leaf, QuantizedTensor):
+            return leaf
+        codes = _unpacked(
+            leaf.codes, leaf.packed and leaf.bits == 4,
+            leaf.pack_layout, leaf.pack_tile,
+        )
+        p = codes.shape[-1]
+        scale, zero = leaf.scale, leaf.zero
+        if scale.ndim == codes.ndim - 1:  # per-channel grid stored flat
+            scale, zero = scale[..., None], zero[..., None]
+        n_groups = scale.shape[-1]
+        gsz = leaf.group_size or -(-p // n_groups)
+        idx = jnp.arange(p) // gsz
+        w = (codes.astype(jnp.float32) - jnp.take(zero, idx, axis=-1)) * jnp.take(
+            scale, idx, axis=-1
+        )
+        return HoistedDequant(
+            w=w,
+            outlier_values=leaf.outlier_values,
+            outlier_idx=leaf.outlier_idx,
+            outlier_col_idx=leaf.outlier_col_idx,
+            outlier_col_vals=leaf.outlier_col_vals,
+        )
+
+    return jax.tree.map(
+        _one, tree, is_leaf=lambda l: isinstance(l, QuantizedTensor)
+    )
 
 
 # --------------------------------------------------------------------------

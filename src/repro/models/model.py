@@ -35,6 +35,7 @@ from repro.dist.sharding import logical_constraint
 from repro.models import mamba2
 from repro.models.common import (
     HeadPlan,
+    HoistedDequant,
     activation,
     apply_linear,
     apply_norm,
@@ -62,6 +63,8 @@ __all__ = [
     "init_paged_cache",
     "paged_prefill_chunk",
     "paged_decode_step",
+    "paged_verify_tokens",
+    "paged_draft_tokens",
 ]
 
 
@@ -532,7 +535,7 @@ def _attn_sublayer(
 def _apply_out_proj(w, o, name=None):
     """o: (B, S, KVp, Gp, hd) → (B, S, d); dense 4-D weight or QuantizedTensor
     with codes (d, KVp·Gp·hd)."""
-    if hasattr(w, "codes"):
+    if hasattr(w, "codes") or isinstance(w, HoistedDequant):
         return apply_linear(w, o.reshape(*o.shape[:2], -1), name=name)
     from repro.models.common import _record_linear
 
@@ -738,7 +741,8 @@ def _head_logits(xc, head):
         return jnp.einsum(
             "bcd,vd->bcv", xc, head[1], preferred_element_type=jnp.float32
         )
-    if hasattr(head, "codes"):  # QuantizedTensor
+    if hasattr(head, "codes") or isinstance(head, HoistedDequant):
+        # QuantizedTensor (or its hoisted-dequant serving view)
         y = apply_linear(head, xc)
         return y.astype(jnp.float32)
     return jnp.einsum("bcd,dv->bcv", xc, head, preferred_element_type=jnp.float32)
@@ -1090,3 +1094,105 @@ def paged_decode_step(
     logits = _head_logits(x, _logit_head(plan, params))[:, 0]
     logits = softcap(logits, cfg.logit_softcap)
     return logits, new_cache
+
+
+def paged_verify_tokens(
+    plan: ModelPlan, params, tokens: jax.Array, cache, pos0, page_table,
+    write_pages,
+):
+    """Multi-token speculative *verify* forward (DESIGN.md
+    §Speculative-serving).
+
+    ``tokens``: (B, L) — per lane, the replayed last committed token
+    followed by the draft proposal (right-padded for lanes with shorter
+    proposals); ``pos0``: (B,) int32 position of ``tokens[:, 0]``;
+    ``write_pages``: (B, L) int32 — the page holding position
+    ``pos0[b] + j`` (null page for pad columns and inactive lanes).
+    Returns ``(logits (B, L, V), cache)`` where ``logits[:, j]`` scores
+    the token *after* ``tokens[:, j]``.
+
+    Deliberately **not** the flash-attention chunk path: the chunk path
+    writes KV through prefill-path quantize/round code whose bytes
+    differ from the decode path by ~1 ulp — enough to flip a near-tie
+    argmax.  Instead the L positions run through **one**
+    :func:`paged_decode_step` call as ``B·L`` *virtual lanes*: lane
+    ``(b, j)`` decodes token ``tokens[b, j]`` at position ``pos0[b] +
+    j`` against lane b's page table.  Inside every layer the decode step
+    scatters all lanes' K/V into the pages *before* the attention
+    gather, so virtual lane ``(b, j)`` reads the in-flight keys of
+    ``(b, 0..j-1)`` from the pages it shares with them, and its causal
+    length mask (``pos + 1``) hides ``(b, j+1..)`` — sequencing by
+    masking instead of by a ``lax.scan``.  Every position therefore goes
+    through *the same arithmetic* the non-speculative loop would have
+    used, and the per-position GEMMs are row-blocks of one batched
+    GEMM; tests pin that logits and KV bytes match L separate decode
+    calls exactly, which is what makes the engine's token-identity
+    invariant (speculative greedy ≡ plain greedy) bitwise rather than
+    tolerance-based.  Unlike a scan of decode bodies, the weights — and
+    on the quantized serving path, their dequantization
+    (models/common.HoistedDequant) — are read once for all L positions:
+    that amortization is what speculative decoding buys on the serving
+    hot path.  Pad columns write to the null scratch page and their
+    logits are ignored by the engine's commit rule.
+    """
+    tokens = jnp.asarray(tokens, jnp.int32)
+    B, L = tokens.shape
+    pos0 = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32), (B,))
+    pos = (pos0[:, None] + jnp.arange(L, dtype=jnp.int32)[None, :]).reshape(-1)
+    logits, cache = paged_decode_step(
+        plan, params, tokens.reshape(B * L, 1), cache, pos,
+        jnp.repeat(jnp.asarray(page_table), L, axis=0),
+        jnp.asarray(write_pages, jnp.int32).reshape(-1),
+    )
+    return logits.reshape(B, L, -1), cache
+
+
+def paged_draft_tokens(
+    plan: ModelPlan, params, forced: jax.Array, n_forced, cache, pos0,
+    page_table, write_pages,
+):
+    """Fused greedy draft proposal: S decode steps of the *draft* stack
+    with the argmax feedback loop inside one ``lax.scan`` (DESIGN.md
+    §Speculative-serving).
+
+    Step ``j`` runs at position ``pos0[b] + j``: for ``j <
+    n_forced[b]`` it is *teacher-forced* with ``forced[b, j]`` — already
+    committed tokens replayed so the draft KV catches up to the target's
+    committed frontier (after a fully-accepted round the bonus token
+    never passed through the draft, so the catch-up is 2 tokens; 1 is
+    the steady state) — and for later steps it feeds back its own
+    previous argmax, producing draft proposals.  ``forced``: (B, S);
+    ``n_forced``: (B,); ``pos0``: (B,) position of step 0;
+    ``write_pages``: (B, S) — page of position ``pos0[b] + j``, null
+    once the lane's step budget is exhausted.  Returns ``(tokens (B, S),
+    cache)`` where ``tokens[b, j]`` is step j's argmax — the host slices
+    proposals out of columns ``[n_forced-1, n_forced-1+d)``.  One
+    dispatch per whole proposal is what lets speculation pay for itself
+    when per-call overhead rivals the draft matmuls; ``jnp.argmax``
+    breaks ties toward the lowest index, matching the engine's host-side
+    ``np.argmax`` commit rule.
+    """
+    forced = jnp.asarray(forced, jnp.int32)
+    B, S = forced.shape
+    n_forced = jnp.asarray(n_forced, jnp.int32)
+    pos0 = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32), (B,))
+
+    def body(carry, xs):
+        tok, c = carry
+        frc, wp, j = xs
+        inp = jnp.where(j < n_forced, frc, tok)
+        logits, c = paged_decode_step(
+            plan, params, inp[:, None], c, pos0 + j, page_table, wp,
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, c), nxt
+
+    xs = (
+        jnp.transpose(forced),
+        jnp.transpose(jnp.asarray(write_pages, jnp.int32)),
+        jnp.arange(S, dtype=jnp.int32),
+    )
+    (_, cache), drafts = jax.lax.scan(
+        body, (jnp.zeros((B,), jnp.int32), cache), xs
+    )
+    return jnp.transpose(drafts), cache

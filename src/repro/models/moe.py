@@ -44,6 +44,10 @@ def _expert_matmul(w, xs: jax.Array, name: str) -> jax.Array:
                 x_e, c_e, s_e, z_e, out_dtype=xs.dtype
             )
         )(xs, w.unpacked_codes(), w.scale, w.zero)
+    if hasattr(w, "w"):  # HoistedDequant: per-expert pre-dequantized (E, d_out, d_in)
+        return jax.vmap(
+            lambda x_e, w_e: (x_e.astype(jnp.float32) @ w_e.T).astype(xs.dtype)
+        )(xs, w.w)
     return jnp.einsum("ecd,edf->ecf", xs, w)
 
 

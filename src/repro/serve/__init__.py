@@ -14,10 +14,26 @@ artifact produced by ``core/solver.py emit="qt"`` serves through
   baseline (benchmarks/bench_serve.py),
 * :mod:`repro.serve.qparams` — QuantizedTensor parameter trees + logical
   axes for the quantized serving footprint (dry-run memory accounting and
-  Megatron-compatible sharding of the codes matrices).
+  Megatron-compatible sharding of the codes matrices),
+* :mod:`repro.serve.spec` — quantization-aware self-speculative decoding
+  (DESIGN.md §Speculative-serving): a draft stack (lower-bit, truncated
+  -layer, or separate checkpoint) proposes γ greedy tokens per lane into
+  draft-owned pages of the *same* pool, one fused multi-position target
+  forward verifies, and the longest target-greedy prefix + bonus token
+  commits — token-identical to non-speculative greedy decode.
 """
 
 from repro.serve.engine import PagedServingEngine, Request, ServingEngine
 from repro.serve.kv_cache import PagePool
+from repro.serve.qparams import rtn_quantize_for_serving
+from repro.serve.spec import SpecConfig, truncate_draft
 
-__all__ = ["PagedServingEngine", "Request", "ServingEngine", "PagePool"]
+__all__ = [
+    "PagedServingEngine",
+    "Request",
+    "ServingEngine",
+    "PagePool",
+    "SpecConfig",
+    "rtn_quantize_for_serving",
+    "truncate_draft",
+]

@@ -74,10 +74,12 @@ from repro.models import (
     init_paged_cache,
     paged_decode_step,
     paged_prefill_chunk,
+    paged_verify_tokens,
     prefill,
 )
 from repro.models.model import ModelPlan
 from repro.serve.kv_cache import NULL_PAGE, PagePool, page_nbytes
+from repro.serve.spec import DraftManager, SpecConfig, maybe_hoist
 
 __all__ = ["Request", "ServingEngine", "PagedServingEngine", "TERMINAL_STATUSES"]
 
@@ -102,6 +104,22 @@ class Request:
     finish_t: Optional[float] = None
     n_preemptions: int = 0
     submit_order: int = -1  # arrival tie-break (assigned by the engine)
+    # Speculative-decoding accounting (all zero when the engine doesn't
+    # speculate): commit rounds this request went through, proposals the
+    # target scored, and how many it accepted.  Every round commits
+    # accepted + 1 tokens (the bonus token), so
+    # ``len(output) == n_draft_accepted + n_spec_rounds`` exactly — the
+    # accounting test pins this identity.
+    n_spec_rounds: int = 0
+    n_draft_tokens: int = 0
+    n_draft_accepted: int = 0
+
+    def acceptance_rate(self) -> Optional[float]:
+        """Fraction of proposed draft tokens the target accepted (None
+        when nothing was ever proposed for this request)."""
+        if self.n_draft_tokens == 0:
+            return None
+        return self.n_draft_accepted / self.n_draft_tokens
 
     def deadline_at(self) -> float:
         """Absolute engine-clock deadline (inf when no SLO attached)."""
@@ -290,10 +308,16 @@ class PagedServingEngine:
         prefix_cache: bool = True,
         record_logits: bool = False,
         scheduler: str = "slo",
+        spec: Optional[SpecConfig] = None,
         clock: Optional[Callable[[], float]] = None,
     ):
         if scheduler not in ("slo", "fifo"):
             raise ValueError(f"unknown scheduler {scheduler!r}; expected slo|fifo")
+        if spec is not None and spec.draft_plan.cfg.vocab != plan.cfg.vocab:
+            raise ValueError(
+                f"draft vocab {spec.draft_plan.cfg.vocab} != target vocab "
+                f"{plan.cfg.vocab}: draft proposals would not be target tokens"
+            )
         self.plan = plan
         self.params = params
         self.max_batch = max_batch
@@ -340,6 +364,36 @@ class PagedServingEngine:
             donate_argnums=(0,),
         )
 
+        # Speculative decoding (DESIGN.md §Speculative-serving): a draft
+        # stack proposes, one fused γ+1-position verify scores, the longest
+        # target-greedy prefix + bonus token commits.  The verify runs the
+        # decode step over B·γ+1 *virtual lanes* — decode-path KV bytes and
+        # arithmetic per position — so speculative greedy output is
+        # token-identical to the plain loop.
+        self.spec = spec
+        self.spec_mgr: Optional[DraftManager] = None
+        if spec is not None:
+            self.spec_mgr = DraftManager(
+                spec, pool=self.pool, n_pages=n_pages, max_batch=max_batch,
+                max_seq=max_seq, page_size=page_size,
+                prefill_chunk=prefill_chunk,
+            )
+            self._verify_fn = jax.jit(
+                lambda p, t, c, pos, pt, wp: paged_verify_tokens(
+                    plan, p, t, c, pos, pt, wp
+                ),
+                donate_argnums=(2,),
+            )
+            # Verify-path weight view: where the GEMM dispatch would take
+            # the XLA reference anyway (off-TPU), quantized leaves are
+            # pre-dequantized ONCE (models/common.HoistedDequant) so the
+            # γ+1-position scan doesn't re-dequantize loop-invariant
+            # weights every position — bitwise-identical results, so the
+            # token-identity invariant is untouched.  The legacy L=1
+            # branch keeps self.params: its cost feeds the provable-shed
+            # floor and its bytes are the pre-speculation hot path.
+            self._verify_params = maybe_hoist(params, spec.hoist_dequant)
+
         self.n_decode_steps = 0
         self.n_prefill_chunks = 0
         self.n_prefill_tokens = 0
@@ -350,6 +404,10 @@ class PagedServingEngine:
         self.n_shed = 0
         self.n_deadline_missed = 0
         self.n_transient_faults = 0
+        # Speculative counters (stay zero without a SpecConfig).
+        self.n_spec_rounds = 0
+        self.n_draft_tokens = 0
+        self.n_draft_accepted = 0
         # Fastest step costs ever observed (engine clock): the optimistic
         # per-step floor behind provable-shed admission.  None until the
         # first measurement — admission cannot *prove* anything without
@@ -373,6 +431,12 @@ class PagedServingEngine:
             self.plan.cfg.n_periods, self.plan.kv_cache_dtype,
         )
         return self.n_kv_page_reads * per_page
+
+    def acceptance_rate(self) -> Optional[float]:
+        """Engine-wide draft acceptance (None before any proposal)."""
+        if self.n_draft_tokens == 0:
+            return None
+        return self.n_draft_accepted / self.n_draft_tokens
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -406,6 +470,8 @@ class PagedServingEngine:
             self.pool.release(p)
         self.lanes[lane] = None
         self._set_row(lane, [])
+        if self.spec_mgr is not None:  # draft pages go with the lane
+            self.spec_mgr.release_lane(lane)
 
     def _dev_table_now(self):
         if self._dev_table is None:
@@ -589,6 +655,8 @@ class PagedServingEngine:
                 self.pool._unregister(pid)
         self.slot_pos[lane] = seq.n_target - 1  # replay the last known token
         self._last_tok[lane, 0] = seq.tokens[-1]
+        if self.spec_mgr is not None:
+            self.spec_mgr.attach(lane, seq)
 
     # -- chunked prefill -------------------------------------------------
     def _register_ready(self, seq: _Seq):
@@ -712,39 +780,152 @@ class PagedServingEngine:
             self._preempt(victim)
 
     def _decode_step(self) -> bool:
+        """One decode round, decomposed into the propose → verify → commit
+        contract (DESIGN.md §Speculative-serving).  Without a SpecConfig,
+        propose returns empty proposals and verify runs the legacy
+        single-token decode call — bit-for-bit the pre-speculation step
+        loop (tests pin `record_logits` equality)."""
         active = self._ensure_capacity()
         if not active:
             return False
-        write_page = np.full(self.max_batch, NULL_PAGE, np.int32)
+        proposals = self._propose(active)
+        logits = self._verify(active, proposals)
+        self._commit(active, proposals, logits)
+        return True
+
+    def _propose(self, active: list[int]) -> dict:
+        """Draft proposals per active lane: ``{lane: [tokens]}`` (all
+        empty without speculation).  The per-lane budget caps the depth
+        so a verify round never writes past ``prompt + max_new - 2`` —
+        γ overrunning ``max_new`` degrades to a shorter proposal, never
+        an overshoot.  Draft page allocation happens inside the manager
+        and degrades on a dry pool; it cannot preempt."""
+        if self.spec_mgr is None:
+            return {i: [] for i in active}
+        items = []
+        for i in active:
+            seq = self.lanes[i]
+            budget = min(
+                seq.req.max_new_tokens - len(seq.req.output) - 1,
+                self.max_seq - 2 - int(self.slot_pos[i]),
+            )
+            items.append((i, seq, int(self.slot_pos[i]), budget))
+        return self.spec_mgr.propose(items)
+
+    def _verify(self, active: list[int], proposals: dict) -> np.ndarray:
+        """Score every lane's replay token + proposal in one target
+        forward; returns fp32 logits (B, L, V).  With no proposals
+        anywhere the legacy single-decode executable runs (L = 1) — the
+        non-speculative hot path, and the only branch that feeds the
+        provable-shed cost floor with true single-step costs.  Target
+        lookahead pages are grown here; a dry pool *clamps the proposal*
+        (speculation degrades) rather than preempting — only the legacy
+        slot-position coverage in `_ensure_capacity` may preempt."""
+        for i in active:
+            if not proposals[i]:
+                continue
+            seq = self.lanes[i]
+            d = len(proposals[i])
+            while d:
+                pg = (int(self.slot_pos[i]) + d) // self.page_size
+                if pg < len(seq.pages):
+                    break
+                got = self.pool.alloc(1)
+                if got is None:
+                    d -= 1
+                    continue
+                seq.pages.append(got[0])
+                self.table[i, len(seq.pages) - 1] = got[0]
+                self._dev_table = None
+            proposals[i] = proposals[i][:d]
+        spec_round = any(proposals[i] for i in active)
+
+        if not spec_round:
+            write_page = np.full(self.max_batch, NULL_PAGE, np.int32)
+            pos = np.zeros(self.max_batch, np.int32)
+            for i in active:
+                seq = self.lanes[i]
+                pos[i] = self.slot_pos[i]
+                write_page[i] = seq.pages[int(self.slot_pos[i]) // self.page_size]
+                self.n_kv_page_reads += -(-(int(self.slot_pos[i]) + 1) // self.page_size)
+            t0 = self.clock()
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(self._last_tok), self.cache,
+                jnp.asarray(pos), self._dev_table_now(), jnp.asarray(write_page),
+            )
+            self.n_decode_steps += 1
+            logits = np.asarray(logits.astype(jnp.float32))
+            dt = self.clock() - t0
+            if dt > 0:
+                self._min_decode_s = dt if self._min_decode_s is None else min(self._min_decode_s, dt)
+            return logits[:, None]
+
+        L = self.spec.gamma + 1  # one executable for every outcome
+        toks = np.zeros((self.max_batch, L), np.int32)
+        wp = np.full((self.max_batch, L), NULL_PAGE, np.int32)
         pos = np.zeros(self.max_batch, np.int32)
         for i in active:
             seq = self.lanes[i]
-            pos[i] = self.slot_pos[i]
-            write_page[i] = seq.pages[int(self.slot_pos[i]) // self.page_size]
-            self.n_kv_page_reads += -(-(int(self.slot_pos[i]) + 1) // self.page_size)
+            p0 = int(self.slot_pos[i])
+            pos[i] = p0
+            toks[i, 0] = self._last_tok[i, 0]
+            props = proposals[i]
+            toks[i, 1 : 1 + len(props)] = props
+            for j in range(len(props) + 1):
+                wp[i, j] = seq.pages[(p0 + j) // self.page_size]
+                self.n_kv_page_reads += -(-(p0 + j + 1) // self.page_size)
         t0 = self.clock()
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(self._last_tok), self.cache,
-            jnp.asarray(pos), self._dev_table_now(), jnp.asarray(write_page),
+        logits, self.cache = self._verify_fn(
+            self._verify_params, jnp.asarray(toks), self.cache, jnp.asarray(pos),
+            self._dev_table_now(), jnp.asarray(wp),
         )
         self.n_decode_steps += 1
+        self.n_spec_rounds += 1
         logits = np.asarray(logits.astype(jnp.float32))
         dt = self.clock() - t0
         if dt > 0:
-            self._min_decode_s = dt if self._min_decode_s is None else min(self._min_decode_s, dt)
+            # Per-position floor: a scan position is never cheaper than
+            # this, so the provable-shed bound stays a true lower bound.
+            per = dt / L
+            self._min_decode_s = per if self._min_decode_s is None else min(self._min_decode_s, per)
+        return logits
+
+    def _commit(self, active: list[int], proposals: dict, logits: np.ndarray):
+        """Greedy acceptance per lane: commit the longest prefix of the
+        proposal matching the target's own argmaxes, plus the bonus
+        argmax at the first disagreement (= the whole round when nothing
+        was proposed).  Every committed token is a target argmax over
+        decode-path KV — exactly the non-speculative token stream, which
+        is the engine's headline identity.  Draft pages past the new
+        frontier roll back to the pool here."""
         now = self.clock()
         for i in active:
             seq = self.lanes[i]
-            tok = int(np.argmax(logits[i]))
-            if self.record_logits:
-                self.logit_trace.setdefault(seq.req.rid, []).append(logits[i])
-            self._last_tok[i, 0] = tok
-            if not seq.req.output:
-                seq.req.first_token_t = now
-            seq.req.output.append(tok)
-            seq.tokens.append(tok)
-            self.slot_pos[i] += 1
-        return True
+            props = proposals[i]
+            greedy = [int(np.argmax(logits[i, j])) for j in range(len(props) + 1)]
+            a = 0
+            while a < len(props) and props[a] == greedy[a]:
+                a += 1
+            if self.spec_mgr is not None:
+                seq.req.n_spec_rounds += 1
+                seq.req.n_draft_tokens += len(props)
+                seq.req.n_draft_accepted += a
+                self.n_draft_tokens += len(props)
+                self.n_draft_accepted += a
+            for j in range(a + 1):
+                tok = greedy[j]
+                if self.record_logits:
+                    self.logit_trace.setdefault(seq.req.rid, []).append(
+                        logits[i, j]
+                    )
+                self._last_tok[i, 0] = tok
+                if not seq.req.output:
+                    seq.req.first_token_t = now
+                seq.req.output.append(tok)
+                seq.tokens.append(tok)
+                self.slot_pos[i] += 1
+            if self.spec_mgr is not None:
+                self.spec_mgr.commit(i, int(self.slot_pos[i]))
 
     def _retire(self):
         for i, seq in enumerate(self.lanes):

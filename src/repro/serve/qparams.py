@@ -34,6 +34,7 @@ __all__ = [
     "qt_param_axes",
     "quantize_params_for_serving",
     "prepack_params_for_serving",
+    "rtn_quantize_for_serving",
     "harmonize_qt_stack",
     "qt_rules_extra",
 ]
@@ -247,6 +248,67 @@ def harmonize_qt_stack(leaves: list) -> list:
             )
         )
     return out
+
+
+def rtn_quantize_for_serving(plan: M.ModelPlan, params, *, bits: int,
+                             outlier_frac: float = 0.0):
+    """RTN-quantize every QUANTIZABLE dec leaf into the serving QT layout.
+
+    The cheap artifact path: direct per-channel round-to-nearest over the
+    dense stacked checkpoint — no calibration data, no solver.  It produces
+    the same *byte layout* the solver pipeline emits — codes (packed
+    two-per-byte at 4 bits), fp32 per-channel scale/zero, optional COO
+    outlier planes (QuantEase Algorithm-3 structure: fp16 values + flat
+    int32 indices) — so benchmarks (serving perf is weight-value
+    independent) and on-the-fly draft construction (launch/serve.py
+    ``--draft-bits``) can build a servable artifact from any dense
+    checkpoint.  4-bit artifacts are then run through the roofline
+    weight-layout decision (:func:`prepack_params_for_serving`).
+
+    Returns ``(qt_params, layout_label)``.
+    """
+    import numpy as np
+
+    from repro.quant import GridSpec, quantize_tensor
+    from repro.quant.pack import pack_codes
+
+    def qt_of(name, leaf):
+        # Dense stacked leaves are (n_periods, in_dims..., out_dims...) with
+        # fused head/ff axes; flatten through the same (out_f, d_in) meta the
+        # serving QT layout uses (_linear_meta / core.solver._to_2d).
+        n_p = leaf.shape[0]
+        out_f, d_in = _linear_meta(plan, name)[:2]
+        w = np.asarray(leaf, np.float32).reshape(n_p, d_in, out_f)
+        w = w.transpose(0, 2, 1)  # (n_periods, out_f, d_in) — serving layout
+        qts = []
+        for i in range(n_p):
+            qt = quantize_tensor(jnp.asarray(w[i]), GridSpec(bits=bits))
+            if outlier_frac:
+                resid = w[i] - np.asarray(qt.dequantize())
+                s = max(1, int(outlier_frac * resid.size))
+                idx = np.argsort(np.abs(resid).ravel())[-s:].astype(np.int32)
+                qt = dataclasses.replace(
+                    qt,
+                    outlier_values=jnp.asarray(resid.ravel()[idx], jnp.float16),
+                    outlier_idx=jnp.asarray(idx),
+                )
+            if bits == 4 and qt.codes.shape[-1] % 2 == 0:
+                qt = dataclasses.replace(qt, codes=pack_codes(qt.codes, 4),
+                                         packed=True)
+            qts.append(qt)
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *qts)
+
+    out = dict(params)
+    out["dec"] = {
+        key: {
+            name: qt_of(name, leaf) if name in QUANTIZABLE else leaf
+            for name, leaf in blk.items()
+        }
+        for key, blk in params["dec"].items()
+    }
+    out, decisions = prepack_params_for_serving(plan, out)
+    labels = sorted(set(decisions.values())) or ["linear"]
+    return out, "+".join(labels)
 
 
 def quantize_params_for_serving(plan: M.ModelPlan, params, solver_qt_dec: list):

@@ -1,0 +1,433 @@
+"""Quantization-aware self-speculative decoding (DESIGN.md
+§Speculative-serving).
+
+The repo holds both a dense teacher and QuantEase-quantized artifacts,
+plus a parity bridge proving their logit agreement — exactly the
+self-speculation ingredients: a cheap *draft* stack proposes up to γ
+greedy tokens per lane (one fused dispatch,
+:func:`repro.models.paged_draft_tokens`), the served *target* scores all
+proposals plus one bonus position in a second fused dispatch
+(:func:`repro.models.paged_verify_tokens`), and the longest agreeing
+prefix plus the bonus token commits.  Because every committed token is
+the target's own greedy argmax, speculative output is **token-identical
+to non-speculative greedy decode of the same target artifact** —
+speculation is pure scheduling, never sampling drift.  The general
+(stochastic) rejection-sampling rule of Leviathan et al. is kept here as
+a host-side reference (:func:`rejection_sample_commit`) pinned by the
+distribution-preservation property tests; greedy serving reduces to
+:func:`greedy_accept_len`.
+
+Draft KV lives in the **same** :class:`~repro.serve.kv_cache.PagePool`
+as the target — no second pool, no new refcount rules:
+
+* the :class:`DraftManager` allocates draft-owned pages per lane and
+  **never registers them** in the prefix cache (their token-tuple keys
+  would collide with target pages holding different bytes);
+* after every verify, draft pages past the committed frontier **roll
+  back** (release) so a rejected lookahead never holds pool capacity,
+  and the whole set releases with the lane (retire / preempt / expire /
+  shed) — pool refcount audits see zero leaks;
+* draft page-allocation failure **degrades** the proposal length (down
+  to 0 = plain decode) instead of preempting, and declines the pool's
+  last free page so the target always wins the race for capacity —
+  preemption and SLO semantics are untouched by speculation.
+
+Draft flavours (``launch/serve.py`` exposes all three): a lower-bit
+RTN-quantized copy of the target
+(:func:`repro.serve.qparams.rtn_quantize_for_serving`, the 3-bit
+outlier-aware stack of the paper story), a truncated-layer variant of
+the target (:func:`truncate_draft` — first *k* periods of the stacked
+decoder, same embeddings/head), or any separately-loaded checkpoint with
+the same vocabulary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (
+    hoist_dequant,
+    init_paged_cache,
+    paged_cache_shapes,
+    paged_draft_tokens,
+    paged_prefill_chunk,
+)
+from repro.models.model import ModelPlan
+from repro.serve.kv_cache import NULL_PAGE, PagePool
+
+__all__ = [
+    "SpecConfig",
+    "DraftManager",
+    "greedy_accept_len",
+    "maybe_hoist",
+    "rejection_sample_commit",
+    "truncate_draft",
+]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance rules
+# ---------------------------------------------------------------------------
+
+
+def greedy_accept_len(draft_tokens, target_greedy) -> int:
+    """Greedy-mode acceptance: length of the longest prefix on which the
+    draft proposal agrees with the target's own greedy choices.
+    ``target_greedy[j]`` is the target argmax at the position draft token
+    ``draft_tokens[j]`` was proposed for; the engine then commits the
+    accepted prefix plus ``target_greedy[a]`` as the bonus token, which
+    is exactly what a non-speculative greedy loop would have emitted."""
+    a = 0
+    for d, t in zip(draft_tokens, target_greedy):
+        if int(d) != int(t):
+            break
+        a += 1
+    return a
+
+
+def rejection_sample_commit(draft_tokens, draft_probs, target_probs, u, v):
+    """Standard speculative rejection sampling (host-side reference rule).
+
+    For each proposed token ``t_j``: accept when ``u[j] < min(1,
+    p_target(t_j) / p_draft(t_j))``; at the first rejection, sample the
+    replacement from the normalized residual ``max(p_target - p_draft,
+    0)`` via inverse CDF with draw ``v[j]`` and stop; if every proposal
+    survives, sample one bonus token from the target's next-position
+    distribution with ``v[len(draft)]``.  The committed sequence is
+    distributed exactly as ancestral sampling from the target — in
+    particular **no committed token can have zero target probability**
+    (zero-probability proposals always reject, residual and bonus mass
+    live only where the target has mass), and with one-hot (greedy)
+    target rows the rule collapses to longest-prefix acceptance plus the
+    target argmax at the stop position, which is the rule the serving
+    engine implements with integer comparisons.  The property tests in
+    tests/test_spec_decode.py pin both facts.
+
+    ``draft_probs``/``target_probs``: rows of per-position probabilities
+    (target has one extra bonus row); ``u``: (len(draft),) accept draws
+    in [0, 1); ``v``: (len(draft)+1,) inverse-CDF draws in [0, 1).
+    Returns the committed token list (always ``accepted + 1`` long).
+    """
+    n = len(draft_tokens)
+    if len(u) < n or len(v) < n + 1 or len(target_probs) < n + 1:
+        raise ValueError("need n accept draws, n+1 CDF draws, n+1 target rows")
+
+    def _inv_cdf(probs, draw):
+        p = np.asarray(probs, np.float64)
+        p = np.maximum(p, 0.0)
+        tot = p.sum()
+        if tot <= 0.0:
+            raise ValueError("cannot sample from an all-zero distribution")
+        cum = np.cumsum(p / tot)
+        idx = int(np.searchsorted(cum, draw, side="right"))
+        if idx >= p.size or p[idx] <= 0.0:
+            # float round-off at the top of the CDF (draw ≥ cum[-1]) or a
+            # zero-mass boundary: fall back to the heaviest token, which
+            # always has positive mass.
+            idx = int(np.argmax(p))
+        return idx
+
+    committed = []
+    for j, t in enumerate(draft_tokens):
+        t = int(t)
+        pd = float(draft_probs[j][t])
+        pt = float(target_probs[j][t])
+        if pd <= 0.0:
+            raise ValueError(
+                f"draft proposed token {t} it assigns zero probability"
+            )
+        if u[j] < min(1.0, pt / pd):
+            committed.append(t)
+            continue
+        # Rejected: p_target(t) < p_draft(t) strictly, so the residual has
+        # positive total mass (the surplus lives elsewhere).
+        resid = np.maximum(
+            np.asarray(target_probs[j], np.float64)
+            - np.asarray(draft_probs[j], np.float64),
+            0.0,
+        )
+        committed.append(_inv_cdf(resid, v[j]))
+        return committed
+    committed.append(_inv_cdf(target_probs[n], v[n]))
+    return committed
+
+
+# ---------------------------------------------------------------------------
+# Draft construction
+# ---------------------------------------------------------------------------
+
+
+def truncate_draft(plan: ModelPlan, params, n_periods: int):
+    """Truncated-layer self-draft: the first ``n_periods`` periods of the
+    target's stacked decoder, sharing its embeddings, final norm, and
+    logit head.  Zero extra weight memory beyond views — every ``dec``
+    leaf (dense or QuantizedTensor: codes, scales, outlier planes all
+    carry the leading period axis) is sliced ``[:n_periods]``; the plan
+    keeps the target's paddings and KV dtype so draft pages pack
+    identically.  Returns ``(draft_plan, draft_params)``."""
+    cfg = plan.cfg
+    if not 1 <= n_periods <= cfg.n_periods:
+        raise ValueError(
+            f"truncated draft needs 1 <= n_periods <= {cfg.n_periods}, "
+            f"got {n_periods}"
+        )
+    d_plan = dataclasses.replace(
+        plan, cfg=dataclasses.replace(cfg, n_periods=n_periods)
+    )
+    d_params = dict(params)
+    d_params["dec"] = jax.tree.map(lambda a: a[:n_periods], params["dec"])
+    return d_plan, d_params
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding configuration handed to the paged engine.
+
+    ``gamma`` is the maximum proposal depth per round; the engine's
+    verify executable scores ``gamma + 1`` positions, so one compiled
+    program serves every acceptance outcome."""
+
+    draft_plan: ModelPlan
+    draft_params: object
+    gamma: int = 4
+    label: str = "draft"
+    # Hoist QuantizedTensor dequantization out of the multi-position scans
+    # (models/common.HoistedDequant): None = auto (on wherever the GEMM
+    # dispatch takes the XLA reference path, i.e. off-TPU — there the scan
+    # would re-dequantize loop-invariant weights every position).  Bitwise
+    # -transparent; trades ~32/bits × weight memory for one dequant per
+    # call instead of per position.
+    hoist_dequant: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.gamma < 1:
+            raise ValueError(f"gamma must be >= 1, got {self.gamma}")
+
+
+def maybe_hoist(params, flag: Optional[bool]):
+    """Resolve a SpecConfig.hoist_dequant flag against the backend: hoist
+    exactly where dequant_matmul would take the XLA reference anyway, so
+    hoisting can never swap a Pallas-kernel result for a reference one."""
+    if flag is None:
+        from repro.kernels.ops import on_tpu
+
+        flag = not on_tpu()
+    return hoist_dequant(params) if flag else params
+
+
+# ---------------------------------------------------------------------------
+# Draft-side paged state
+# ---------------------------------------------------------------------------
+
+
+class DraftManager:
+    """Owns the draft stack's paged KV alongside the target's in the same
+    :class:`PagePool` (module docstring: lifecycle + degradation rules).
+
+    Per lane it tracks the draft-owned page list and two cursors:
+    ``synced`` — prompt positions covered by draft chunked prefill — and
+    ``frontier`` — the next position a draft step must write.  The
+    engine drives it with :meth:`attach` (at decode arming),
+    :meth:`propose` (each spec round), :meth:`commit` (after verify:
+    clamps the frontier back to the committed position and rolls back
+    pages past it), and :meth:`release_lane` (lane teardown of any
+    kind)."""
+
+    def __init__(
+        self,
+        cfg: SpecConfig,
+        *,
+        pool: PagePool,
+        n_pages: int,
+        max_batch: int,
+        max_seq: int,
+        page_size: int,
+        prefill_chunk: int,
+    ):
+        # Same arch gate as the engine's own cache — loud, at init.
+        paged_cache_shapes(cfg.draft_plan, n_pages, page_size)
+        self.cfg = cfg
+        self.pool = pool
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.pages_per_seq = -(-max_seq // page_size)
+        self.prefill_chunk = prefill_chunk
+        self.cache = init_paged_cache(cfg.draft_plan, n_pages, page_size)
+        self.table = np.full(
+            (max_batch, self.pages_per_seq), NULL_PAGE, np.int32
+        )
+        self._dev_table = None
+        self.pages: list[list] = [[] for _ in range(max_batch)]
+        self.synced = [-1] * max_batch  # draft prefill progress; -1 detached
+        self.frontier = [-1] * max_batch  # next position a draft step writes
+
+        # Draft weights as consumed by the fused rollout/prefill calls —
+        # hoisted-dequant where that is free of semantic drift (off-TPU).
+        self.draft_params = maybe_hoist(cfg.draft_params, cfg.hoist_dequant)
+
+        plan = cfg.draft_plan
+        self._propose_fn = jax.jit(
+            lambda p, f, nf, c, pos, pt, wp: paged_draft_tokens(
+                plan, p, f, nf, c, pos, pt, wp
+            ),
+            donate_argnums=(3,),
+        )
+        self._chunk = jax.jit(
+            lambda p, t, c, pt, off: paged_prefill_chunk(plan, p, t, c, pt, off),
+            donate_argnums=(2,),
+        )
+        self.n_propose_calls = 0
+        self.n_sync_chunks = 0
+
+    # -- page plumbing (mirrors the engine's lazy device table) ----------
+    def _dev_table_now(self):
+        if self._dev_table is None:
+            self._dev_table = jnp.asarray(self.table)
+        return self._dev_table
+
+    def _append_page(self, lane: int) -> bool:
+        """Grow the lane's draft page list by one — declining the pool's
+        last allocatable page (the target always wins the capacity race;
+        speculation degrades instead)."""
+        if len(self.pages[lane]) >= self.pages_per_seq:
+            return False
+        if self.pool.n_free < 2:
+            return False
+        got = self.pool.alloc(1)
+        if got is None:  # injected denial ("pool.alloc") degrades too
+            return False
+        self.pages[lane].append(got[0])
+        self.table[lane, len(self.pages[lane]) - 1] = got[0]
+        self._dev_table = None
+        return True
+
+    def _covered(self, lane: int, pos: int) -> bool:
+        while len(self.pages[lane]) <= pos // self.page_size:
+            if not self._append_page(lane):
+                return False
+        return True
+
+    # -- lifecycle -------------------------------------------------------
+    def attach(self, lane: int, seq):
+        """Lane armed for decode: reset draft state; the prompt syncs
+        lazily at the first propose (chunked prefill of the draft)."""
+        self.release_lane(lane)
+        self.synced[lane] = 0
+        self.frontier[lane] = seq.n_target - 1  # the replay position
+
+    def release_lane(self, lane: int):
+        for p in self.pages[lane]:
+            self.pool.release(p)
+        self.pages[lane] = []
+        self.synced[lane] = -1
+        self.frontier[lane] = -1
+        if self.table[lane].any():  # NULL_PAGE == 0
+            self.table[lane] = NULL_PAGE
+            self._dev_table = None
+
+    def commit(self, lane: int, new_pos: int):
+        """Post-verify bookkeeping: the committed frontier moved to
+        ``new_pos``.  Draft KV past it is stale (rejected lookahead) or
+        missing (the bonus token after a fully-accepted round), so the
+        write cursor clamps back and pages holding only positions beyond
+        the frontier **roll back** to the pool."""
+        if self.synced[lane] < 0:
+            return
+        self.frontier[lane] = min(self.frontier[lane], new_pos)
+        keep = new_pos // self.page_size + 1
+        while len(self.pages[lane]) > keep:
+            self.pool.release(self.pages[lane].pop())
+            self.table[lane, len(self.pages[lane])] = NULL_PAGE
+            self._dev_table = None
+
+    # -- prompt sync -----------------------------------------------------
+    def _sync_prompt(self, lane: int, seq) -> bool:
+        """Chunk-prefill the draft's KV for ``seq.tokens[:n_target]``.
+        Incremental: page-starved progress is kept and resumed next
+        round; returns False until fully synced."""
+        T = seq.n_target
+        while self.synced[lane] < T:
+            off = self.synced[lane]
+            hi = min(off + self.prefill_chunk, T)
+            if not self._covered(lane, hi - 1):
+                return False
+            buf = np.zeros((1, self.prefill_chunk), np.int32)
+            buf[0, : hi - off] = seq.tokens[off:hi]
+            self.cache = self._chunk(
+                self.draft_params, jnp.asarray(buf), self.cache,
+                self._dev_table_now()[lane : lane + 1], np.int32(off),
+            )
+            self.synced[lane] = hi
+            self.n_sync_chunks += 1
+        return True
+
+    # -- propose ---------------------------------------------------------
+    def propose(self, items) -> dict:
+        """One speculative round: for each ``(lane, seq, pos0, budget)``
+        item (``pos0`` = the lane's replay position, ``budget`` = max
+        tokens worth proposing), teacher-force the draft over committed
+        tokens it hasn't seen (``frontier..pos0``) and roll the argmax
+        feedback loop forward, all lanes in **one** fused dispatch.
+        Returns ``{lane: [draft tokens]}`` — empty list whenever the lane
+        is page-starved, unsynced, or out of budget (the engine then
+        verifies just the replay column: plain decode)."""
+        S = self.cfg.gamma + 1
+        out = {it[0]: [] for it in items}
+        live = []
+        for lane, seq, pos0, budget in items:
+            if self.synced[lane] < 0 or not self._sync_prompt(lane, seq):
+                continue
+            c = max(1, pos0 - self.frontier[lane] + 1)  # forced catch-up
+            if c > S:
+                # Too far behind for proposals this round (page starvation
+                # in earlier rounds): a pure catch-up round.
+                n_forced, d = S, 0
+            else:
+                n_forced = c
+                d = max(0, min(self.cfg.gamma, budget, S - c + 1))
+            steps = n_forced if d == 0 else c + d - 1
+            start = self.frontier[lane]
+            while steps > 0 and not self._covered(lane, start + steps - 1):
+                steps -= 1
+            if steps < n_forced:
+                n_forced, d = steps, 0
+            elif d:
+                d = max(0, steps - c + 1)
+            if steps <= 0:
+                continue
+            live.append((lane, n_forced, d, steps))
+        if not live:
+            return out
+        forced = np.zeros((self.max_batch, S), np.int32)
+        nf = np.zeros(self.max_batch, np.int32)
+        pos = np.zeros(self.max_batch, np.int32)
+        wp = np.full((self.max_batch, S), NULL_PAGE, np.int32)
+        seq_of = {it[0]: it[1] for it in items}
+        for lane, n_forced, d, steps in live:
+            start = self.frontier[lane]
+            pos[lane] = start
+            nf[lane] = n_forced
+            forced[lane, :n_forced] = seq_of[lane].tokens[
+                start : start + n_forced
+            ]
+            for j in range(steps):
+                wp[lane, j] = self.pages[lane][(start + j) // self.page_size]
+        drafts, self.cache = self._propose_fn(
+            self.draft_params, jnp.asarray(forced), jnp.asarray(nf),
+            self.cache, jnp.asarray(pos), self._dev_table_now(),
+            jnp.asarray(wp),
+        )
+        self.n_propose_calls += 1
+        drafts = np.asarray(drafts)
+        for lane, n_forced, d, steps in live:
+            self.frontier[lane] += steps
+            if d:
+                out[lane] = [
+                    int(t) for t in drafts[lane, n_forced - 1 : n_forced - 1 + d]
+                ]
+        return out

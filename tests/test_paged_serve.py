@@ -141,6 +141,56 @@ def test_page_pool_partial_match():
         pool.release(p)
 
 
+def test_page_pool_match_partial_cow_siblings():
+    """COW lookup among several children of one matched prefix: the source
+    is the sibling whose leading tokens equal the tail, full-page and empty
+    tails never COW, and the lookup transfers no ownership."""
+    pool = PagePool(6, 4)
+    a, b, c = pool.alloc(3)
+    pool.register(a, (1, 2, 3, 4))
+    # Two siblings continue the same parent prefix with different tokens.
+    pool.register(b, (1, 2, 3, 4, 5, 6, 7, 8))
+    pool.register(c, (1, 2, 3, 4, 9, 9, 9, 9))
+    assert pool.match_partial((1, 2, 3, 4, 5, 6), 4) == b
+    assert pool.match_partial((1, 2, 3, 4, 9, 9, 9), 4) == c
+    # Tail diverges from every sibling -> no COW source.
+    assert pool.match_partial((1, 2, 3, 4, 5, 9), 4) is None
+    # A full-page tail is match_full territory, never a COW copy...
+    assert pool.match_partial((1, 2, 3, 4, 5, 6, 7, 8), 4) is None
+    # ... and an empty tail has nothing to copy.
+    assert pool.match_partial((1, 2, 3, 4), 4) is None
+    # match_partial does not incref: the caller copies synchronously and
+    # the source page keeps exactly its pre-lookup ownership.
+    assert pool.ref[b] == 1 and pool.ref[c] == 1
+
+
+def test_page_pool_evict_under_park_lru_order():
+    """Parked (registered, refcount-0) pages are evicted in park order,
+    eviction unregisters, and an incref revival removes the page from
+    eviction candidacy while keeping its registration."""
+    pool = PagePool(4, 2)
+    a, b, c = pool.alloc(3)
+    pool.register(a, (1, 2))
+    pool.register(b, (3, 4))
+    pool.register(c, (5, 6))
+    # Park in order b, a, c — that order is the LRU eviction order.
+    pool.release(b)
+    pool.release(a)
+    pool.release(c)
+    assert pool.n_free == 3 and pool.free == []
+    # Revive a: it leaves the parked list and cannot be evicted.
+    pool.incref(a)
+    assert pool.n_free == 2
+    (first,) = pool.alloc(1)
+    assert first == b and pool.n_evictions == 1  # earliest-parked goes first
+    assert pool.match_full((3, 4)) == ([], 0)  # eviction unregistered b
+    (second,) = pool.alloc(1)
+    assert second == c and pool.n_evictions == 2
+    # a survived park-and-revive with its registration intact.
+    pages, n = pool.match_full((1, 2))
+    assert pages == [a] and n == 2 and pool.ref[a] == 2
+
+
 # ---------------------------------------------------------------------------
 # Engine behaviour
 # ---------------------------------------------------------------------------

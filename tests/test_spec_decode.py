@@ -1,0 +1,395 @@
+"""Speculative decoding: token identity, accounting, page hygiene, and the
+acceptance-rule properties (DESIGN.md §Speculative-serving).
+
+The headline invariant — speculative greedy output is **token-identical**
+to non-speculative greedy decode of the same target artifact — is pinned
+here end-to-end (engine runs across γ, budget edges, preemption, SLO
+interplay) and at the model layer (the batched virtual-lane verify is
+*bitwise* equal to sequential decode steps, logits and KV bytes alike).
+The stochastic acceptance rule kept as a host-side reference
+(serve/spec.rejection_sample_commit) is pinned by property tests: it never
+commits a token the target gives zero probability, and with one-hot
+target rows it collapses to longest-prefix + argmax — the integer rule the
+engine implements.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import (
+    init_paged_cache,
+    init_params,
+    make_plan,
+    paged_decode_step,
+    paged_prefill_chunk,
+    paged_verify_tokens,
+)
+from repro.serve.engine import PagedServingEngine, Request
+from repro.serve.spec import (
+    SpecConfig,
+    greedy_accept_len,
+    rejection_sample_commit,
+    truncate_draft,
+)
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from tests.conftest import reduce_cfg
+
+
+@pytest.fixture(scope="module")
+def spec_model():
+    cfg = reduce_cfg(
+        get_config("stablelm_12b"), d_model=96, head_dim=24, d_ff=192, n_periods=2
+    )
+    plan = make_plan(cfg, 1)
+    params = init_params(plan, jax.random.PRNGKey(0))
+    draft_plan, draft_params = truncate_draft(plan, params, 1)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 250, n).astype(np.int32) for n in (6, 21, 47, 11)]
+    return plan, params, draft_plan, draft_params, prompts
+
+
+def _spec(plan, draft_plan, draft_params, gamma):
+    return SpecConfig(draft_plan=draft_plan, draft_params=draft_params, gamma=gamma)
+
+
+def _serve(eng, prompts, max_new=7):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    return [r.output for r in sorted(eng.run(), key=lambda r: r.rid)]
+
+
+def _engine(plan, params, *, spec=None, max_batch=2, max_seq=128, page_size=8,
+            **kw):
+    # Generous pool: target pages + draft pages live in the same pool, so
+    # identity tests get headroom (degradation under pressure is its own
+    # test below).
+    pages_per_seq = -(-max_seq // page_size)
+    kw.setdefault("n_pages", 1 + 2 * max_batch * pages_per_seq)
+    return PagedServingEngine(
+        plan, params, max_batch=max_batch, max_seq=max_seq,
+        page_size=page_size, prefill_chunk=16, spec=spec, **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Token identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gamma", [1, 2, 4])
+def test_spec_token_identical_to_plain_greedy(spec_model, gamma):
+    plan, params, dplan, dparams, prompts = spec_model
+    base = _serve(_engine(plan, params), prompts)
+    eng = _engine(plan, params, spec=_spec(plan, dplan, dparams, gamma))
+    assert _serve(eng, prompts) == base
+    assert eng.n_spec_rounds > 0  # speculation actually ran
+
+
+def test_spec_gamma_overruns_max_new(spec_model):
+    """γ larger than the remaining token budget: proposals clamp so a
+    verify round never overshoots max_new, and outputs stay identical —
+    including max_new=1, where the budget is 0 every round and the engine
+    runs the legacy single-decode branch throughout."""
+    plan, params, dplan, dparams, prompts = spec_model
+    for max_new in (1, 3):
+        base = _serve(_engine(plan, params), prompts[:2], max_new=max_new)
+        eng = _engine(plan, params, spec=_spec(plan, dplan, dparams, 4))
+        assert _serve(eng, prompts[:2], max_new=max_new) == base
+        assert all(len(o) == max_new for o in base)
+        if max_new == 1:
+            # One token per request with zero proposals — the all-empty
+            # round is the legacy path, so no draft tokens exist.
+            assert eng.n_draft_tokens == 0 and eng.acceptance_rate() is None
+
+
+def test_spec_window_edge_prompt(spec_model):
+    """Prompt + max_new exactly fills max_seq: the last speculative rounds
+    run against the window edge where the per-lane budget clamps to the
+    remaining positions; outputs must still be identical and complete."""
+    plan, params, dplan, dparams, _ = spec_model
+    rng = np.random.default_rng(23)
+    max_seq, max_new = 64, 6
+    prompt = rng.integers(0, 250, max_seq - max_new).astype(np.int32)
+    base = _serve(_engine(plan, params, max_seq=max_seq), [prompt],
+                  max_new=max_new)
+    eng = _engine(plan, params, max_seq=max_seq,
+                  spec=_spec(plan, dplan, dparams, 4))
+    out = _serve(eng, [prompt], max_new=max_new)
+    assert out == base and len(out[0]) == max_new
+
+
+# ---------------------------------------------------------------------------
+# Accounting and page hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_spec_acceptance_accounting_exact(spec_model):
+    """Every spec-engine round commits accepted + 1 tokens, so
+    ``len(output) == n_draft_accepted + n_spec_rounds`` holds *exactly*
+    per request, and the engine totals are the per-request sums."""
+    plan, params, dplan, dparams, prompts = spec_model
+    eng = _engine(plan, params, spec=_spec(plan, dplan, dparams, 3))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=9))
+    fin = sorted(eng.run(), key=lambda r: r.rid)
+    for r in fin:
+        assert len(r.output) == r.n_draft_accepted + r.n_spec_rounds
+        assert 0 <= r.n_draft_accepted <= r.n_draft_tokens
+    # Engine-level n_spec_rounds counts fused verify *dispatches* (shared
+    # by every active lane), so it is bounded by the per-lane commit-round
+    # sum; the draft-token totals are exact per-request sums.
+    assert 0 < eng.n_spec_rounds <= sum(r.n_spec_rounds for r in fin)
+    assert eng.n_draft_tokens == sum(r.n_draft_tokens for r in fin)
+    assert eng.n_draft_accepted == sum(r.n_draft_accepted for r in fin)
+    assert eng.acceptance_rate() == eng.n_draft_accepted / eng.n_draft_tokens
+
+
+def test_spec_zero_page_leaks(spec_model):
+    """Draft pages roll back after every verify and release with the lane:
+    a refcount audit after the run sees every allocatable page free (the
+    null page stays reserved), with or without prefix caching."""
+    plan, params, dplan, dparams, prompts = spec_model
+    for prefix_cache in (True, False):
+        eng = _engine(plan, params, spec=_spec(plan, dplan, dparams, 3),
+                      prefix_cache=prefix_cache)
+        _serve(eng, prompts, max_new=9)
+        assert eng.pool.n_free == eng.n_pages - 1
+        assert all(not pgs for pgs in eng.spec_mgr.pages)
+        assert not any(eng.spec_mgr.table.ravel())  # NULL_PAGE == 0
+
+
+def test_spec_preemption_resume_deterministic(spec_model):
+    """A pool too small for the batch forces preemption mid-speculation;
+    draft allocation degrades (never preempts) and resumed sequences
+    finish with outputs identical to the ample-pool run."""
+    plan, params, dplan, dparams, prompts = spec_model
+    sp = _spec(plan, dplan, dparams, 3)
+    ample = _serve(_engine(plan, params, max_batch=3, spec=sp), prompts)
+    tight = PagedServingEngine(
+        plan, params, max_batch=3, max_seq=128, page_size=8, n_pages=13,
+        prefill_chunk=16, prefix_cache=False, spec=sp,
+    )
+    assert _serve(tight, prompts) == ample
+    assert tight.n_preemptions >= 1
+    assert tight.pool.n_free == tight.n_pages - 1  # target AND draft pages
+
+
+def test_spec_slo_shed_and_expire(spec_model):
+    """Speculation under the SLO scheduler: an impossible deadline sheds,
+    an overdue request expires mid-generation, and the surviving default
+    request's tokens are identical to the non-speculative run — spec
+    rounds never bypass deadline checks or leak the victims' pages."""
+    from tests.test_slo_serve import StepClock
+
+    plan, params, dplan, dparams, prompts = spec_model
+    sp = _spec(plan, dplan, dparams, 3)
+
+    def run(spec):
+        eng = PagedServingEngine(
+            plan, params, max_batch=2, max_seq=128, page_size=8,
+            prefill_chunk=16, n_pages=1 + 4 * 16, clock=StepClock(),
+            spec=spec,
+        )
+        eng.submit(Request(rid=0, prompt=prompts[1], max_new_tokens=8))
+        eng.submit(Request(rid=1, prompt=prompts[2], max_new_tokens=30,
+                           deadline_ms=20_000))  # expires mid-generation
+        eng.run()
+        # 30 decode positions at the engine's own observed per-step floor
+        # can never fit in 3 virtual seconds — provably unmeetable: shed.
+        eng.submit(Request(rid=2, prompt=prompts[0], max_new_tokens=30,
+                           deadline_ms=3_000))
+        fin = {r.rid: r for r in eng.run()}
+        assert eng.pool.n_free == eng.n_pages - 1
+        return eng, fin
+
+    base_eng, base = run(None)
+    eng, fin = run(sp)
+    assert fin[2].status == "shed" and base[2].status == "shed"
+    assert fin[2].output == [] and "provably unmeetable" in fin[2].error
+    assert fin[1].status == base[1].status == "deadline_missed"
+    assert 0 < len(fin[1].output) < 30  # partial output survives expiry
+    assert fin[0].status == "completed"
+    assert fin[0].output == base[0].output
+
+
+def test_spec_disabled_is_legacy_bit_for_bit(spec_model):
+    """spec=None runs the legacy single-decode branch every round; with a
+    SpecConfig the committed positions go through the batched verify.
+    Both record the same trace *bitwise* — the strongest form of the
+    identity invariant (argmax equality would survive logit drift)."""
+    plan, params, dplan, dparams, prompts = spec_model
+    def trace(spec):
+        eng = _engine(plan, params, max_batch=1, record_logits=True,
+                      spec=spec)
+        _serve(eng, prompts[:2], max_new=6)
+        return {
+            rid: np.stack([np.asarray(v) for v in vs])
+            for rid, vs in eng.logit_trace.items()
+        }
+
+    legacy = trace(None)
+    spec = trace(_spec(plan, dplan, dparams, 3))
+    assert legacy.keys() == spec.keys()
+    for rid in legacy:
+        assert np.array_equal(legacy[rid], spec[rid])
+
+
+# ---------------------------------------------------------------------------
+# Model layer: batched virtual-lane verify ≡ sequential decode, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_batched_verify_bitwise_equals_sequential(spec_model):
+    """paged_verify_tokens runs L positions as B·L virtual lanes of ONE
+    decode step; this is the bitwise pin (logits and cache bytes) against
+    L separate paged_decode_step calls that makes the engine's token
+    identity exact rather than tolerance-based."""
+    plan, params, _, _, prompts = spec_model
+    page_size, n_pages, L = 8, 12, 4
+    prompt = prompts[2]  # 47 tokens: positions 46..49 cross a page boundary
+    pt = np.full((1, 8), 0, np.int32)
+    pt[0, :7] = [1, 2, 3, 4, 5, 6, 7]
+    cache = init_paged_cache(plan, n_pages, page_size)
+    buf = np.zeros((1, 48), np.int32)
+    buf[0, : len(prompt)] = prompt
+    cache = paged_prefill_chunk(
+        plan, params, jnp.asarray(buf), cache, jnp.asarray(pt), np.int32(0)
+    )
+    pos0 = len(prompt) - 1
+    toks = np.asarray([[int(prompt[-1]), 7, 11, 13]], np.int32)
+    wp = np.asarray([[pt[0, (pos0 + j) // page_size] for j in range(L)]],
+                    np.int32)
+
+    batched, cache_b = paged_verify_tokens(
+        plan, params, jnp.asarray(toks), cache, jnp.asarray([pos0]),
+        jnp.asarray(pt), jnp.asarray(wp),
+    )
+    seq_logits, cache_s = [], cache
+    for j in range(L):
+        lg, cache_s = paged_decode_step(
+            plan, params, jnp.asarray(toks[:, j : j + 1]), cache_s,
+            jnp.asarray([pos0 + j]), jnp.asarray(pt), jnp.asarray(wp[:, j]),
+        )
+        seq_logits.append(np.asarray(lg.astype(jnp.float32)))
+    assert np.array_equal(
+        np.asarray(batched.astype(jnp.float32))[0], np.stack([l[0] for l in seq_logits])
+    )
+    for a, b in zip(jax.tree.leaves(cache_b), jax.tree.leaves(cache_s)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance-rule properties (hypothesis-optional)
+# ---------------------------------------------------------------------------
+
+
+def _random_spec_case(seed):
+    """Draft/target distributions with deliberate zero-mass tokens, plus
+    the rule's random draws, all from one integer seed."""
+    rng = np.random.default_rng(seed)
+    V = int(rng.integers(3, 9))
+    n = int(rng.integers(1, 5))
+
+    def dist(support_bias):
+        p = rng.random(V) ** 3  # skewed so near-ties and zeros both occur
+        p[rng.random(V) < support_bias] = 0.0
+        if p.sum() <= 0:
+            p[int(rng.integers(V))] = 1.0
+        return p / p.sum()
+
+    draft_probs = [dist(0.3) for _ in range(n)]
+    target_probs = [dist(0.4) for _ in range(n + 1)]
+    # Proposals must come from the draft's own support (the rule rejects a
+    # zero-draft-probability proposal as a caller bug).
+    draft_tokens = [int(rng.choice(V, p=d)) for d in draft_probs]
+    u = rng.random(n)
+    v = rng.random(n + 1)
+    return draft_tokens, draft_probs, target_probs, u, v
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+def test_rejection_sampling_never_commits_zero_target_prob(seed):
+    draft_tokens, dp, tp, u, v = _random_spec_case(seed)
+    committed = rejection_sample_commit(draft_tokens, dp, tp, u, v)
+    assert 1 <= len(committed) <= len(draft_tokens) + 1
+    for j, t in enumerate(committed):
+        assert tp[j][t] > 0.0, "committed a token the target excludes"
+    # Accepted prefix (all but the last committed token) is verbatim draft.
+    assert committed[:-1] == draft_tokens[: len(committed) - 1]
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+def test_rejection_sampling_one_hot_reduces_to_greedy_rule(seed):
+    """With one-hot (greedy) target rows the stochastic rule collapses to
+    longest-prefix acceptance + the target argmax at the stop position —
+    exactly greedy_accept_len + bonus, independent of the random draws."""
+    draft_tokens, dp, tp, u, v = _random_spec_case(seed)
+    greedy = [int(np.argmax(t)) for t in tp]
+    one_hot = [np.eye(len(t))[g] for t, g in zip(tp, greedy)]
+    committed = rejection_sample_commit(draft_tokens, dp, one_hot, u, v)
+    a = greedy_accept_len(draft_tokens, greedy)
+    assert committed == draft_tokens[:a] + [greedy[a]]
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+def test_greedy_accept_len_is_longest_agreeing_prefix(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(0, 6))
+    draft = rng.integers(0, 4, n).tolist()
+    target = rng.integers(0, 4, n).tolist()
+    a = greedy_accept_len(draft, target)
+    assert 0 <= a <= n
+    assert draft[:a] == target[:a]
+    if a < n:
+        assert draft[a] != target[a]
+
+
+def test_rejection_sampling_rejects_malformed_inputs():
+    with pytest.raises(ValueError):
+        rejection_sample_commit([0], [[1.0]], [[1.0]], [0.5], [0.5])  # short v
+    with pytest.raises(ValueError):
+        # Draft proposing outside its own support is a caller bug.
+        rejection_sample_commit(
+            [1], [np.array([1.0, 0.0])], [np.array([0.5, 0.5])] * 2,
+            [0.5], [0.5, 0.5],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Launcher flag validation (subprocess argparse smoke)
+# ---------------------------------------------------------------------------
+
+
+def test_launcher_rejects_nonpositive_counts():
+    """The serve launcher refuses zero/negative counts at argparse time
+    (exit code 2, pointed message) before touching jax or checkpoints."""
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ, "PYTHONPATH": os.path.join(repo, "src")}
+    for flag, val in [("--gamma", "0"), ("--page-size", "-4"),
+                      ("--max-new", "0")]:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve",
+             "--arch", "stablelm_12b", flag, val],
+            capture_output=True, text=True, cwd=repo, env=env, timeout=120,
+        )
+        assert proc.returncode == 2, proc.stderr
+        assert f"{flag} must be >= 1, got" in proc.stderr
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", "stablelm_12b", "--gamma", "two"],
+        capture_output=True, text=True, cwd=repo, env=env, timeout=120,
+    )
+    assert proc.returncode == 2
+    assert "--gamma expects a positive integer, got 'two'" in proc.stderr
