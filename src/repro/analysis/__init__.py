@@ -1,0 +1,29 @@
+"""repro.analysis — static-correctness pass for the JAX/Pallas codebase.
+
+``python -m repro.analysis`` runs five rule families over ``src/``:
+donation safety, retrace hazards, VMEM gate coverage (static domination +
+runtime re-evaluation of the gate byte formulas against every shipped
+config shape), dtype flow, and fault-site registry parity.  See
+DESIGN.md §Static-analysis for the rule catalog and suppression syntax.
+"""
+
+from repro.analysis.framework import (
+    Finding,
+    RULES,
+    load_project,
+    render_json,
+    render_text,
+    run_analysis,
+)
+from repro.analysis.sanitize import CompilationEvent, CompilationMonitor
+
+__all__ = [
+    "Finding",
+    "RULES",
+    "load_project",
+    "render_json",
+    "render_text",
+    "run_analysis",
+    "CompilationEvent",
+    "CompilationMonitor",
+]

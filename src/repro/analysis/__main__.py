@@ -1,0 +1,81 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit status: 0 when no findings, 1 when any rule fires, 2 on usage error.
+Defaults to analyzing the ``src/repro`` tree this module was imported
+from, so CI can run it with no arguments from the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import repro
+from repro.analysis.framework import (
+    RULES,
+    render_json,
+    render_text,
+    run_analysis,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas static-correctness pass (see DESIGN.md)",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="files/directories to analyze (default: the installed src/repro tree)",
+    )
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument(
+        "--fix-suggestions",
+        action="store_true",
+        help="print a suggested fix under each finding (text format)",
+    )
+    ap.add_argument(
+        "--no-runtime",
+        action="store_true",
+        help="skip runtime checks (VMEM gate formula re-evaluation needs "
+        "jax + repro importable)",
+    )
+    ap.add_argument(
+        "--rule",
+        action="append",
+        help="run only this rule id (repeatable)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog and exit"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from repro.analysis import passes  # noqa: F401
+
+        for name, r in sorted(RULES.items()):
+            print(f"{name:32s} {r.doc}")
+        return 0
+
+    paths = args.paths or [os.path.dirname(os.path.abspath(repro.__file__))]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+
+    findings, suppressed = run_analysis(
+        paths,
+        runtime_checks=not args.no_runtime,
+        rules=set(args.rule) if args.rule else None,
+    )
+    if args.format == "json":
+        print(render_json(findings, suppressed))
+    else:
+        print(render_text(findings, suppressed, fix_suggestions=args.fix_suggestions))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,222 @@
+"""Donation-safety pass: no reads of a donated buffer after the call.
+
+``jax.jit(..., donate_argnums=...)`` lets XLA reuse the donated buffer's
+memory for the output — the Python reference still exists but points at a
+deleted buffer, and touching it raises (or silently aliases, on some
+backends).  The paged serving engine leans on this for the KV page pool:
+every ``self._decode(...)`` donates ``self.cache`` and the safe idiom is to
+immediately reassign the attribute from the result.
+
+Two rules:
+
+``donation-use-after-donate``
+    Within one function body, a plain-name/attribute argument passed in a
+    donated position is *consumed* at the call statement; any later read of
+    the same dotted name in that body is flagged, unless a store to the
+    name (e.g. ``self.cache = self._decode(...)``) kills the taint first.
+    Statement order is the linear source order — good enough for the
+    straight-line step loops this repo writes; branches are walked in
+    order, which over-approximates (both arms seen) and never misses a
+    straight-line use.
+
+``donation-unbound-result``
+    A donating call whose result is discarded (bare ``Expr`` statement):
+    the donated buffer is gone and nothing took its place.
+
+The pass resolves donating callables in two steps: ``jax.jit`` calls with
+``donate_argnums`` assigned to a name in the same module (including
+``self._fn = jax.jit(lambda ...)`` in ``__init__``), then every call to
+those names module-wide.  Direct ``jax.jit(f, donate_argnums=...)(args)``
+call expressions are handled too.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.framework import (
+    Finding,
+    Project,
+    dotted_name,
+    is_jax_jit,
+    rule,
+)
+
+__all__ = ["check_donation"]
+
+
+def _donated_positions(call: ast.Call) -> Optional[tuple]:
+    """``donate_argnums`` of a jax.jit call as a tuple of ints, else None."""
+    if not is_jax_jit(call):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                        out.append(e.value)
+                return tuple(out)
+            return ()  # dynamic expression — can't resolve, treat as none
+    return None
+
+
+def _collect_donating_names(ctx) -> dict:
+    """Map of local callable name ("self._decode", "step_fn") → donated
+    argnum tuple, from ``<name> = jax.jit(..., donate_argnums=...)``."""
+    out = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            pos = _donated_positions(node.value)
+            if pos:
+                for tgt in node.targets:
+                    nm = dotted_name(tgt)
+                    if nm:
+                        out[nm] = pos
+    return out
+
+
+def _reads(node: ast.AST):
+    """Dotted names read (Load context) anywhere inside ``node``."""
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Name, ast.Attribute)) and isinstance(
+            getattr(sub, "ctx", None), ast.Load
+        ):
+            nm = dotted_name(sub)
+            if nm:
+                yield nm, sub
+
+
+def _stores(stmt: ast.stmt):
+    """Dotted names assigned at the top level of this statement."""
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for tgt in targets:
+        if isinstance(tgt, ast.Tuple):
+            for e in tgt.elts:
+                nm = dotted_name(e)
+                if nm:
+                    yield nm
+        else:
+            nm = dotted_name(tgt)
+            if nm:
+                yield nm
+
+
+def _donating_calls_in(stmt: ast.stmt, donating: dict):
+    """(call node, donated dotted-name args, result-bound?) for each
+    donating call inside ``stmt``."""
+    for sub in ast.walk(stmt):
+        if not isinstance(sub, ast.Call):
+            continue
+        pos = None
+        callee = dotted_name(sub.func)
+        if callee in donating:
+            pos = donating[callee]
+        elif isinstance(sub.func, ast.Call):
+            # jax.jit(f, donate_argnums=...)(args)
+            pos = _donated_positions(sub.func)
+        if not pos:
+            continue
+        donated = []
+        for i in pos:
+            if i < len(sub.args):
+                nm = dotted_name(sub.args[i])
+                if nm:
+                    donated.append(nm)
+        yield sub, donated
+
+
+def _flatten(body):
+    """Statements of a body in linear source order, descending into
+    compound statements (if/for/while/with/try)."""
+    for stmt in body:
+        yield stmt
+        for attr in ("body", "orelse", "finalbody"):
+            if hasattr(stmt, attr):
+                yield from _flatten(getattr(stmt, attr))
+        for h in getattr(stmt, "handlers", []):
+            yield from _flatten(h.body)
+
+
+@rule(
+    "donation-use-after-donate",
+    "a buffer passed in a donate_argnums position is read after the call "
+    "without being reassigned from the result",
+)
+def check_donation(project: Project):
+    findings = []
+    for ctx in project.files:
+        donating = _collect_donating_names(ctx)
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            # taint: dotted name → line of the consuming call
+            tainted: dict[str, int] = {}
+            for stmt in _flatten(fn.body):
+                # Reads before this statement's own stores/donations fire.
+                consumed_here = set()
+                for call, donated in _donating_calls_in(stmt, donating):
+                    consumed_here.update(donated)
+                for nm, node in _reads(stmt):
+                    if nm in tainted and nm not in consumed_here:
+                        findings.append(
+                            Finding(
+                                rule="donation-use-after-donate",
+                                path=ctx.rel,
+                                line=node.lineno,
+                                message=(
+                                    f"`{nm}` was donated to a jitted call at "
+                                    f"line {tainted[nm]} and read again here; "
+                                    "the buffer may already be freed"
+                                ),
+                                suggestion=(
+                                    f"reassign `{nm} = <jitted call>(...)` so the "
+                                    "reference tracks the donated-output buffer"
+                                ),
+                            )
+                        )
+                        del tainted[nm]  # report once per donation
+                bound_names = set(_stores(stmt))
+                for call, donated in _donating_calls_in(stmt, donating):
+                    is_bare = isinstance(stmt, ast.Expr) and stmt.value is call
+                    if is_bare:
+                        findings.append(
+                            Finding(
+                                rule="donation-unbound-result",
+                                path=ctx.rel,
+                                line=call.lineno,
+                                message=(
+                                    "result of a donating jitted call is "
+                                    "discarded; the donated buffer is gone and "
+                                    "nothing replaces it"
+                                ),
+                                suggestion="bind the result: `x = fn(...)`",
+                            )
+                        )
+                    for nm in donated:
+                        # `self.cache = self._decode(..., self.cache, ...)`
+                        # re-binds in the same statement: taint never lands.
+                        if nm not in bound_names:
+                            tainted[nm] = call.lineno
+                # Any other store kills taint (fresh buffer bound).
+                for nm in bound_names:
+                    tainted.pop(nm, None)
+    return findings
+
+
+@rule(
+    "donation-unbound-result",
+    "a donating jitted call whose result is discarded",
+)
+def _check_donation_unbound(project: Project):
+    # Emitted by check_donation's single walk; registered for --list/--rule
+    # selection symmetry.
+    return []

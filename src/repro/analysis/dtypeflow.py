@@ -1,0 +1,205 @@
+"""Dtype-flow pass: bf16 accumulation and premature int-code arithmetic.
+
+QuantEase's CD updates tolerate bf16 only in the Σ̃ correction matmuls —
+the β/quantize path and every accumulator must stay fp32 (paper §3;
+ablation in BENCH_solver.json).  Packed int4/int8 code arrays are storage,
+not numbers: arithmetic on them before dequantization silently computes on
+code indices.
+
+``dtype-bf16-accum``
+    A ``dot``/``matmul``/``einsum`` call with an operand cast to bf16
+    (``.astype(jnp.bfloat16)`` or a conventional dtype variable:
+    ``matmul_dtype`` / ``corr_dtype`` / ``cdt``) that does not pin fp32
+    accumulation via ``preferred_element_type=jnp.float32``.  On MXU
+    hardware the default accumulates in bf16 and the CD trajectory drifts.
+
+``dtype-int-code-arith``
+    A variable whose name marks it as a packed-code array (``codes``,
+    ``*_codes``, ``packed*``, ``q_idx``) appearing as a bare operand of
+    ``+ - * / @`` before any dequant call.  Bitwise ops (``& >> << ^ |``)
+    are the unpacking idiom and exempt; so are arguments to functions whose
+    names contain ``pack`` / ``unpack`` / ``dequant`` / ``quant``.  The
+    taint is shallow (name-based, per-expression) by design: deep taint
+    over jnp ops produced false positives on every kernel that rounds
+    float codes (``_sweep_kernel``) — precision over recall here, the
+    runtime tests own recall.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.framework import Finding, Project, call_name, dotted_name, rule
+
+__all__ = ["check_dtype_flow"]
+
+_MATMUL_FNS = {"dot", "matmul", "einsum", "dot_general", "tensordot"}
+_BF16_DTYPE_NAMES = {"bfloat16", "matmul_dtype", "corr_dtype", "cdt"}
+_CODE_NAME_RE = re.compile(r"(^|_)(codes?|packed\w*|q_idx)$")
+_EXEMPT_CALL_RE = re.compile(r"pack|unpack|dequant|quant|bitcast")
+
+
+def _is_bf16_cast(node: ast.AST) -> bool:
+    """``x.astype(jnp.bfloat16)`` / ``x.astype(matmul_dtype)`` etc."""
+    if not (isinstance(node, ast.Call) and call_name(node) == "astype"):
+        return False
+    if not node.args:
+        return False
+    nm = dotted_name(node.args[0])
+    leaf = nm.split(".")[-1] if nm else ""
+    return leaf in _BF16_DTYPE_NAMES
+
+
+def _has_fp32_accum(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "preferred_element_type":
+            nm = dotted_name(kw.value)
+            return nm.split(".")[-1] in ("float32", "f32")
+    return False
+
+
+@rule(
+    "dtype-bf16-accum",
+    "bf16-cast matmul without preferred_element_type=float32 — MXU "
+    "accumulates in bf16 and the CD/β path drifts",
+)
+def check_dtype_flow(project: Project):
+    findings = []
+    for ctx in project.files:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if call_name(node) in _MATMUL_FNS:
+                operands = list(node.args)
+                if any(_is_bf16_cast(a) for a in operands) and not _has_fp32_accum(
+                    node
+                ):
+                    findings.append(
+                        Finding(
+                            rule="dtype-bf16-accum",
+                            path=ctx.rel,
+                            line=node.lineno,
+                            message=(
+                                "matmul with a bf16-cast operand has no "
+                                "preferred_element_type=jnp.float32; the "
+                                "accumulator inherits bf16 and quantize/β "
+                                "inputs lose ~8 bits of mantissa"
+                            ),
+                            suggestion=(
+                                "add preferred_element_type=jnp.float32 to "
+                                "the dot/matmul call"
+                            ),
+                        )
+                    )
+            findings.extend(_int_code_arith(ctx, node))
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp):
+                findings.extend(_int_code_binop(ctx, node))
+    return findings
+
+
+def _int_code_arith(ctx, call: ast.Call):
+    # jnp.sum(codes), jnp.mean(codes) etc. — reductions over raw codes.
+    if call_name(call) not in ("sum", "mean", "cumsum", "prod", "var", "std"):
+        return
+    if _EXEMPT_CALL_RE.search(call_name(call)):
+        return
+    for a in call.args:
+        nm = dotted_name(a)
+        leaf = nm.split(".")[-1] if nm else ""
+        if leaf and _CODE_NAME_RE.search(leaf):
+            yield Finding(
+                rule="dtype-int-code-arith",
+                path=ctx.rel,
+                line=call.lineno,
+                message=(
+                    f"reduction over packed-code array `{nm}` before "
+                    "dequantization — this aggregates code indices, not "
+                    "values"
+                ),
+                suggestion="dequantize first, or operate on the fp tensor",
+            )
+
+
+_ARITH_OPS = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.MatMult)
+
+
+def _exempt_context(ctx, node) -> bool:
+    """Inside a pack/unpack/dequant-named call or function: exempt."""
+    for p in ctx.parents(node):
+        if isinstance(p, ast.Call):
+            if _EXEMPT_CALL_RE.search(call_name(p) or ""):
+                return True
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _EXEMPT_CALL_RE.search(p.name):
+                return True
+            break
+    return False
+
+
+def _float_domain_names(ctx, scope) -> set:
+    """Names assigned (in ``scope``) from a float-producing expression —
+    ``jnp.round``/``clip`` output or an ``.astype(float*)`` — are fp
+    tensors that merely *look* like code arrays (the quantize step's
+    pre-cast codes) and are exempt."""
+    out = set()
+    for sub in ast.walk(scope):
+        if not isinstance(sub, ast.Assign):
+            continue
+        float_src = False
+        for c in ast.walk(sub.value):
+            if isinstance(c, ast.Call):
+                nm = call_name(c)
+                if nm in ("round", "clip", "rint", "floor", "ceil"):
+                    float_src = True
+                if nm == "astype" and c.args:
+                    dt = dotted_name(c.args[0]).split(".")[-1]
+                    if dt.startswith(("float", "bfloat", "f32", "f16")):
+                        float_src = True
+        if float_src:
+            for tgt in sub.targets:
+                nm = dotted_name(tgt)
+                if nm:
+                    out.add(nm.split(".")[-1])
+    return out
+
+
+def _int_code_binop(ctx, node: ast.BinOp):
+    if not isinstance(node.op, _ARITH_OPS):
+        return
+    scope = ctx.enclosing_function(node) or ctx.tree
+    float_names = _float_domain_names(ctx, scope)
+    for side in (node.left, node.right):
+        # Bare name only: `codes * scale` flags, but
+        # `(codes.astype(f32) - zero) * scale` (the dequant idiom) and
+        # `codes & 0xF` (unpacking) do not.
+        if not isinstance(side, (ast.Name, ast.Attribute)):
+            continue
+        nm = dotted_name(side)
+        leaf = nm.split(".")[-1] if nm else ""
+        if not leaf or not _CODE_NAME_RE.search(leaf):
+            continue
+        if leaf in float_names or _exempt_context(ctx, node):
+            continue
+        yield Finding(
+            rule="dtype-int-code-arith",
+            path=ctx.rel,
+            line=node.lineno,
+            message=(
+                f"arithmetic on packed-code array `{nm}` before "
+                "dequantization — code indices are storage, not values"
+            ),
+            suggestion=(
+                "unpack/dequantize first (`(codes.astype(f32) - zero) * "
+                "scale`), or use bitwise ops for unpacking"
+            ),
+        )
+
+
+@rule(
+    "dtype-int-code-arith",
+    "packed integer-code array used in arithmetic before dequantization",
+)
+def _r2(project):
+    return []

@@ -1,0 +1,142 @@
+"""Fault-site parity pass: faults/ registry ↔ production instrumentation.
+
+The chaos harness (``faults/plan.py``) names its injection sites in a
+``SITES`` tuple; production code arms each with a ``fault_point("<site>")``
+call.  Drift in either direction is silent breakage: a registered site with
+no call is a chaos test that can never fire (coverage theater), and a call
+with an unregistered name is a hook no plan can target (and, after the
+``from_spec`` hardening, a name its JSON validation would reject).
+
+``fault-site-unwired``
+    A name in ``SITES`` with no ``fault_point(...)`` call anywhere in
+    production code (``faults/`` itself and ``analysis/`` excluded).
+
+``fault-site-unregistered``
+    A ``fault_point("<name>")`` call whose literal name is not in
+    ``SITES``.  Non-literal arguments are flagged too — the registry
+    can't vouch for a dynamic name.
+
+The registry is read from the AST of ``faults/plan.py`` (no import
+needed), so the pass works on fixture trees as well as the real repo.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import Finding, Project, call_name, rule
+
+__all__ = ["check_fault_sites"]
+
+_HOOK_NAMES = ("fault_point", "fault_site")
+
+
+def _registry_sites(project: Project):
+    """(sites, path, line) parsed from SITES = (...) in faults/plan.py."""
+    for ctx in project.files:
+        if not ctx.rel.replace("\\", "/").endswith("faults/plan.py"):
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not any(
+                isinstance(t, ast.Name) and t.id == "SITES" for t in node.targets
+            ):
+                continue
+            if isinstance(node.value, (ast.Tuple, ast.List)):
+                sites = [
+                    e.value
+                    for e in node.value.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                ]
+                return sites, ctx.rel, node.lineno
+    return None, None, None
+
+
+@rule(
+    "fault-site-parity",
+    "faults/ SITES registry and production fault_point(...) calls must "
+    "match exactly in both directions",
+)
+def check_fault_sites(project: Project):
+    sites, reg_path, reg_line = _registry_sites(project)
+    if sites is None:
+        return []  # tree has no fault registry — nothing to check
+
+    findings = []
+    called = {}  # site name → first (path, line)
+    for ctx in project.files:
+        parts = ctx.rel.replace("\\", "/").split("/")
+        if "faults" in parts or "analysis" in parts:
+            continue  # the registry and this checker aren't production arms
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call) and call_name(node) in _HOOK_NAMES):
+                continue
+            if not node.args:
+                continue
+            arg = node.args[0]
+            if not (isinstance(arg, ast.Constant) and isinstance(arg.value, str)):
+                findings.append(
+                    Finding(
+                        rule="fault-site-unregistered",
+                        path=ctx.rel,
+                        line=node.lineno,
+                        message=(
+                            "fault_point called with a non-literal site name; "
+                            "the registry cannot vouch for it"
+                        ),
+                        suggestion="pass a string literal from faults.SITES",
+                    )
+                )
+                continue
+            name = arg.value
+            called.setdefault(name, (ctx.rel, node.lineno))
+            if name not in sites:
+                findings.append(
+                    Finding(
+                        rule="fault-site-unregistered",
+                        path=ctx.rel,
+                        line=node.lineno,
+                        message=(
+                            f"fault_point site `{name}` is not in faults/"
+                            f"plan.py SITES — no fault plan can target it; "
+                            f"valid: {', '.join(sites)}"
+                        ),
+                        suggestion=f"add `{name}` to SITES or fix the name",
+                    )
+                )
+    for name in sites:
+        if name not in called:
+            findings.append(
+                Finding(
+                    rule="fault-site-unwired",
+                    path=reg_path,
+                    line=reg_line,
+                    message=(
+                        f"registered fault site `{name}` has no "
+                        "fault_point call in production code — chaos plans "
+                        "targeting it silently never fire"
+                    ),
+                    suggestion=(
+                        f"instrument the owning subsystem with "
+                        f'`fault_point("{name}")` or drop it from SITES'
+                    ),
+                )
+            )
+    return findings
+
+
+@rule(
+    "fault-site-unregistered",
+    "fault_point call whose site name is absent from the SITES registry",
+)
+def _r2(project):
+    return []
+
+
+@rule(
+    "fault-site-unwired",
+    "SITES entry with no production fault_point call",
+)
+def _r3(project):
+    return []

@@ -1,0 +1,339 @@
+"""Static-analysis framework: rule registry, suppressions, runner, output.
+
+The pass (DESIGN.md §Static-analysis) machine-checks correctness invariants
+that previously lived only in review conventions: donated buffers must not
+be read after the jitted call that consumed them, jit wrappers must be
+bound once (not rebuilt per call), every Pallas kernel must sit behind a
+VMEM fit gate, bf16 matmuls must accumulate in fp32, and the fault-site
+registry must match the instrumented production call sites exactly.
+
+Rules are AST visitors over a :class:`Project` — the parsed file set plus a
+lightweight call-graph index — registered with :func:`rule`.  Each rule
+yields :class:`Finding` records; line-scoped suppression comments
+
+    # repro: allow[rule-id] -- rationale
+
+(on the flagged line or the line above; ``allow[*]`` matches every rule)
+waive a finding **only with a written rationale** — a bare suppression is
+itself reported (``bad-suppression``), so every waiver in the tree carries
+its justification next to the code it excuses.
+
+Entry points: ``python -m repro.analysis`` (CLI, exit-nonzero on findings)
+and :func:`run_analysis` (tests, CI).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Callable, Iterable, Optional
+
+__all__ = [
+    "Finding",
+    "Suppression",
+    "FileCtx",
+    "Project",
+    "RULES",
+    "rule",
+    "load_project",
+    "run_analysis",
+    "render_text",
+    "render_json",
+]
+
+# `# repro: allow[rule-a,rule-b] -- why this is safe`
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*allow\[([\w\-\*,\s]+)\]\s*(?:--\s*(.*))?$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str  # project-relative path
+    line: int
+    message: str
+    suggestion: str = ""  # rendered under --fix-suggestions
+    severity: str = "error"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    rules: tuple  # rule ids, or ("*",)
+    rationale: str
+
+    def matches(self, finding: Finding) -> bool:
+        if finding.line not in (self.line, self.line + 1):
+            return False
+        return "*" in self.rules or finding.rule in self.rules
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """Call-graph record for one function/method definition."""
+
+    qualname: str  # "path::Class.name"
+    name: str
+    path: str
+    line: int
+    node: ast.AST
+    calls: set  # simple names (last attribute segment) this body calls
+
+
+class FileCtx:
+    """One parsed source file: AST, suppression table, parent links."""
+
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        # Parent links let rules walk up from any node (loop/function scope).
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                child._repro_parent = parent  # type: ignore[attr-defined]
+        self.suppressions: list[Suppression] = []
+        for i, ln in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(ln)
+            if m:
+                ids = tuple(s.strip() for s in m.group(1).split(",") if s.strip())
+                self.suppressions.append(
+                    Suppression(i, ids, (m.group(2) or "").strip())
+                )
+
+    def parents(self, node: ast.AST) -> Iterable[ast.AST]:
+        cur = getattr(node, "_repro_parent", None)
+        while cur is not None:
+            yield cur
+            cur = getattr(cur, "_repro_parent", None)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        for p in self.parents(node):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                return p
+        return None
+
+
+class Project:
+    """The full parsed file set plus a simple-name call-graph index."""
+
+    def __init__(self, root: str, files: list, runtime_checks: bool = True):
+        self.root = root
+        self.files = files
+        self.runtime_checks = runtime_checks
+        self.functions: list[FunctionInfo] = []
+        self._by_name: dict[str, list] = {}
+        for ctx in files:
+            self._index_file(ctx)
+
+    def _index_file(self, ctx: FileCtx):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            qual = [node.name]
+            for p in ctx.parents(node):
+                if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                    qual.append(p.name)
+            calls = set()
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    calls.add(call_name(sub))
+                    # functools.partial(f, ...) / jax.vmap(f) forward to f:
+                    # count the wrapped callable as called so gate
+                    # domination sees through the indirection.
+                    if call_name(sub) in ("partial", "vmap", "jit", "shard_map"):
+                        for a in sub.args[:1]:
+                            nm = dotted_name(a)
+                            if nm:
+                                calls.add(nm.split(".")[-1])
+            info = FunctionInfo(
+                qualname=f"{ctx.rel}::" + ".".join(reversed(qual)),
+                name=node.name,
+                path=ctx.rel,
+                line=node.lineno,
+                node=node,
+                calls={c for c in calls if c},
+            )
+            self.functions.append(info)
+            self._by_name.setdefault(node.name, []).append(info)
+
+    def callers_of(self, name: str) -> list:
+        """Functions whose body calls ``name`` (matched by simple name)."""
+        return [f for f in self.functions if name in f.calls]
+
+    def transitive_callers(self, name: str, depth: int = 4) -> list:
+        """All functions reaching ``name`` through ≤ ``depth`` call edges."""
+        seen: dict[str, FunctionInfo] = {}
+        frontier = [name]
+        for _ in range(depth):
+            nxt = []
+            for n in frontier:
+                for f in self.callers_of(n):
+                    if f.qualname not in seen:
+                        seen[f.qualname] = f
+                        nxt.append(f.name)
+            frontier = nxt
+            if not frontier:
+                break
+        return list(seen.values())
+
+
+def call_name(call: ast.Call) -> str:
+    """Simple name of a call target: ``f(...)`` → "f", ``a.b.f(...)`` → "f"."""
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return ""
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Dotted rep of a Name/Attribute chain ("self.cache"), or "" if the
+    expression is not a plain chain (calls, subscripts, literals)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def is_jax_jit(call: ast.Call) -> bool:
+    """Matches ``jax.jit(...)`` and bare ``jit(...)``."""
+    name = dotted_name(call.func)
+    return name in ("jax.jit", "jit")
+
+
+# --------------------------- registry ---------------------------------------
+
+RULES: dict[str, "Rule"] = {}
+
+
+@dataclasses.dataclass
+class Rule:
+    name: str
+    doc: str
+    fn: Callable
+
+
+def rule(name: str, doc: str):
+    def deco(fn):
+        RULES[name] = Rule(name=name, doc=doc, fn=fn)
+        return fn
+
+    return deco
+
+
+# --------------------------- runner -----------------------------------------
+
+_SKIP_DIRS = {"__pycache__", ".git"}
+
+
+def load_project(paths, runtime_checks: bool = True) -> Project:
+    """Parse every .py file under ``paths`` (files or directories)."""
+    roots = [os.path.abspath(p) for p in paths]
+    root = os.path.commonpath(roots) if roots else os.getcwd()
+    if os.path.isfile(root):
+        root = os.path.dirname(root)
+    files = []
+    seen = set()
+    for p in roots:
+        if os.path.isfile(p):
+            cand = [p]
+        else:
+            cand = []
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+                cand.extend(
+                    os.path.join(dirpath, f)
+                    for f in sorted(filenames)
+                    if f.endswith(".py")
+                )
+        for f in cand:
+            if f in seen:
+                continue
+            seen.add(f)
+            with open(f, encoding="utf-8") as fh:
+                src = fh.read()
+            files.append(FileCtx(f, os.path.relpath(f, root), src))
+    return Project(root, files, runtime_checks=runtime_checks)
+
+
+def run_analysis(
+    paths, *, runtime_checks: bool = True, rules: Optional[Iterable[str]] = None
+):
+    """Run the registered rules; returns ``(findings, suppressed)`` — both
+    lists of :class:`Finding`, the second the ones waived by a suppression
+    comment (kept for the JSON audit trail)."""
+    from repro.analysis import passes  # noqa: F401 — registers the rules
+
+    project = load_project(paths, runtime_checks=runtime_checks)
+    raw: list[Finding] = []
+    for name, r in sorted(RULES.items()):
+        if rules is not None and name not in rules:
+            continue
+        raw.extend(r.fn(project))
+
+    by_file = {ctx.rel: ctx for ctx in project.files}
+    findings, suppressed = [], []
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.rule)):
+        ctx = by_file.get(f.path)
+        sup = None
+        if ctx is not None:
+            sup = next((s for s in ctx.suppressions if s.matches(f)), None)
+        if sup is None:
+            findings.append(f)
+        elif not sup.rationale:
+            suppressed.append(f)
+            findings.append(
+                Finding(
+                    rule="bad-suppression",
+                    path=f.path,
+                    line=sup.line,
+                    message=(
+                        f"suppression of [{f.rule}] has no rationale — write "
+                        "`# repro: allow[...] -- why this is safe`"
+                    ),
+                    suggestion="append `-- <reason>` to the suppression comment",
+                )
+            )
+        else:
+            suppressed.append(f)
+    return findings, suppressed
+
+
+def render_text(findings, suppressed, *, fix_suggestions: bool = False) -> str:
+    out = []
+    for f in findings:
+        out.append(f"{f.path}:{f.line}: [{f.rule}] {f.message}")
+        if fix_suggestions and f.suggestion:
+            out.append(f"    fix: {f.suggestion}")
+    out.append(
+        f"{len(findings)} finding(s), {len(suppressed)} suppressed"
+        + (" — see `# repro: allow[...]` comments" if suppressed else "")
+    )
+    return "\n".join(out)
+
+
+def render_json(findings, suppressed) -> str:
+    return json.dumps(
+        {
+            "findings": [f.to_json() for f in findings],
+            "suppressed": [f.to_json() for f in suppressed],
+            "ok": not findings,
+        },
+        indent=2,
+    )

@@ -1,0 +1,11 @@
+"""Imports every rule module so the registry is populated.
+
+``framework.run_analysis`` imports this lazily; adding a rule = writing a
+module with an ``@rule(...)``-decorated checker and importing it here.
+"""
+
+from repro.analysis import donation  # noqa: F401
+from repro.analysis import dtypeflow  # noqa: F401
+from repro.analysis import faultsites  # noqa: F401
+from repro.analysis import retrace  # noqa: F401
+from repro.analysis import vmem  # noqa: F401

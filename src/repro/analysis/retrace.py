@@ -1,0 +1,276 @@
+"""Retrace-hazard pass: jit wrappers that defeat JAX's compilation cache.
+
+``jax.jit`` caches compiled executables on the *wrapper object*; build a
+fresh wrapper per call and every call retraces and recompiles.  The paged
+step loop runs thousands of decode steps — one stray re-jit turns an
+~μs dispatch into a multi-second compile.  Three rules:
+
+``retrace-jit-in-loop``
+    A ``jax.jit(...)`` call expression lexically inside a for/while body.
+    Each iteration builds a new wrapper with an empty cache.
+
+``retrace-jit-per-call``
+    A jitted wrapper built and immediately called / lowered in the same
+    expression (``jax.jit(f)(x)``, ``jax.jit(f).lower(...)``) inside a
+    function body that is not a recognized factory.  A *factory* caches the
+    wrapper for reuse: the jit call is in a ``return`` statement, the
+    enclosing function is decorated with ``lru_cache``/``cache``, or the
+    wrapper is stored on ``self`` inside ``__init__`` — those are the
+    blessed patterns (`core/calib.py`, `eval/scorer.py`, engine
+    constructors).
+
+``retrace-nonhashable-static``
+    ``static_argnums``/``static_argnames`` combined with a literal list /
+    dict / set argument at a call site of the same wrapper in the same
+    module — unhashable statics raise; mutable ones that are rebuilt per
+    call retrace every time.
+
+The static pass is paired with a runtime check — ``analysis/sanitize.py``
+counts real compilations under ``jax_log_compiles`` and the retrace-count
+regression test pins the engine's executable count — so anything that
+slips through the lexical net still shows up as a count diff.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import (
+    Finding,
+    Project,
+    dotted_name,
+    is_jax_jit,
+    rule,
+)
+
+__all__ = ["check_retrace"]
+
+_FACTORY_DECORATORS = {"lru_cache", "cache", "cached_property"}
+
+
+def _in_loop(ctx, node) -> bool:
+    for p in ctx.parents(node):
+        if isinstance(p, (ast.For, ast.While, ast.AsyncFor)):
+            return True
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            # A nested def inside a loop body is built per iteration too,
+            # but jit-wrapping it is only hazardous if also called there —
+            # covered by retrace-jit-per-call. Stop at the function wall.
+            return False
+    return False
+
+
+def _enclosing_defs(ctx, node):
+    return [
+        p
+        for p in ctx.parents(node)
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+
+
+def _is_factory(ctx, jit_call: ast.Call) -> bool:
+    """True when the jit wrapper is being cached for reuse, not rebuilt."""
+    defs = _enclosing_defs(ctx, jit_call)
+    if not defs:
+        return True  # module level: built once at import
+    fn = defs[0]
+    for deco in fn.decorator_list:
+        name = dotted_name(deco)
+        if not name and isinstance(deco, ast.Call):
+            name = dotted_name(deco.func)
+        if name and name.split(".")[-1] in _FACTORY_DECORATORS:
+            return True
+    if any(f.name == "__init__" for f in defs):
+        return True  # bound once per object construction
+    # `return jax.jit(...)` hands the wrapper to the caller, and
+    # `self._fn = jax.jit(...)` caches it on the object — but only when the
+    # *wrapper itself* escapes.  A Call/Attribute between the jit node and
+    # the Return/Assign means the wrapper is consumed in-expression
+    # (`return jax.jit(f)(x)`) and only its result escapes.
+    for p in ctx.parents(jit_call):
+        if isinstance(p, ast.Return):
+            return True
+        if isinstance(p, ast.Assign):
+            return True
+        if isinstance(p, (ast.Call, ast.Attribute)):
+            break
+        if p is fn:
+            break
+    return False
+
+
+def _static_argnames(call: ast.Call):
+    for kw in call.keywords:
+        if kw.arg in ("static_argnums", "static_argnames"):
+            return kw
+    return None
+
+
+@rule(
+    "retrace-jit-in-loop",
+    "jax.jit called inside a loop body — a fresh wrapper (empty compile "
+    "cache) per iteration",
+)
+def check_retrace(project: Project):
+    findings = []
+    for ctx in project.files:
+        jit_names = {}  # name → jit call (for static-arg checks)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                if is_jax_jit(node.value):
+                    for tgt in node.targets:
+                        nm = dotted_name(tgt)
+                        if nm:
+                            jit_names[nm] = node.value
+            if not (isinstance(node, ast.Call) and is_jax_jit(node)):
+                continue
+            # Closure capture: jitted lambda reading a loop variable.
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Lambda):
+                    findings.extend(_lambda_loop_captures(ctx, node, arg))
+            if _in_loop(ctx, node):
+                findings.append(
+                    Finding(
+                        rule="retrace-jit-in-loop",
+                        path=ctx.rel,
+                        line=node.lineno,
+                        message=(
+                            "jax.jit inside a loop builds a fresh wrapper "
+                            "every iteration; each call retraces and "
+                            "recompiles"
+                        ),
+                        suggestion=(
+                            "hoist the jit out of the loop (bind once in "
+                            "__init__ or at module level)"
+                        ),
+                    )
+                )
+                continue
+            parent = getattr(node, "_repro_parent", None)
+            immediately_used = (
+                isinstance(parent, ast.Call)
+                and parent.func is node
+            ) or (
+                isinstance(parent, ast.Attribute) and parent.value is node
+            )
+            if immediately_used and not _is_factory(ctx, node):
+                findings.append(
+                    Finding(
+                        rule="retrace-jit-per-call",
+                        path=ctx.rel,
+                        line=node.lineno,
+                        message=(
+                            "jit wrapper built and used in the same "
+                            "expression inside a per-call path; the compile "
+                            "cache is discarded after every call"
+                        ),
+                        suggestion=(
+                            "bind the wrapper once (module level, __init__, "
+                            "or an lru_cache'd factory) and call the bound "
+                            "name"
+                        ),
+                    )
+                )
+
+        # Unhashable static args at call sites of known jitted names.
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            nm = dotted_name(node.func)
+            jit_call = jit_names.get(nm)
+            if jit_call is None or _static_argnames(jit_call) is None:
+                continue
+            statics = _static_positions(jit_call)
+            for i, arg in enumerate(node.args):
+                if i in statics and isinstance(
+                    arg, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp)
+                ):
+                    findings.append(
+                        Finding(
+                            rule="retrace-nonhashable-static",
+                            path=ctx.rel,
+                            line=arg.lineno,
+                            message=(
+                                f"argument {i} of `{nm}` is static but a "
+                                "literal list/dict/set is passed — unhashable "
+                                "statics raise, and per-call rebuilds retrace"
+                            ),
+                            suggestion="pass a tuple / frozen value instead",
+                        )
+                    )
+    return findings
+
+
+def _static_positions(jit_call: ast.Call) -> set:
+    kw = _static_argnames(jit_call)
+    out = set()
+    if kw is not None and kw.arg == "static_argnums":
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            out.add(v.value)
+        elif isinstance(v, (ast.Tuple, ast.List)):
+            for e in v.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    out.add(e.value)
+    return out
+
+
+def _lambda_loop_captures(ctx, jit_call: ast.Call, lam: ast.Lambda):
+    """Flag a jitted lambda closing over the induction variable of an
+    enclosing loop — each captured value traces as a fresh constant."""
+    loop_vars = set()
+    for p in ctx.parents(jit_call):
+        if isinstance(p, (ast.For, ast.AsyncFor)):
+            for t in ast.walk(p.target):  # handles `for i, x in ...` tuples
+                if isinstance(t, ast.Name):
+                    loop_vars.add(t.id)
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            break
+    if not loop_vars:
+        return
+    params = {a.arg for a in lam.args.args}
+    for sub in ast.walk(lam.body):
+        if (
+            isinstance(sub, ast.Name)
+            and isinstance(sub.ctx, ast.Load)
+            and sub.id in loop_vars
+            and sub.id not in params
+        ):
+            yield Finding(
+                rule="retrace-closure-capture",
+                path=ctx.rel,
+                line=sub.lineno,
+                message=(
+                    f"jitted lambda closes over loop variable `{sub.id}`; "
+                    "each iteration bakes a different constant into the "
+                    "trace, forcing a recompile"
+                ),
+                suggestion=(
+                    f"pass `{sub.id}` as a (possibly static) argument "
+                    "instead of capturing it"
+                ),
+            )
+
+
+@rule(
+    "retrace-jit-per-call",
+    "jit wrapper built and invoked in the same expression on a per-call path",
+)
+def _r2(project):
+    return []
+
+
+@rule(
+    "retrace-closure-capture",
+    "jitted lambda capturing an enclosing loop variable",
+)
+def _r3(project):
+    return []
+
+
+@rule(
+    "retrace-nonhashable-static",
+    "literal list/dict/set passed in a static_argnums position",
+)
+def _r4(project):
+    return []

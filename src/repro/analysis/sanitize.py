@@ -1,0 +1,151 @@
+"""Tracer sanitizer: count real XLA compilations at runtime.
+
+The static retrace pass (``analysis/retrace.py``) catches the lexical
+hazards; this module catches the semantic ones — shape polymorphism, a
+weak-typed scalar flipping promotion, a config object that stops hashing —
+by counting what actually compiles.  The serving SLO depends on the step
+loop reaching a *fixed point*: after warm-up, every decode step must hit
+the jit cache, so the number of distinct compiled executables is a small
+constant determined by the engine's bucketing, not by trace length.
+
+Mechanism: ``jax_log_compiles`` makes JAX's dispatch layer log one
+``"Compiling <name> ..."`` record per backend compilation, with the jitted
+function's name and the argument shapes — enough to attribute each compile
+to its wrapper.  :class:`CompilationMonitor` attaches a logging handler for
+the duration of a ``with`` block and exposes the captured events.
+
+Usage (see tests/test_retrace_count.py):
+
+    with CompilationMonitor() as mon:
+        run_trace(engine_a)          # warm-up: helper ops + engine jits
+    with CompilationMonitor() as mon:
+        run_trace(engine_b)          # fresh identical engine
+    assert mon.count() == EXPECTED   # engine-owned executables only
+
+A fresh engine re-jits its own wrappers (new lambda objects ⇒ new cache
+keys) while module-level helper ops (``jnp.ones`` etc.) stay cached from
+the warm-up — so the second block counts exactly the engine's executable
+set.  ``assert_bounded`` wraps the common "run more of the same work, no
+new executables" stability assertion.
+"""
+
+from __future__ import annotations
+
+import logging
+import re
+from typing import List, Optional
+
+__all__ = ["CompilationEvent", "CompilationMonitor"]
+
+# Loggers that emit the "Compiling ..." line across recent jax versions.
+_COMPILE_LOGGERS = (
+    "jax._src.interpreters.pxla",
+    "jax._src.dispatch",
+    "jax.interpreters.pxla",
+)
+
+_COMPILE_RE = re.compile(r"^(?:Compiling|Finished tracing \+ transforming)\s+(\S+)")
+
+
+class CompilationEvent:
+    """One trace or backend compilation: the jitted function's name, the
+    event kind, and the raw log line (which carries the argument
+    shapes/dtypes for diffing).
+
+    ``kind="trace"`` (one per fresh (wrapper, shape-signature) pair) is
+    the stable executable-set metric: JAX dedups *backend* compiles of
+    identical HLO modules through an in-memory cache, so ``kind=
+    "compile"`` counts depend on what else ran in the process, while
+    trace counts are a pure function of the monitored code's jit surface.
+    """
+
+    def __init__(self, name: str, detail: str, kind: str = "compile"):
+        self.name = name
+        self.detail = detail
+        self.kind = kind
+
+    def __repr__(self):
+        return f"CompilationEvent({self.name!r}, kind={self.kind!r})"
+
+
+class _Capture(logging.Handler):
+    def __init__(self, events):
+        super().__init__(level=logging.DEBUG)
+        self.events = events
+
+    def emit(self, record):
+        msg = record.getMessage()
+        m = _COMPILE_RE.match(msg)
+        if not m:
+            return
+        kind = "compile" if msg.startswith("Compiling") else "trace"
+        self.events.append(CompilationEvent(m.group(1), msg, kind))
+
+
+class CompilationMonitor:
+    """Context manager that records every XLA compilation inside the block.
+
+    Enables ``jax_log_compiles`` on entry and restores the previous value
+    on exit; nesting is safe (each instance restores what it saw)."""
+
+    def __init__(self):
+        self.events: List[CompilationEvent] = []
+        self._handler = _Capture(self.events)
+        self._prev: Optional[bool] = None
+        self._levels = {}
+
+    def __enter__(self):
+        import jax
+
+        self._prev = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        for name in _COMPILE_LOGGERS:
+            lg = logging.getLogger(name)
+            self._levels[name] = lg.level
+            # The compile line is logged at WARNING when jax_log_compiles
+            # is on; keep the logger open at least that far.
+            if lg.level > logging.WARNING:
+                lg.setLevel(logging.WARNING)
+            lg.addHandler(self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        import jax
+
+        for name in _COMPILE_LOGGERS:
+            lg = logging.getLogger(name)
+            lg.removeHandler(self._handler)
+            lg.setLevel(self._levels[name])
+        jax.config.update("jax_log_compiles", False if self._prev is None else self._prev)
+        return False
+
+    # ------------------------------------------------------------------
+    def count(
+        self, name_filter: Optional[str] = None, kind: str = "trace"
+    ) -> int:
+        """Number of events of ``kind`` ("trace" — the stable
+        executable-set metric — or "compile"), optionally only those whose
+        jitted-function name contains ``name_filter``."""
+        return sum(
+            1
+            for e in self.events
+            if e.kind == kind and (name_filter is None or name_filter in e.name)
+        )
+
+    def names(self, kind: str = "trace") -> list:
+        return [e.name for e in self.events if e.kind == kind]
+
+    def assert_bounded(
+        self, limit: int, name_filter: Optional[str] = None, kind: str = "trace"
+    ):
+        """Assert at most ``limit`` events of ``kind`` happened; on
+        failure the message lists every event line so the offending shape
+        is visible in the test output."""
+        n = self.count(name_filter, kind=kind)
+        if n > limit:
+            lines = "\n  ".join(e.detail for e in self.events if e.kind == kind)
+            raise AssertionError(
+                f"{kind} count {n} exceeds bound {limit}"
+                + (f" (filter: {name_filter!r})" if name_filter else "")
+                + f"; events:\n  {lines}"
+            )

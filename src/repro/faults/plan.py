@@ -169,17 +169,43 @@ class FaultPlan:
             except json.JSONDecodeError:
                 with open(doc) as f:
                     doc = json.load(f)
-        specs = [
-            FaultSpec(
-                site=d["site"],
-                kind=d["kind"],
-                at=tuple(d.get("at", ())),
-                window=tuple(d["window"]) if d.get("window") else None,
-                p=float(d.get("p", 0.0)),
-                max_fires=d.get("max_fires"),
+        if not isinstance(doc, dict):
+            raise ValueError(f"fault plan must be a JSON object, got {type(doc).__name__}")
+        unknown_top = set(doc) - {"seed", "faults"}
+        if unknown_top:
+            raise ValueError(
+                f"unknown fault-plan key(s) {sorted(unknown_top)}; "
+                'expected {"seed", "faults"}'
             )
-            for d in doc.get("faults", [])
-        ]
+        specs = []
+        for i, d in enumerate(doc.get("faults", [])):
+            if not isinstance(d, dict):
+                raise ValueError(f"faults[{i}]: expected an object, got {type(d).__name__}")
+            unknown = set(d) - {"site", "kind", "at", "window", "p", "max_fires"}
+            if unknown:
+                raise ValueError(
+                    f"faults[{i}]: unknown key(s) {sorted(unknown)}; expected "
+                    '{"site", "kind", "at", "window", "p", "max_fires"}'
+                )
+            missing = {"site", "kind"} - set(d)
+            if missing:
+                raise ValueError(f"faults[{i}]: missing required key(s) {sorted(missing)}")
+            try:
+                # FaultSpec validates site against SITES and kind against
+                # _KINDS — the same registry analysis/faultsites.py audits
+                # for production parity, so a name this accepts is
+                # guaranteed to have a live fault_point arm.
+                spec = FaultSpec(
+                    site=d["site"],
+                    kind=d["kind"],
+                    at=tuple(d.get("at", ())),
+                    window=tuple(d["window"]) if d.get("window") else None,
+                    p=float(d.get("p", 0.0)),
+                    max_fires=d.get("max_fires"),
+                )
+            except ValueError as e:
+                raise ValueError(f"faults[{i}]: {e}") from None
+            specs.append(spec)
         return cls(specs, seed=int(doc.get("seed", 0)))
 
     def check(self, site: str) -> str:

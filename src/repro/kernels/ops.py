@@ -30,16 +30,44 @@ __all__ = [
     "quantease_outlier_iteration",
     "quantease_outlier_iteration_t",
     "fused_iteration_tq",
+    "fused_iteration_bytes",
     "outlier_iteration_tq",
+    "outlier_iteration_bytes",
+    "block_sweep_tq",
+    "block_sweep_bytes",
     "dequant_matmul",
+    "dequant_matmul_fits_vmem",
+    "dequant_matmul_bytes",
     "paged_attention",
     "paged_attention_fits_vmem",
     "on_tpu",
 ]
 
+_VMEM_BUDGET = 12 * 1024 * 1024  # of ~16 MB VMEM, leaving double-buffer headroom
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def block_sweep_bytes(bsz: int, tq: int) -> int:
+    """VMEM working set of one block-sweep program: six (bsz × tq) fp32
+    tiles (β₀, Ŵ_old, scale, zero in; Ŵ_new, Δ out) plus the (bsz × bsz)
+    Σ̃ block shared by every program."""
+    return 6 * bsz * tq * 4 + bsz * bsz * 4
+
+
+def block_sweep_tq(q: int, bsz: int, tq: int = 256):
+    """Pick a q-tile for the intra-block sweep kernel, or None if even the
+    minimum tile cannot fit VMEM (only conceivable at absurd block sizes —
+    the sweep's working set is tiny — but the dispatcher gates anyway so
+    every pallas_call sits behind an explicit fit decision)."""
+    tq = min(tq, max(q, 1))
+    while tq > 128 and block_sweep_bytes(bsz, tq) > _VMEM_BUDGET:
+        tq //= 2
+    if block_sweep_bytes(bsz, tq) > _VMEM_BUDGET:
+        return None
+    return tq
 
 
 def quantease_block_sweep(
@@ -52,10 +80,20 @@ def quantease_block_sweep(
     single kernel launch per column block."""
     if interpret is None:
         interpret = not on_tpu()
+    q, bsz = beta0.shape[-2], beta0.shape[-1]
+    tq = block_sweep_tq(q, bsz)
+    if tq is None:
+        ref_fn = functools.partial(
+            ref.quantease_block_sweep_ref, n_levels=n_levels, quantize=quantize
+        )
+        if beta0.ndim == 3:
+            return jax.vmap(ref_fn)(beta0, sig_blk, w_old_blk, scale_blk, zero_blk)
+        return ref_fn(beta0, sig_blk, w_old_blk, scale_blk, zero_blk)
     kernel = functools.partial(
         quantease_block_sweep_pallas,
         n_levels=n_levels,
         quantize=quantize,
+        tq=tq,
         interpret=interpret,
     )
     if beta0.ndim == 3:
@@ -63,21 +101,28 @@ def quantease_block_sweep(
     return kernel(beta0, sig_blk, w_old_blk, scale_blk, zero_blk)
 
 
+def fused_iteration_bytes(
+    p_pad: int, bsz: int, matmul_dtype: str, tq: int
+) -> int:
+    """VMEM working set of one fused-iteration program at tile ``tq``: the
+    (p_pad × tq) fp32 Δ accumulator scratch, the (bsz × p_pad) Σ̃ᵀ
+    correction slab (bf16 halves it), and ~7 (bsz × tq) fp32 tiles."""
+    sig_bytes = bsz * p_pad * (2 if matmul_dtype == "bfloat16" else 4)
+    return p_pad * tq * 4 + sig_bytes + 7 * bsz * tq * 4
+
+
 def fused_iteration_tq(p_pad: int, bsz: int, matmul_dtype: str = "float32", tq: int = 256):
     """Pick a q-tile for the fused-iteration kernel, or None if it cannot
     fit VMEM.
 
-    Resident per program: the (p_pad × tq) fp32 Δ accumulator scratch, the
-    (bsz × p_pad) Σ̃ᵀ correction slab (bf16 halves it), and ~7 (bsz × tq)
-    fp32 tiles.  Only the Δ term shrinks with ``tq`` — the Σ̃ slab is fixed
-    by ``bsz``, so very wide layers don't fit at any tq and the caller must
-    fall back to the per-block XLA schedule (same iterates).
+    Only the Δ term of :func:`fused_iteration_bytes` shrinks with ``tq`` —
+    the Σ̃ slab is fixed by ``bsz``, so very wide layers don't fit at any
+    tq and the caller must fall back to the per-block XLA schedule (same
+    iterates).
     """
-    sig_bytes = bsz * p_pad * (2 if matmul_dtype == "bfloat16" else 4)
-    budget = 12 * 1024 * 1024  # of ~16 MB VMEM, leaving double-buffer headroom
-    while tq > 128 and p_pad * tq * 4 + sig_bytes + 7 * bsz * tq * 4 > budget:
+    while tq > 128 and fused_iteration_bytes(p_pad, bsz, matmul_dtype, tq) > _VMEM_BUDGET:
         tq //= 2
-    if p_pad * tq * 4 + sig_bytes + 7 * bsz * tq * 4 > budget:
+    if fused_iteration_bytes(p_pad, bsz, matmul_dtype, tq) > _VMEM_BUDGET:
         return None
     return tq
 
@@ -115,6 +160,11 @@ def quantease_fused_iteration(
                 f"fused iteration does not fit VMEM (p_pad={p_pad}, bsz={bsz}); "
                 "use the XLA engine for this layer"
             )
+    elif fused_iteration_bytes(p_pad, bsz, matmul_dtype, tq) > _VMEM_BUDGET:
+        raise ValueError(
+            f"explicit tq={tq} overflows VMEM (p_pad={p_pad}, bsz={bsz}); "
+            "pass tq=None to let fused_iteration_tq choose"
+        )
     kernel = functools.partial(
         quantease_fused_iteration_pallas,
         n_levels=n_levels,
@@ -131,23 +181,30 @@ def quantease_fused_iteration(
     return kernel(base, sig_tilde, w_hat, scale_pc, zero_pc, delta_prev)
 
 
+def outlier_iteration_bytes(
+    p_pad: int, bsz: int, matmul_dtype: str, tq: int
+) -> int:
+    """VMEM working set of one outlier-iteration program: beyond the base
+    kernel's set, a second (p_pad × tq) fp32 slab (the R accumulator
+    output) and a second (p_pad × bsz) Σ̃ slab (the suffix column block;
+    bf16 halves both Σ̃ slabs)."""
+    sig_bytes = 2 * bsz * p_pad * (2 if matmul_dtype == "bfloat16" else 4)
+    return 2 * p_pad * tq * 4 + sig_bytes + 8 * bsz * tq * 4
+
+
 def outlier_iteration_tq(
     p_pad: int, bsz: int, matmul_dtype: str = "float32", tq: int = 256
 ):
     """Pick a q-tile for the outlier-aware fused-iteration kernel, or None
     if it cannot fit VMEM.
 
-    Resident per program, beyond the base kernel's set: a second
-    (p_pad × tq) fp32 slab (the R accumulator output) and a second
-    (p_pad × bsz) Σ̃ slab (the suffix column block; bf16 halves both Σ̃
-    slabs).  As with :func:`fused_iteration_tq`, only the p_pad×tq terms
-    shrink with ``tq`` — too-wide layers must take the XLA schedule.
+    As with :func:`fused_iteration_tq`, only the p_pad×tq terms of
+    :func:`outlier_iteration_bytes` shrink with ``tq`` — too-wide layers
+    must take the XLA schedule.
     """
-    sig_bytes = 2 * bsz * p_pad * (2 if matmul_dtype == "bfloat16" else 4)
-    budget = 12 * 1024 * 1024
-    while tq > 128 and 2 * p_pad * tq * 4 + sig_bytes + 8 * bsz * tq * 4 > budget:
+    while tq > 128 and outlier_iteration_bytes(p_pad, bsz, matmul_dtype, tq) > _VMEM_BUDGET:
         tq //= 2
-    if 2 * p_pad * tq * 4 + sig_bytes + 8 * bsz * tq * 4 > budget:
+    if outlier_iteration_bytes(p_pad, bsz, matmul_dtype, tq) > _VMEM_BUDGET:
         return None
     return tq
 
@@ -186,6 +243,11 @@ def quantease_outlier_iteration(
                 f"outlier fused iteration does not fit VMEM "
                 f"(p_pad={p_pad}, bsz={bsz}); use the XLA engine for this layer"
             )
+    elif outlier_iteration_bytes(p_pad, bsz, matmul_dtype, tq) > _VMEM_BUDGET:
+        raise ValueError(
+            f"explicit tq={tq} overflows VMEM (p_pad={p_pad}, bsz={bsz}); "
+            "pass tq=None to let outlier_iteration_tq choose"
+        )
     kernel = functools.partial(
         quantease_outlier_iteration_pallas,
         n_levels=n_levels,
@@ -227,6 +289,12 @@ def quantease_outlier_iteration_t(
     r_t)``, all (p_pad, qp)."""
     if interpret is None:
         interpret = not on_tpu()
+    p_pad = base_t.shape[-2]
+    if outlier_iteration_bytes(p_pad, bsz, matmul_dtype, tq) > _VMEM_BUDGET:
+        raise ValueError(
+            f"tq={tq} overflows VMEM for the transposed outlier iteration "
+            f"(p_pad={p_pad}, bsz={bsz}); size it with outlier_iteration_tq"
+        )
     return quantease_outlier_iteration_t_pallas(
         base_t,
         sig_corr=sig_corr,
@@ -344,6 +412,30 @@ def _unpacked(codes, packed4, pack_layout="linear", pack_tile=None):
     return unpack_codes(codes, 4, p)
 
 
+def dequant_matmul_bytes(
+    m: int, q: int, p: int, *, tm: int = 128, tq: int = 128, tk: int = 512
+) -> int:
+    """VMEM working set of one serving-GEMM program: the (tm × tk) fp32
+    activation tile, the (tq × tk) codes tile (1 B/code stored — packed4
+    halves HBM, not the unpacked VMEM tile), the scale/zero slabs expanded
+    in-VMEM to (tq × tk) fp32 worst case, and the (tm × tq) fp32
+    accumulator."""
+    tm, tq, tk = min(tm, m), min(tq, q), min(tk, p)
+    return tm * tk * 4 + tq * tk + 2 * tq * tk * 4 + tm * tq * 4
+
+
+def dequant_matmul_fits_vmem(
+    m: int, q: int, p: int, *, tm: int = 128, tq: int = 128, tk: int = 512
+) -> bool:
+    """VMEM fit gate for the serving GEMM.  The fixed 128/128/512 tiling
+    keeps the working set near 0.8 MiB regardless of problem size, so this
+    effectively always passes — it exists so the dispatch decision is an
+    explicit, formula-checked gate (analysis/vmem.py re-evaluates it
+    against every shipped config shape) rather than an implicit property
+    of the tile constants."""
+    return dequant_matmul_bytes(m, q, p, tm=tm, tq=tq, tk=tk) <= _VMEM_BUDGET
+
+
 def dequant_matmul(
     x, codes, scale, zero, *, packed4=False, out_dtype=jnp.bfloat16,
     interpret=None, group_size=None, pack_layout="linear", pack_tile=None,
@@ -392,6 +484,8 @@ def dequant_matmul(
         if not on_tpu():
             return reference()
         interpret = False
+    if not dequant_matmul_fits_vmem(x.shape[0], codes.shape[0], p):
+        return reference()
     kw = dict(packed4=packed4, out_dtype=out_dtype, interpret=interpret)
     if tiled:
         if p % pack_tile:  # prepack left the ragged tail linear — ref only

@@ -1,0 +1,19 @@
+"""Known-bad donation fixture: reads after donate, discarded result."""
+
+import jax
+
+
+class Engine:
+    def __init__(self, step_fn):
+        self._decode = jax.jit(
+            lambda params, tokens, cache: step_fn(params, tokens, cache),
+            donate_argnums=(2,),
+        )
+
+    def step_use_after_donate(self, params, tokens):
+        out = self._decode(params, tokens, self.cache)
+        return out, self.cache.mean()  # BAD: cache was donated above
+
+    def step_discarded(self, params, tokens):
+        self._decode(params, tokens, self.cache)  # BAD: result discarded
+        return None

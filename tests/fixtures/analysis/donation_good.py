@@ -1,0 +1,22 @@
+"""Known-good donation fixture: the reassign-from-result idiom."""
+
+import jax
+
+
+class Engine:
+    def __init__(self, step_fn):
+        self._decode = jax.jit(
+            lambda params, tokens, cache: step_fn(params, tokens, cache),
+            donate_argnums=(2,),
+        )
+
+    def step(self, params, tokens):
+        # Same-statement rebind: the attribute tracks the donated-output
+        # buffer, so later reads are of the fresh buffer.
+        tokens, self.cache = self._decode(params, tokens, self.cache)
+        return tokens, self.cache.shape
+
+    def step_rebind_then_read(self, params, tokens):
+        out = self._decode(params, tokens, self.cache)
+        self.cache = out[1]  # rebind kills the taint
+        return self.cache.mean()

@@ -1,0 +1,17 @@
+"""Known-bad dtype-flow fixture: bf16 accumulation, raw-code arithmetic."""
+
+import jax.numpy as jnp
+
+
+def bf16_accum(a, b, matmul_dtype=jnp.bfloat16):
+    # BAD: bf16 operands with no preferred_element_type — the accumulator
+    # inherits bf16.
+    return jnp.dot(a.astype(matmul_dtype), b.astype(matmul_dtype))
+
+
+def code_arith(codes, scale):
+    return codes * scale  # BAD: arithmetic on packed codes before dequant
+
+
+def code_reduce(codes):
+    return jnp.sum(codes)  # BAD: reduction over raw code indices

@@ -1,0 +1,30 @@
+"""Known-good dtype-flow fixture: fp32 accumulation, dequant idioms."""
+
+import jax.numpy as jnp
+
+
+def bf16_mm_fp32_accum(a, b, matmul_dtype=jnp.bfloat16):
+    return jnp.dot(
+        a.astype(matmul_dtype),
+        b.astype(matmul_dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dequant(codes, scale, zero):
+    # The blessed idiom: cast before arithmetic.
+    return (codes.astype(jnp.float32) - zero) * scale
+
+
+def unpack(codes):
+    # Bitwise unpacking is exempt.
+    lo = codes & 0xF
+    hi = codes >> 4
+    return lo, hi
+
+
+def quantize(beta, sc, zc, n_levels):
+    # `codes` here is a *float* tensor (round/clip output) that merely
+    # shares the name — the float-domain exemption must apply.
+    codes = jnp.clip(jnp.round(beta / sc) + zc, 0, n_levels - 1)
+    return (codes - zc) * sc

@@ -1,0 +1,8 @@
+SITES = (
+    "engine.step",
+    "ghost.site",  # BAD: registered but never instrumented
+)
+
+
+def fault_point(site):
+    return "ok"

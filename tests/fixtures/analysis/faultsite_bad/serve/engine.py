@@ -1,0 +1,7 @@
+from ..faults.plan import fault_point
+
+
+def step():
+    fault_point("engine.step")
+    fault_point("engine.stpe")  # BAD: typo — not in SITES
+    return True

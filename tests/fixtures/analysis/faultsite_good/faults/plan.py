@@ -1,0 +1,8 @@
+SITES = (
+    "engine.step",
+    "pool.alloc",
+)
+
+
+def fault_point(site):
+    return "ok"

@@ -1,0 +1,12 @@
+from ..faults.plan import fault_point
+
+
+def step():
+    fault_point("engine.step")
+    return True
+
+
+def alloc():
+    if fault_point("pool.alloc") == "deny":
+        return None
+    return 1

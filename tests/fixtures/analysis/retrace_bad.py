@@ -1,0 +1,31 @@
+"""Known-bad retrace fixture: wrapper churn and trace-constant capture."""
+
+import jax
+import jax.numpy as jnp
+
+step = jax.jit(lambda x, n: x * n, static_argnums=(1,))
+
+
+def jit_in_loop(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(lambda a: a + 1)  # BAD: fresh wrapper per iteration
+        out.append(f(x))
+    return out
+
+
+def jit_per_call(x):
+    return jax.jit(lambda a: a * 2)(x)  # BAD: cache discarded per call
+
+
+def closure_capture(xs):
+    out = []
+    for i, x in enumerate(xs):
+        # BAD: jitted lambda bakes the loop variable in as a constant.
+        g = jax.jit(lambda a: a + i)
+        out.append(g(x))
+    return out
+
+
+def nonhashable_static(x):
+    return step(x, [1, 2, 3])  # BAD: list in a static position

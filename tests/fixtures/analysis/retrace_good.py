@@ -1,0 +1,32 @@
+"""Known-good retrace fixture: every blessed wrapper-caching pattern."""
+
+import functools
+
+import jax
+
+module_step = jax.jit(lambda x: x + 1)  # module level: built once
+
+
+class Engine:
+    def __init__(self, fn):
+        # Bound once per object construction.
+        self._decode = jax.jit(lambda p, t, c: fn(p, t, c), donate_argnums=(2,))
+
+    def run(self, p, t):
+        t, self.cache = self._decode(p, t, self.cache)
+        return t
+
+
+@functools.lru_cache(maxsize=None)
+def cached_factory(chunk):
+    # lru_cache'd factory: one wrapper per chunk value, reused forever.
+    return jax.jit(lambda x: x.reshape(chunk, -1))
+
+
+def returning_factory(plan):
+    # Returns the wrapper — the caller binds and reuses it.
+    return jax.jit(functools.partial(_score, plan))
+
+
+def _score(plan, x):
+    return x * plan

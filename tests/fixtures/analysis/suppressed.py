@@ -1,0 +1,13 @@
+"""Suppression fixture: one waived finding, one rationale-less waiver."""
+
+import jax
+
+
+def deliberate_per_call(x):
+    # repro: allow[retrace-jit-per-call] -- one-shot AOT probe, wrapper reuse is irrelevant here
+    return jax.jit(lambda a: a * 2)(x)
+
+
+def bare_suppression(x):
+    # repro: allow[retrace-jit-per-call]
+    return jax.jit(lambda a: a * 3)(x)

@@ -1,0 +1,16 @@
+"""Known-bad VMEM fixture: pallas_call reachable with no fit gate."""
+
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def ungated_kernel(x):
+    # BAD: no *_tq / *_fits_vmem gate anywhere on the call path.
+    return pl.pallas_call(_body, out_shape=x)(x)
+
+
+def dispatcher(x):
+    return ungated_kernel(x)

@@ -1,0 +1,220 @@
+"""The static-analysis framework itself: rules, suppressions, CLI, and the
+repo-cleanliness + fault-plan-validation contracts (DESIGN.md
+§Static-analysis)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import run_analysis
+from repro.faults import FaultPlan
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "analysis")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+def _run(*names, **kw):
+    kw.setdefault("runtime_checks", False)
+    paths = [os.path.join(FIXTURES, n) for n in names]
+    return run_analysis(paths, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Rules on fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_donation_bad_fixture():
+    findings, _ = _run("donation_bad.py")
+    assert "donation-use-after-donate" in _rules(findings)
+    assert "donation-unbound-result" in _rules(findings)
+    # Both hazards are inside the class; check line attribution is sane.
+    lines = {f.rule: f.line for f in findings}
+    assert lines["donation-use-after-donate"] > lines["donation-unbound-result"] - 20
+
+
+def test_donation_good_fixture():
+    findings, _ = _run("donation_good.py")
+    assert not findings
+
+
+def test_retrace_bad_fixture():
+    findings, _ = _run("retrace_bad.py")
+    got = _rules(findings)
+    assert "retrace-jit-in-loop" in got
+    assert "retrace-jit-per-call" in got
+    assert "retrace-closure-capture" in got
+    assert "retrace-nonhashable-static" in got
+
+
+def test_retrace_good_fixture():
+    findings, _ = _run("retrace_good.py")
+    assert not findings
+
+
+def test_vmem_bad_fixture():
+    findings, _ = _run("vmem_bad")
+    assert _rules(findings) == {"vmem-ungated-pallas-call"}
+
+
+def test_vmem_good_fixture():
+    findings, _ = _run("vmem_good")
+    assert not findings
+
+
+def test_dtype_bad_fixture():
+    findings, _ = _run("dtype_bad.py")
+    got = _rules(findings)
+    assert "dtype-bf16-accum" in got
+    assert "dtype-int-code-arith" in got
+    # Both the binop and the reduction form fire.
+    assert sum(f.rule == "dtype-int-code-arith" for f in findings) == 2
+
+
+def test_dtype_good_fixture():
+    findings, _ = _run("dtype_good.py")
+    assert not findings
+
+
+def test_faultsite_bad_fixture():
+    findings, _ = _run("faultsite_bad")
+    got = _rules(findings)
+    assert "fault-site-unregistered" in got
+    assert "fault-site-unwired" in got
+    unwired = [f for f in findings if f.rule == "fault-site-unwired"]
+    assert "ghost.site" in unwired[0].message
+
+
+def test_faultsite_good_fixture():
+    findings, _ = _run("faultsite_good")
+    assert not findings
+
+
+def test_suppression_waives_with_rationale_only():
+    findings, suppressed = _run("suppressed.py")
+    # The rationaled waiver is honored; the bare one surfaces as
+    # bad-suppression (and its underlying finding stays waived).
+    assert _rules(findings) == {"bad-suppression"}
+    assert len(suppressed) == 2
+    assert all(s.rule == "retrace-jit-per-call" for s in suppressed)
+
+
+# ---------------------------------------------------------------------------
+# Repo cleanliness (the S1 negative regression: serve/ donation + retrace)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_engine_donation_and_retrace_clean():
+    """serve/engine.py + serve/spec.py carry the pool-donation pattern the
+    donation pass was built for; pin that they analyze clean so any future
+    use-after-donate or per-call re-jit is a test failure, not a review
+    catch."""
+    findings, suppressed = run_analysis(
+        [os.path.join(SRC, "serve", "engine.py"), os.path.join(SRC, "serve", "spec.py")],
+        runtime_checks=False,
+    )
+    assert not findings, [str(f.__dict__) for f in findings]
+    assert not suppressed  # clean outright, not waived
+
+
+def test_whole_repo_analyzes_clean():
+    """The headline contract: `python -m repro.analysis` exits 0 — every
+    real finding is fixed or carries a written rationale."""
+    findings, _ = run_analysis([SRC], runtime_checks=False)
+    assert not findings, [str(f.__dict__) for f in findings]
+
+
+def test_vmem_gate_formulas_hold_for_all_configs():
+    """Runtime half of the VMEM pass: every fit gate's byte formula is
+    self-consistent across every shipped arch shape (approve ⇒ fits,
+    decline ⇒ minimum tile overflows)."""
+    from repro.analysis.vmem import check_gate_formulas
+
+    assert check_gate_formulas() == []
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(SRC, os.pardir))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env,
+    )
+
+
+def test_cli_exit_nonzero_on_each_bad_fixture():
+    for bad in ("donation_bad.py", "retrace_bad.py", "vmem_bad",
+                "dtype_bad.py", "faultsite_bad"):
+        r = _cli(os.path.join(FIXTURES, bad), "--no-runtime")
+        assert r.returncode == 1, (bad, r.stdout, r.stderr)
+
+
+def test_cli_exit_zero_on_good_fixtures_and_json():
+    goods = [os.path.join(FIXTURES, g) for g in
+             ("donation_good.py", "retrace_good.py", "vmem_good",
+              "dtype_good.py", "faultsite_good")]
+    r = _cli(*goods, "--no-runtime", "--format", "json")
+    assert r.returncode == 0, (r.stdout, r.stderr)
+    doc = json.loads(r.stdout)
+    assert doc["ok"] and doc["findings"] == []
+
+
+def test_cli_fix_suggestions_and_usage_error():
+    r = _cli(os.path.join(FIXTURES, "retrace_bad.py"), "--no-runtime",
+             "--fix-suggestions")
+    assert r.returncode == 1
+    assert "fix:" in r.stdout
+    assert _cli("no/such/path.py").returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan.from_spec hardening (same registry as the parity pass)
+# ---------------------------------------------------------------------------
+
+
+def test_from_spec_rejects_unknown_site_with_pointed_error():
+    with pytest.raises(ValueError) as e:
+        FaultPlan.from_spec(
+            {"faults": [{"site": "engine.stpe", "kind": "transient"}]}
+        )
+    msg = str(e.value)
+    assert "faults[0]" in msg and "engine.stpe" in msg and "engine.step" in msg
+
+
+def test_from_spec_rejects_unknown_keys_and_missing_required():
+    with pytest.raises(ValueError, match=r"faults\[0\].*unknown key.*'stie'"):
+        FaultPlan.from_spec({"faults": [{"stie": "engine.step", "kind": "deny",
+                                         "site": "engine.step"}]})
+    with pytest.raises(ValueError, match=r"faults\[1\].*missing required.*'kind'"):
+        FaultPlan.from_spec({"faults": [
+            {"site": "engine.step", "kind": "deny"},
+            {"site": "engine.step"},
+        ]})
+    with pytest.raises(ValueError, match="unknown fault-plan key"):
+        FaultPlan.from_spec({"seed": 1, "fautls": []})
+    with pytest.raises(ValueError, match="JSON object"):
+        FaultPlan.from_spec([{"site": "engine.step", "kind": "deny"}])
+
+
+def test_from_spec_still_accepts_valid_plans():
+    plan = FaultPlan.from_spec(
+        {"seed": 7, "faults": [
+            {"site": "engine.step", "kind": "transient", "at": [1]},
+            {"site": "pool.alloc", "kind": "deny", "window": [0, 2],
+             "p": 0.5, "max_fires": 1},
+        ]}
+    )
+    assert len(plan.specs) == 2 and plan.seed == 7

@@ -1,0 +1,124 @@
+"""Retrace-count regression: the paged engine's executable set is pinned.
+
+The serving SLO assumes the step loop reaches a compile fixed point: after
+warm-up every prefill chunk / decode step / spec round hits the jit cache.
+Accidental shape polymorphism (a stray Python int in a traced position, a
+bucket boundary that drifts, a weak-type flip) shows up here as a count
+diff long before it shows up as a latency regression.
+
+Method (see repro/analysis/sanitize.py): run the full trace once on a
+warm-up engine — this compiles the module-level helper ops (jnp.ones,
+gather/scatter fragments, …) into JAX's global cache — then run the
+identical trace on a *fresh identical* engine under the monitor.  The
+fresh engine re-jits its own wrappers (new lambda objects ⇒ new cache
+keys), while the helpers stay cached, so the monitored count is exactly
+the engine's own executable set.  The numbers pinned below are therefore
+a contract: "the paged engine compiles N distinct executables for this
+workload".  If a change legitimately alters the engine's jit surface
+(new wrapper, different bucketing), update the pin with the new count and
+say why in the commit.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import CompilationMonitor
+from repro.configs import get_config
+from repro.models import init_params, make_plan
+from repro.serve.engine import PagedServingEngine, Request
+from repro.serve.spec import SpecConfig, truncate_draft
+from tests.conftest import reduce_cfg
+
+# One trace per (wrapper, shape-signature).  The plain engine's whole
+# workload — chunked prefill, decode, preemption + resume — stabilizes at
+# TWO signatures: every prefill chunk is padded to prefill_chunk and every
+# decode batch to max_batch, so one chunk executable + one decode
+# executable serve the entire trace (page-copy never fires with the
+# prefix cache off).  Speculation adds the draft proposer and the verify
+# step at its two trailing widths (γ+1 mid-stream, 1 at the tail).
+PLAIN_ENGINE_EXECUTABLES = 2
+SPEC_ENGINE_EXECUTABLES = 5
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = reduce_cfg(
+        get_config("stablelm_12b"), d_model=96, head_dim=24, d_ff=192, n_periods=2
+    )
+    plan = make_plan(cfg, 1)
+    params = init_params(plan, jax.random.PRNGKey(0))
+    draft_plan, draft_params = truncate_draft(plan, params, 1)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 250, n).astype(np.int32) for n in (6, 21, 47, 11, 33)]
+    return plan, params, draft_plan, draft_params, prompts
+
+
+def _drive(eng, prompts, max_new=7):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=np.asarray(p), max_new_tokens=max_new))
+    return [r.output for r in sorted(eng.run(), key=lambda r: r.rid)]
+
+
+def _plain_engine(plan, params):
+    # n_pages=13 with this workload forces ≥1 preemption + resume
+    # (tests/test_paged_serve.py pins that behaviour).
+    return PagedServingEngine(
+        plan, params, max_batch=3, max_seq=128, page_size=8,
+        prefill_chunk=16, n_pages=13, prefix_cache=False,
+    )
+
+
+def _spec_engine(plan, params, draft_plan, draft_params):
+    spec = SpecConfig(draft_plan=draft_plan, draft_params=draft_params, gamma=3)
+    return PagedServingEngine(
+        plan, params, max_batch=2, max_seq=128, page_size=8,
+        prefill_chunk=16, n_pages=65, spec=spec,
+    )
+
+
+def test_plain_engine_executable_count_pinned(served):
+    plan, params, _, _, prompts = served
+    warm = _plain_engine(plan, params)
+    out_warm = _drive(warm, prompts)
+    assert warm.n_preemptions >= 1  # the trace really covers resume
+
+    fresh = _plain_engine(plan, params)
+    with CompilationMonitor() as mon:
+        out = _drive(fresh, prompts)
+    assert out == out_warm  # fixed point is also a correctness fixed point
+
+    n = mon.count()
+    assert n == PLAIN_ENGINE_EXECUTABLES, (
+        f"paged engine traced {n} executables "
+        f"(expected {PLAIN_ENGINE_EXECUTABLES}):\n  "
+        + "\n  ".join(e.detail.splitlines()[0] for e in mon.events)
+    )
+
+    # Stability: more work with the same shape vocabulary compiles nothing.
+    with CompilationMonitor() as mon2:
+        _drive(fresh, [prompts[0], prompts[3]])
+    mon2.assert_bounded(0)
+
+
+def test_spec_engine_executable_count_pinned(served):
+    plan, params, dplan, dparams, prompts = served
+    warm = _spec_engine(plan, params, dplan, dparams)
+    out_warm = _drive(warm, prompts[:4])
+    assert warm.n_spec_rounds > 0  # speculation actually ran
+
+    fresh = _spec_engine(plan, params, dplan, dparams)
+    with CompilationMonitor() as mon:
+        out = _drive(fresh, prompts[:4])
+    assert out == out_warm
+
+    n = mon.count()
+    assert n == SPEC_ENGINE_EXECUTABLES, (
+        f"spec engine traced {n} executables "
+        f"(expected {SPEC_ENGINE_EXECUTABLES}):\n  "
+        + "\n  ".join(e.detail.splitlines()[0] for e in mon.events)
+    )
+
+    with CompilationMonitor() as mon2:
+        _drive(fresh, [prompts[0], prompts[3]])
+    mon2.assert_bounded(0)
